@@ -1,0 +1,88 @@
+"""Shared benchmark machinery: competitor registry + timing."""
+from __future__ import annotations
+
+import bz2
+import lzma
+import time
+import zlib
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import Compressor, Stream, compress, decompress
+from repro.core.engine import CompressionCtx
+from repro.core.graph import Plan
+
+
+@dataclass
+class Result:
+    name: str
+    raw_bytes: int
+    compressed_bytes: int
+    c_seconds: float
+    d_seconds: float
+
+    @property
+    def ratio(self) -> float:
+        return self.raw_bytes / max(self.compressed_bytes, 1)
+
+    @property
+    def c_mibs(self) -> float:
+        return self.raw_bytes / (1 << 20) / max(self.c_seconds, 1e-9)
+
+    @property
+    def d_mibs(self) -> float:
+        return self.raw_bytes / (1 << 20) / max(self.d_seconds, 1e-9)
+
+
+def time_codec(
+    name: str,
+    data: bytes,
+    enc: Callable[[bytes], bytes],
+    dec: Callable[[bytes], bytes],
+    *,
+    check: bool = True,
+) -> Result:
+    t0 = time.perf_counter()
+    blob = enc(data)
+    t1 = time.perf_counter()
+    back = dec(blob)
+    t2 = time.perf_counter()
+    if check and back != data:
+        raise AssertionError(f"{name}: roundtrip mismatch")
+    return Result(name, len(data), len(blob), t1 - t0, t2 - t1)
+
+
+# competitors available offline; cmix/NNCP are not runnable in this container
+# (paper Table IV lists them at ~0.001-0.003 MiB/s; noted in output headers).
+COMPETITORS: Dict[str, Tuple[Callable, Callable]] = {
+    "zlib-1": (lambda d: zlib.compress(d, 1), zlib.decompress),
+    "zlib-6": (lambda d: zlib.compress(d, 6), zlib.decompress),
+    "zlib-9": (lambda d: zlib.compress(d, 9), zlib.decompress),
+    "xz-6": (lambda d: lzma.compress(d, preset=6), lzma.decompress),
+    "xz-9": (lambda d: lzma.compress(d, preset=9), lzma.decompress),
+    "bz2-9": (lambda d: bz2.compress(d, 9), bz2.decompress),
+}
+
+
+def time_openzl_plan(
+    name: str, plan: Plan, streams: List[Stream], *, level: int = 5
+) -> Result:
+    raw = sum(s.nbytes for s in streams)
+    t0 = time.perf_counter()
+    frame = compress(plan, list(streams), ctx=CompressionCtx(level=level))
+    t1 = time.perf_counter()
+    outs = decompress(frame)
+    t2 = time.perf_counter()
+    for a, b in zip(streams, outs):
+        if a.content_bytes() != b.content_bytes():
+            raise AssertionError(f"{name}: OpenZL roundtrip mismatch")
+    return Result(name, raw, len(frame), t1 - t0, t2 - t1)
+
+
+def csv_row(bench: str, res: Result) -> str:
+    us = res.c_seconds * 1e6
+    derived = (
+        f"ratio={res.ratio:.3f};c_mibs={res.c_mibs:.2f};d_mibs={res.d_mibs:.2f};"
+        f"size={res.compressed_bytes}"
+    )
+    return f"{bench}/{res.name},{us:.1f},{derived}"

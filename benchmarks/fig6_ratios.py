@@ -1,0 +1,54 @@
+"""Paper Fig. 6: best compression ratios of competitor systems vs trained
+OpenZL compressors, across the Table-II dataset families.
+
+cmix/NNCP are not runnable offline (paper: ~0.001 MiB/s); xz -9 / bz2 -9
+represent the ratio-focused end, zlib the LZ production end."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .common import COMPETITORS, Result, csv_row, time_codec, time_openzl_plan
+from .datasets import streams_to_bytes
+from .trained import get_trained
+
+
+def run(print_rows: bool = True) -> Dict[str, List[Result]]:
+    trained = get_trained()
+    all_results: Dict[str, List[Result]] = {}
+    for name, entry in trained.items():
+        streams = entry["streams"]
+        blob = streams_to_bytes(streams)
+        rows = []
+        for comp in ("zlib-6", "zlib-9", "xz-9", "bz2-9"):
+            enc, dec = COMPETITORS[comp]
+            rows.append(time_codec(comp, blob, enc, dec))
+        # best-ratio trained point (paper Fig.6 is the ratio-focused config)
+        plan, _, _ = min(entry["plans"], key=lambda t: t[1])
+        rows.append(time_openzl_plan("openzl-trained", plan, streams))
+        all_results[name] = rows
+        if print_rows:
+            for r in rows:
+                print(csv_row(f"fig6_{name}", r))
+            oz = rows[-1]
+            best = min(rows[:-1], key=lambda r: r.compressed_bytes)
+            mark = "WIN" if oz.compressed_bytes < best.compressed_bytes else "loss"
+            print(
+                f"#  {name}: openzl {oz.ratio:.2f}x vs best-traditional"
+                f" {best.name} {best.ratio:.2f}x [{mark}]"
+            )
+    if print_rows:
+        wins = sum(
+            1
+            for rows in all_results.values()
+            if rows[-1].compressed_bytes < min(r.compressed_bytes for r in rows[:-1])
+        )
+        print(f"# fig6 summary: OpenZL best-ratio on {wins}/{len(all_results)} datasets")
+    return all_results
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig. 7: ratio-vs-speed Pareto frontiers — trained OpenZL tradeoff
+points vs the level systems of zlib and xz, on two representative datasets."""
+from __future__ import annotations
+
+import bz2
+import lzma
+import zlib
+
+from .common import Result, csv_row, time_codec, time_openzl_plan
+from .datasets import streams_to_bytes
+from .trained import get_trained
+
+DATASETS = ("binance", "era5_wind")
+
+
+def run(print_rows: bool = True):
+    trained = get_trained()
+    out = {}
+    for name in DATASETS:
+        entry = trained[name]
+        streams = entry["streams"]
+        blob = streams_to_bytes(streams)
+        rows = []
+        for lvl in (1, 3, 6, 9):
+            rows.append(
+                time_codec(
+                    f"zlib-{lvl}", blob, lambda d, l=lvl: zlib.compress(d, l), zlib.decompress
+                )
+            )
+        for preset in (0, 3, 6, 9):
+            rows.append(
+                time_codec(
+                    f"xz-{preset}", blob,
+                    lambda d, p=preset: lzma.compress(d, preset=p), lzma.decompress,
+                )
+            )
+        for i, (plan, _, _) in enumerate(entry["plans"]):
+            rows.append(time_openzl_plan(f"openzl-p{i}", plan, streams))
+        out[name] = rows
+        if print_rows:
+            for r in rows:
+                print(csv_row(f"fig7_{name}", r))
+            # dominance check (paper: OpenZL frontier dominates on parquet/grib)
+            oz = [r for r in rows if r.name.startswith("openzl")]
+            others = [r for r in rows if not r.name.startswith("openzl")]
+            dominated = sum(
+                1
+                for o in others
+                if any(z.ratio >= o.ratio and z.c_mibs >= o.c_mibs for z in oz)
+            )
+            print(
+                f"#  {name}: {dominated}/{len(others)} traditional points are"
+                " pareto-dominated by an OpenZL point"
+            )
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Emits ``name,us_per_call,derived`` CSV rows.  Sections:
+    t1_sao       — paper Table I  (SAO worked example, §IV)
+    fig6_*       — paper Fig. 6   (best ratios vs competitors)
+    t4_speeds    — paper Table IV (mean C/D speeds)
+    fig7_*       — paper Fig. 7   (ratio/speed Pareto frontiers)
+    t3_training  — paper Table III (trainer stats)
+    kernels      — Pallas kernel micro-bench + K1 fusion traffic model
+    roofline     — §Roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> int:
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    from . import t1_sao
+
+    t1_sao.run()
+    from . import fig6_ratios
+
+    fig6_ratios.run()
+    from . import t4_speeds
+
+    t4_speeds.run()
+    from . import fig7_pareto
+
+    fig7_pareto.run()
+    from . import t3_training
+
+    t3_training.run()
+    from . import kernels_bench
+
+    kernels_bench.run()
+    try:
+        from . import roofline
+
+        roofline.main()
+    except Exception as e:  # dry-run results may be absent on fresh clones
+        print(f"# roofline skipped: {e}")
+    print(f"# total benchmark wall time: {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

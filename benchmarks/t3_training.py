@@ -1,0 +1,34 @@
+"""Paper Table III: training-set size, % of total dataset, training speed
+(MiB/min) per benchmark dataset."""
+from __future__ import annotations
+
+from .trained import get_trained
+
+
+def run(print_rows: bool = True):
+    trained = get_trained()
+    out = []
+    for name, entry in trained.items():
+        st = entry["stats"]
+        total = sum(s.nbytes for s in entry["streams"])
+        train_mib = st["train_bytes"] / (1 << 20)
+        pct = 100.0 * st["train_bytes"] / total
+        speed = st["train_speed_mib_min"]
+        out.append((name, train_mib, pct, speed))
+        if print_rows:
+            print(
+                f"t3_training/{name},{st['train_seconds']*1e6:.0f},"
+                f"train_mib={train_mib:.2f};pct_of_total={pct:.2f};"
+                f"mib_per_min={speed:.2f};clusters={int(st['n_clusters'])}"
+            )
+    if print_rows:
+        print("# paper Table III training speeds: 1.1-11.6 MiB/min (ours should be same order)")
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Table IV: mean compression/decompression speeds (MiB/s) across the
+Fig. 6 datasets, per compressor."""
+from __future__ import annotations
+
+import numpy as np
+
+from .fig6_ratios import run as fig6_run
+
+
+def run(print_rows: bool = True):
+    all_results = fig6_run(print_rows=False)
+    by_comp = {}
+    for rows in all_results.values():
+        for r in rows:
+            by_comp.setdefault(r.name, []).append(r)
+    out = []
+    for comp, rs in by_comp.items():
+        c = float(np.mean([r.c_mibs for r in rs]))
+        d = float(np.mean([r.d_mibs for r in rs]))
+        ratio = float(np.mean([r.ratio for r in rs]))
+        out.append((comp, c, d, ratio))
+        if print_rows:
+            print(
+                f"t4_speeds/{comp},{1e6 / max(c, 1e-9):.1f},"
+                f"mean_c_mibs={c:.2f};mean_d_mibs={d:.2f};mean_ratio={ratio:.3f}"
+            )
+    if print_rows:
+        print(
+            "# paper Table IV: zlib-6 52.5/715, zstd-19 6.07/2820, xz-9 6.14/314,"
+            " nncp 0.0025/0.0025, cmix 0.001/0.001, openzl 142/323 MiB/s"
+        )
+        print(
+            "# (this container: single CPU core, numpy/python kernels —"
+            " compare SHAPE of the ordering, not absolute numbers)"
+        )
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

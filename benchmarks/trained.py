@@ -1,0 +1,84 @@
+"""Train-once cache shared by fig6/t4/t3/fig7: trains an OpenZL compressor
+per benchmark dataset (paper §VI-C protocol: train on a small sample, test on
+the full data) and caches the serialized plans + stats on disk."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import Compressor, Stream
+from repro.core.message import SType
+from repro.core.serialize import deserialize_plan, serialize_plan
+from repro.training import train
+
+from .datasets import benchmark_suite
+
+CACHE = Path(__file__).resolve().parents[1] / "results" / "trained"
+SMALL = os.environ.get("BENCH_SMALL", "1") == "1"
+POP = int(os.environ.get("BENCH_POP", "12"))
+GENS = int(os.environ.get("BENCH_GENS", "4"))
+
+
+def _sample_streams(streams: List[Stream], frac: float) -> List[Stream]:
+    """Training sample: a prefix slice of each stream (paper: 1-15% of data)."""
+    out = []
+    for s in streams:
+        n = max(int(s.n_elts * frac), 64)
+        if s.stype == SType.STRING:
+            n = min(n, int(s.lengths.size))
+            nb = int(s.lengths[:n].sum())
+            out.append(Stream(s.data[:nb], s.stype, 1, s.lengths[:n]))
+        elif s.stype == SType.NUMERIC:
+            out.append(Stream(s.data[:n], s.stype, s.width))
+        elif s.stype == SType.SERIAL:
+            # serial blobs (e.g. CSV) must be cut at a record boundary
+            raw = s.data[:n].tobytes()
+            nl = raw.rfind(b"\n")
+            cut = nl + 1 if nl > 0 else n
+            out.append(Stream(s.data[:cut], s.stype, s.width))
+        else:
+            out.append(Stream(s.data[: n * s.width], s.stype, s.width))
+    return out
+
+
+def get_trained(force: bool = False) -> Dict[str, dict]:
+    """{dataset: {streams, frontend, plans: [(Plan, est_size, est_time)],
+                  stats, train_frac}}"""
+    CACHE.mkdir(parents=True, exist_ok=True)
+    suite = benchmark_suite(small=SMALL)
+    out: Dict[str, dict] = {}
+    for name, streams, frontend in suite:
+        meta_path = CACHE / f"{name}.json"
+        entry = {"streams": streams, "frontend": frontend}
+        train_frac = 0.05 if name not in ("binance",) else 0.15
+        if meta_path.exists() and not force:
+            meta = json.loads(meta_path.read_text())
+            plans = []
+            for i in range(meta["n_points"]):
+                blob = (CACHE / f"{name}_{i}.ozp").read_bytes()
+                plan, _ = deserialize_plan(blob)
+                plans.append((plan, meta["sizes"][i], meta["times"][i]))
+            entry.update(plans=plans, stats=meta["stats"], train_frac=meta["train_frac"])
+        else:
+            sample = _sample_streams(streams, train_frac)
+            # csv frontends need raw bytes; sampling serial streams is fine
+            tc = train([sample], frontend, pop_size=POP, generations=GENS)
+            plans = [(p, sz, tm) for p, sz, tm in tc.pareto_plans()]
+            meta = {
+                "n_points": len(plans),
+                "sizes": [sz for _, sz, _ in plans],
+                "times": [tm for _, _, tm in plans],
+                "stats": tc.stats,
+                "train_frac": train_frac,
+            }
+            for i, (plan, _, _) in enumerate(plans):
+                (CACHE / f"{name}_{i}.ozp").write_bytes(serialize_plan(plan))
+            meta_path.write_text(json.dumps(meta))
+            entry.update(plans=plans, stats=tc.stats, train_frac=train_frac)
+        out[name] = entry
+    return out

@@ -1,0 +1,40 @@
+#!/usr/bin/env python
+"""Batched LM serving with a KV cache (prefill + incremental decode),
+optionally restoring an OpenZL-compressed checkpoint written by train_lm.py.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch h2o-danube-3-4b]
+
+Try the SWA arch to see the ring-buffer cache: generation length can exceed
+the window with CONSTANT cache memory (the long_500k serving story).
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve as serve_mod  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=40)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+    return serve_mod.main(
+        [
+            "--arch", args.arch,
+            "--reduced",
+            "--batch", str(args.batch),
+            "--prompt-len", str(args.prompt_len),
+            "--gen", str(args.gen),
+            "--ckpt-dir", args.ckpt_dir if Path(args.ckpt_dir).exists() else "",
+        ]
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

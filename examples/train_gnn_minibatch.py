@@ -1,0 +1,59 @@
+#!/usr/bin/env python
+"""GNN minibatch training with the REAL neighbour sampler (the minibatch_lg
+shape's data path): CSR graph -> fanout-sampled padded subgraphs -> GraphCast
+processor -> regression loss on seed nodes.
+
+    PYTHONPATH=src python examples/train_gnn_minibatch.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import CSRGraph, sample_subgraph
+from repro.data.synthetic import random_graph
+from repro.distributed.optimizer import adamw
+from repro.models import gnn
+
+# ---- a 20k-node power-law graph with learnable node targets ---------------
+N_NODES, N_EDGES, D_FEAT, D_OUT = 20_000, 120_000, 32, 8
+g = random_graph(N_NODES, N_EDGES, D_FEAT, D_OUT, seed=0)
+csr = CSRGraph.from_edges(g["edges"], N_NODES)
+print(f"graph: {N_NODES} nodes, {N_EDGES} edges (CSR built)")
+
+SEEDS, FANOUTS = 256, [10, 5]
+PAD_N = SEEDS * (1 + FANOUTS[0] + FANOUTS[0] * FANOUTS[1])
+PAD_E = SEEDS * (FANOUTS[0] + FANOUTS[0] * FANOUTS[1])
+
+cfg = gnn.GNNConfig(n_layers=3, d_hidden=64, d_in=D_FEAT, d_out=D_OUT, remat=False)
+params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+optimizer = adamw(lr=1e-3)
+opt_state = optimizer.init(params)
+
+
+@jax.jit
+def train_step(params, opt_state, batch):
+    loss, grads = jax.value_and_grad(gnn.loss_fn)(params, batch, cfg)
+    params, opt_state = optimizer.update(grads, opt_state, params)
+    return params, opt_state, loss
+
+
+rng = np.random.default_rng(1)
+t0 = time.time()
+for step in range(1, 41):
+    seeds = rng.choice(N_NODES, SEEDS, replace=False)
+    sub = sample_subgraph(
+        csr, g["nodes"], g["targets"], seeds, FANOUTS,
+        pad_nodes=PAD_N, pad_edges=PAD_E, seed=step,
+    )
+    batch = {k: jnp.asarray(v) for k, v in sub.items() if k != "n_real_nodes"}
+    params, opt_state, loss = train_step(params, opt_state, batch)
+    if step % 10 == 0:
+        print(f"step {step:3d}  seed-node MSE {float(loss):.4f}  "
+              f"({sub['n_real_nodes']} real nodes in the padded subgraph)")
+print(f"done in {time.time()-t0:.1f}s — loss should fall toward the noise floor")

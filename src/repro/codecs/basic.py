@@ -1,0 +1,305 @@
+"""Structural codecs: store, dup, constant, split_n, concat, field_split,
+string_split.  These carry no compression on their own — they are the glue
+that routes data through the graph (paper §III-C, §IV "grouping")."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.codec import CodecSpec, register_codec
+from repro.core.message import Stream, SType, from_wire
+
+from ._util import HeaderReader, HeaderWriter
+
+# --------------------------------------------------------------------- store
+def _store_enc(streams, params):
+    return [streams[0]], b""
+
+
+def _store_dec(outs, header):
+    return [outs[0]]
+
+
+register_codec(
+    CodecSpec(
+        "store",
+        codec_id=1,
+        encode=_store_enc,
+        decode=_store_dec,
+        doc="identity; terminal passthrough (useful as a GP mutation target)",
+    )
+)
+
+
+# ----------------------------------------------------------------------- dup
+def _dup_enc(streams, params):
+    s = streams[0]
+    return [s, Stream(s.data.copy(), s.stype, s.width, s.lengths)], b""
+
+
+def _dup_dec(outs, header):
+    return [outs[0]]
+
+
+register_codec(
+    CodecSpec(
+        "dup",
+        codec_id=2,
+        encode=_dup_enc,
+        decode=_dup_dec,
+        n_outputs=2,
+        doc="explicit fan-out: one input, two identical outputs",
+    )
+)
+
+
+# ------------------------------------------------------------------ constant
+def _constant_enc(streams, params):
+    s = streams[0]
+    if s.stype == SType.STRING:
+        raise ValueError("constant codec: fixed-width streams only")
+    raw = np.frombuffer(s.content_bytes(), dtype=np.uint8)
+    w = s.width
+    n = s.n_elts
+    if n == 0:
+        value = b""
+    else:
+        rec = raw.reshape(n, -1) if s.stype != SType.SERIAL else raw.reshape(n, 1)
+        if not (rec == rec[0]).all():
+            raise ValueError("constant codec: stream is not constant")
+        value = rec[0].tobytes()
+    h = (
+        HeaderWriter()
+        .u8(int(s.stype))
+        .varint(w)
+        .varint(n)
+        .bytes_(value)
+        .done()
+    )
+    return [], h
+
+
+def _constant_dec(outs, header):
+    r = HeaderReader(header)
+    stype = SType(r.u8())
+    w = r.varint()
+    n = r.varint()
+    value = r.bytes_()
+    r.expect_end()
+    payload = value * n
+    return [from_wire(stype, w, payload, None)]
+
+
+register_codec(
+    CodecSpec(
+        "constant",
+        codec_id=8,
+        encode=_constant_enc,
+        decode=_constant_dec,
+        n_outputs=0,
+        doc="all-equal stream -> header only (value + count); zero outputs",
+    )
+)
+
+
+# ------------------------------------------------------------------- split_n
+def _split_n_enc(streams, params):
+    s = streams[0]
+    if s.stype == SType.STRING:
+        raise ValueError("split_n: fixed-width streams only")
+    sizes = list(params["sizes"])  # element counts per chunk; -1 => rest (last)
+    n = s.n_elts
+    if sizes and sizes[-1] == -1:
+        sizes[-1] = n - sum(sizes[:-1])
+    if sum(sizes) != n or any(sz < 0 for sz in sizes):
+        raise ValueError(f"split_n sizes {sizes} != {n} elements")
+    outs: List[Stream] = []
+    off = 0
+    for sz in sizes:
+        outs.append(Stream(s.data[off * _eltw(s) : (off + sz) * _eltw(s)], s.stype, s.width))
+        off += sz
+    h = HeaderWriter()
+    h.varint(len(sizes))
+    return outs, h.done()
+
+
+def _eltw(s: Stream) -> int:
+    # elements of `data` per logical element (NUMERIC arrays are 1 datum/elt)
+    if s.stype == SType.NUMERIC:
+        return 1
+    if s.stype == SType.STRUCT:
+        return s.width
+    return 1
+
+
+def _split_n_dec(outs, header):
+    r = HeaderReader(header)
+    k = r.varint()
+    r.expect_end()
+    if len(outs) != k:
+        raise ValueError("split_n: wrong output count")
+    s0 = outs[0]
+    data = np.concatenate([o.data for o in outs])
+    return [Stream(data, s0.stype, s0.width)]
+
+
+register_codec(
+    CodecSpec(
+        "split_n",
+        codec_id=11,
+        encode=_split_n_enc,
+        decode=_split_n_dec,
+        n_outputs=-1,
+        doc="split a stream into contiguous chunks (params: sizes=[...])",
+    )
+)
+
+
+# -------------------------------------------------------------------- concat
+def _concat_enc(streams, params):
+    if not streams:
+        raise ValueError("concat: needs >=1 input")
+    s0 = streams[0]
+    for s in streams:
+        if s.stype != s0.stype or s.width != s0.width:
+            raise ValueError("concat: mixed stream types")
+    h = HeaderWriter()
+    h.varint(len(streams))
+    if s0.stype == SType.STRING:
+        content = np.concatenate([s.data for s in streams])
+        lengths = np.concatenate(
+            [s.lengths if s.lengths is not None else np.zeros(0, np.uint32) for s in streams]
+        ).astype(np.uint32)
+        for s in streams:
+            h.varint(int(s.lengths.size))
+        out = Stream(content, SType.STRING, 1, lengths)
+    else:
+        for s in streams:
+            h.varint(int(s.data.size))
+        # NUMERIC streams may mix signedness (i64 vs u64): concatenate the
+        # UNSIGNED bit views — np.concatenate would promote mixed int64/uint64
+        # to float64 and silently round large values (lossless bug!)
+        parts = [
+            s.as_unsigned().data if s.stype == SType.NUMERIC else s.data
+            for s in streams
+        ]
+        out = Stream(np.concatenate(parts), s0.stype, s0.width)
+    return [out], h.done()
+
+
+def _concat_dec(outs, header):
+    s = outs[0]
+    r = HeaderReader(header)
+    k = r.varint()
+    sizes = [r.varint() for _ in range(k)]
+    r.expect_end()
+    res: List[Stream] = []
+    if s.stype == SType.STRING:
+        off_s = 0
+        off_c = 0
+        for sz in sizes:
+            lens = s.lengths[off_s : off_s + sz]
+            nb = int(lens.sum())
+            res.append(Stream(s.data[off_c : off_c + nb], SType.STRING, 1, lens))
+            off_s += sz
+            off_c += nb
+    else:
+        off = 0
+        for sz in sizes:
+            res.append(Stream(s.data[off : off + sz], s.stype, s.width))
+            off += sz
+    return res
+
+
+register_codec(
+    CodecSpec(
+        "concat",
+        codec_id=12,
+        encode=_concat_enc,
+        decode=_concat_dec,
+        n_inputs=-1,
+        n_outputs=1,
+        doc="merge same-typed streams (the paper's cluster 'grouping' step)",
+    )
+)
+
+
+# --------------------------------------------------------------- field_split
+def _field_split_enc(streams, params):
+    s = streams[0]
+    widths = list(params["widths"])
+    if s.stype not in (SType.STRUCT, SType.SERIAL):
+        raise ValueError("field_split wants struct/serial input")
+    rec_w = s.width if s.stype == SType.STRUCT else int(sum(widths))
+    if sum(widths) != rec_w:
+        raise ValueError(f"field widths {widths} != record width {rec_w}")
+    raw = s.data
+    if raw.size % rec_w:
+        raise ValueError("input not a whole number of records")
+    mat = raw.reshape(-1, rec_w)
+    outs: List[Stream] = []
+    off = 0
+    for w in widths:
+        col = np.ascontiguousarray(mat[:, off : off + w]).reshape(-1)
+        outs.append(Stream(col, SType.STRUCT if w > 1 else SType.SERIAL, max(w, 1)))
+        off += w
+    h = HeaderWriter().u8(int(s.stype)).varint(rec_w).varint(len(widths))
+    for w in widths:
+        h.varint(w)
+    return outs, h.done()
+
+
+def _field_split_dec(outs, header):
+    r = HeaderReader(header)
+    stype = SType(r.u8())
+    rec_w = r.varint()
+    k = r.varint()
+    widths = [r.varint() for _ in range(k)]
+    r.expect_end()
+    n = outs[0].data.size // widths[0]
+    mat = np.empty((n, rec_w), dtype=np.uint8)
+    off = 0
+    for w, o in zip(widths, outs):
+        mat[:, off : off + w] = o.data.reshape(n, w)
+        off += w
+    return [Stream(mat.reshape(-1), stype, rec_w if stype == SType.STRUCT else 1)]
+
+
+register_codec(
+    CodecSpec(
+        "field_split",
+        codec_id=10,
+        encode=_field_split_enc,
+        decode=_field_split_dec,
+        n_outputs=-1,
+        doc="record frontend: struct(k) -> per-field columns (params: widths=[...])",
+    )
+)
+
+
+# -------------------------------------------------------------- string_split
+def _string_split_enc(streams, params):
+    s = streams[0]
+    if s.stype != SType.STRING:
+        raise ValueError("string_split wants a string stream")
+    content = Stream(s.data, SType.SERIAL, 1)
+    lens = Stream(s.lengths.astype(np.uint32), SType.NUMERIC, 4)
+    return [content, lens], b""
+
+
+def _string_split_dec(outs, header):
+    content, lens = outs
+    return [Stream(content.data, SType.STRING, 1, lens.data.astype(np.uint32))]
+
+
+register_codec(
+    CodecSpec(
+        "string_split",
+        codec_id=21,
+        encode=_string_split_enc,
+        decode=_string_split_dec,
+        n_outputs=2,
+        doc="string -> (content bytes, u32 lengths) so each can be compressed",
+    )
+)

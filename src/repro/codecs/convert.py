@@ -1,0 +1,43 @@
+"""Type conversions between message kinds (paper §V-A's typed streams)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.codec import CodecSpec, register_codec
+from repro.core.message import Stream, SType, from_wire
+
+from ._util import UNSIGNED, HeaderReader, HeaderWriter
+
+
+def _interpret_numeric_enc(streams, params):
+    s = streams[0]
+    if s.stype == SType.STRING:
+        raise ValueError("interpret_numeric: fixed-width streams only")
+    w = int(params.get("width", s.width if s.stype != SType.SERIAL else 1))
+    if w not in UNSIGNED:
+        raise ValueError(f"interpret_numeric: width {w} not in 1/2/4/8")
+    raw = s.content_bytes()
+    if len(raw) % w:
+        raise ValueError("interpret_numeric: size not divisible by width")
+    out = Stream(np.frombuffer(raw, dtype=UNSIGNED[w]), SType.NUMERIC, w)
+    h = HeaderWriter().u8(int(s.stype)).varint(s.width).done()
+    return [out], h
+
+
+def _interpret_numeric_dec(outs, header):
+    r = HeaderReader(header)
+    stype = SType(r.u8())
+    width = r.varint()
+    r.expect_end()
+    return [from_wire(stype, width, outs[0].content_bytes(), None)]
+
+
+register_codec(
+    CodecSpec(
+        "interpret_numeric",
+        codec_id=23,
+        encode=_interpret_numeric_enc,
+        decode=_interpret_numeric_dec,
+        doc="reinterpret struct/serial bytes as host-endian numeric(w)",
+    )
+)

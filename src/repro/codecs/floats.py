@@ -1,0 +1,92 @@
+"""Floating-point plane splitting (paper §VIII: "PyTorch model checkpoints",
+"Embedding storage").
+
+Traditional byte compressors barely shrink float tensors (the paper quotes
+~10% for Zstd).  Splitting sign / exponent / mantissa into separate planes
+exposes the low-entropy exponent stream — the paper reports 17% savings on
+fp32 checkpoints and 30% on bf16 embeddings from exactly this transform.
+
+``float_split`` accepts NUMERIC(2) (bf16/f16 bit patterns) or NUMERIC(4)
+(f32) or NUMERIC(8) (f64) and emits:
+    out0: packed sign bits (SERIAL)
+    out1: exponent stream (u8 for bf16/f16/f32; u16 for f64)
+    out2: mantissa stream (u8 bf16 / u16 f16 / u32 f32 / u64 f64)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.codec import CodecSpec, register_codec
+from repro.core.message import Stream, SType
+
+from ._util import HeaderReader, HeaderWriter, numeric_stream
+
+# fmt tag -> (width, exp_bits, man_bits)
+FORMATS = {
+    0: (2, 8, 7),   # bfloat16
+    1: (2, 5, 10),  # float16
+    2: (4, 8, 23),  # float32
+    3: (8, 11, 52), # float64
+}
+_FMT_BY_WIDTH = {2: 0, 4: 2, 8: 3}  # default fmt per width (bf16 for w=2)
+_EXP_DTYPE = {0: np.uint8, 1: np.uint8, 2: np.uint8, 3: np.uint16}
+_MAN_DTYPE = {0: np.uint8, 1: np.uint16, 2: np.uint32, 3: np.uint64}
+
+
+def _pack_sign_bits(sign: np.ndarray) -> np.ndarray:
+    pad = (-sign.size) % 8
+    padded = np.concatenate([sign, np.zeros(pad, dtype=sign.dtype)])
+    return np.packbits(padded.astype(np.uint8))
+
+
+def _float_split_enc(streams, params):
+    s = streams[0]
+    if s.stype != SType.NUMERIC or s.width not in (2, 4, 8):
+        raise ValueError("float_split wants numeric(2/4/8) bit patterns")
+    fmt = int(params.get("fmt", _FMT_BY_WIDTH[s.width]))
+    width, exp_bits, man_bits = FORMATS[fmt]
+    if width != s.width:
+        raise ValueError(f"float_split fmt {fmt} expects width {width}")
+    u = s.data.view({2: np.uint16, 4: np.uint32, 8: np.uint64}[s.width])
+    tot = exp_bits + man_bits
+    sign = (u >> np.uint64(tot)).astype(np.uint8) & 1
+    exp = ((u >> np.uint64(man_bits)) & np.uint64((1 << exp_bits) - 1)).astype(
+        _EXP_DTYPE[fmt]
+    )
+    man = (u & np.uint64((1 << man_bits) - 1)).astype(_MAN_DTYPE[fmt])
+    h = HeaderWriter().u8(fmt).varint(u.size).done()
+    return [
+        Stream(_pack_sign_bits(sign), SType.SERIAL, 1),
+        numeric_stream(exp),
+        numeric_stream(man),
+    ], h
+
+
+def _float_split_dec(outs, header):
+    signs_s, exp_s, man_s = outs
+    r = HeaderReader(header)
+    fmt = r.u8()
+    n = r.varint()
+    r.expect_end()
+    width, exp_bits, man_bits = FORMATS[fmt]
+    sign = np.unpackbits(signs_s.data)[:n].astype(np.uint64)
+    exp = exp_s.data.astype(np.uint64)
+    man = man_s.data.astype(np.uint64)
+    u = (sign << np.uint64(exp_bits + man_bits)) | (exp << np.uint64(man_bits)) | man
+    out = u.astype(np.uint64).astype(
+        {2: np.uint16, 4: np.uint32, 8: np.uint64}[width]
+    )
+    return [numeric_stream(out)]
+
+
+register_codec(
+    CodecSpec(
+        "float_split",
+        codec_id=18,
+        encode=_float_split_enc,
+        decode=_float_split_dec,
+        n_outputs=3,
+        min_version=3,
+        doc="sign/exponent/mantissa planes (paper §VIII checkpoint compression)",
+    )
+)

@@ -1,0 +1,270 @@
+"""LZ-family reductive codecs (paper §II-C/D).
+
+``lz77``  — a from-scratch greedy hash-match LZ parser.  Match finding is
+vectorized (rolling 4-gram hash + previous-occurrence-by-sort); token
+selection is the classic left-to-right greedy walk.  Output follows the
+Zstd factoring the paper cites: separate literal / literal-length /
+match-length / offset streams — so each stream can take its own backend
+(entropy) codec downstream, exactly the graph-model story.
+
+``zlib_backend`` — stdlib DEFLATE as a leaf codec.  OpenZL similarly embeds
+battle-tested C kernels for the generic LZ stage; in this offline container
+zlib stands in for those (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import zlib
+from typing import List
+
+import numpy as np
+
+from repro.core.codec import CodecSpec, register_codec
+from repro.core.message import Stream, SType
+
+from ._util import HeaderReader, HeaderWriter, numeric_stream
+
+MIN_MATCH = 4
+MAX_MATCH = 1 << 16
+
+
+def _prev_occurrence(data: np.ndarray) -> np.ndarray:
+    """For each position i, the most recent j<i with the same 4-gram hash."""
+    n = data.size
+    if n < MIN_MATCH:
+        return np.full(n, -1, dtype=np.int64)
+    g = (
+        data[:-3].astype(np.uint32)
+        | (data[1:-2].astype(np.uint32) << 8)
+        | (data[2:-1].astype(np.uint32) << 16)
+        | (data[3:].astype(np.uint32) << 24)
+    )
+    h = (g * np.uint32(2654435761)) >> np.uint32(16)  # Knuth hash -> 16 bits
+    order = np.argsort(h, kind="stable")
+    prev = np.full(n, -1, dtype=np.int64)
+    sh = h[order]
+    same = np.zeros(order.size, dtype=bool)
+    same[1:] = sh[1:] == sh[:-1]
+    prev_sorted = np.where(same, np.concatenate([[0], order[:-1]]), -1)
+    prev[order] = prev_sorted
+    return prev
+
+
+def _lz77_enc(streams, params):
+    s = streams[0]
+    if s.stype == SType.STRING:
+        raise ValueError("lz77: fixed-width streams only (string_split first)")
+    data = np.frombuffer(s.content_bytes(), dtype=np.uint8)
+    n = data.size
+    prev = _prev_occurrence(data)
+    buf = data.tobytes()
+
+    lit_runs: List[int] = []
+    match_lens: List[int] = []
+    offsets: List[int] = []
+    literals = bytearray()
+    i = 0
+    lit_start = 0
+    while i + MIN_MATCH <= n:
+        j = prev[i]
+        if j >= 0 and j < i and buf[j : j + MIN_MATCH] == buf[i : i + MIN_MATCH]:
+            L = _extend(data, j, i, n)
+            lit_runs.append(i - lit_start)
+            literals += buf[lit_start:i]
+            match_lens.append(L)
+            offsets.append(i - j)
+            i += L
+            lit_start = i
+        else:
+            i += 1
+    lit_runs.append(n - lit_start)
+    literals += buf[lit_start:n]
+
+    h = HeaderWriter().u8(int(s.stype)).varint(s.width).varint(n).done()
+    return [
+        Stream(np.frombuffer(bytes(literals), dtype=np.uint8), SType.SERIAL, 1),
+        numeric_stream(np.asarray(lit_runs, dtype=np.uint32)),
+        numeric_stream(np.asarray(match_lens, dtype=np.uint32)),
+        numeric_stream(np.asarray(offsets, dtype=np.uint32)),
+    ], h
+
+
+def _extend(data: np.ndarray, j: int, i: int, n: int) -> int:
+    """Longest common extension of data[i:] vs data[j:] (j < i).
+
+    Overlapping matches (dist < L) are legal in LZ77: the copy source keeps
+    reading bytes the copy itself just produced, which for the *extension
+    check* is equivalent to comparing data[j+L] vs data[i+L] directly —
+    data[] already holds the final bytes on the encode side.  So plain
+    chunked comparison is correct regardless of overlap.
+    """
+    L = 0
+    limit = min(n - i, MAX_MATCH)
+    while L < limit:
+        chunk = min(256, limit - L)
+        a = data[j + L : j + L + chunk]
+        b = data[i + L : i + L + chunk]
+        neq = np.nonzero(a != b)[0]
+        if neq.size:
+            return L + int(neq[0])
+        L += chunk
+    return L
+
+
+def _lz77_dec(outs, header):
+    literals, lit_runs, match_lens, offsets = outs
+    r = HeaderReader(header)
+    stype = SType(r.u8())
+    width = r.varint()
+    n = r.varint()
+    r.expect_end()
+    out = np.empty(n, dtype=np.uint8)
+    lit = literals.data
+    runs = lit_runs.data.astype(np.int64)
+    mls = match_lens.data.astype(np.int64)
+    offs = offsets.data.astype(np.int64)
+    pos = 0
+    lpos = 0
+    for k in range(runs.size):
+        rl = int(runs[k])
+        if rl:
+            out[pos : pos + rl] = lit[lpos : lpos + rl]
+            pos += rl
+            lpos += rl
+        if k < mls.size:
+            L = int(mls[k])
+            d = int(offs[k])
+            src = pos - d
+            if d >= L:
+                out[pos : pos + L] = out[src : src + L]
+            else:  # overlapping copy: replicate the period
+                reps = -(-L // d)
+                pattern = out[src:pos]
+                out[pos : pos + L] = np.tile(pattern, reps)[:L]
+            pos += L
+    if pos != n:
+        raise ValueError("lz77: corrupt token streams")
+    from repro.core.message import from_wire
+
+    return [from_wire(stype, width, out.tobytes(), None)]
+
+
+register_codec(
+    CodecSpec(
+        "lz77",
+        codec_id=16,
+        encode=_lz77_enc,
+        decode=_lz77_dec,
+        n_outputs=4,
+        min_version=2,
+        doc="greedy LZ77 -> (literals, lit-runs, match-lens, offsets) streams",
+    )
+)
+
+
+# -------------------------------------------------------------- lzma backend
+def _lzma_enc(streams, params):
+    import lzma
+
+    s = streams[0]
+    if s.stype == SType.STRING:
+        raise ValueError("lzma_backend: fixed-width streams only")
+    preset = int(params.get("preset", 6))
+    payload = lzma.compress(s.content_bytes(), preset=preset)
+    h = HeaderWriter().u8(int(s.stype)).varint(s.width).done()
+    return [Stream(np.frombuffer(payload, dtype=np.uint8), SType.SERIAL, 1)], h
+
+
+def _lzma_dec(outs, header):
+    import lzma
+
+    r = HeaderReader(header)
+    stype = SType(r.u8())
+    width = r.varint()
+    r.expect_end()
+    from repro.core.message import from_wire
+
+    return [from_wire(stype, width, lzma.decompress(outs[0].data.tobytes()), None)]
+
+
+register_codec(
+    CodecSpec(
+        "lzma_backend",
+        codec_id=24,
+        encode=_lzma_enc,
+        decode=_lzma_dec,
+        min_version=3,
+        doc="stdlib LZMA leaf — the ratio-end generic backend, as OpenZL"
+        " embeds zstd-class LZ stages behind its transforms",
+    )
+)
+
+
+# --------------------------------------------------------------- bz2 backend
+def _bz2_enc(streams, params):
+    import bz2
+
+    s = streams[0]
+    if s.stype == SType.STRING:
+        raise ValueError("bz2_backend: fixed-width streams only")
+    level = int(params.get("level", 9))
+    payload = bz2.compress(s.content_bytes(), level)
+    h = HeaderWriter().u8(int(s.stype)).varint(s.width).done()
+    return [Stream(np.frombuffer(payload, dtype=np.uint8), SType.SERIAL, 1)], h
+
+
+def _bz2_dec(outs, header):
+    import bz2
+
+    r = HeaderReader(header)
+    stype = SType(r.u8())
+    width = r.varint()
+    r.expect_end()
+    from repro.core.message import from_wire
+
+    return [from_wire(stype, width, bz2.decompress(outs[0].data.tobytes()), None)]
+
+
+register_codec(
+    CodecSpec(
+        "bz2_backend",
+        codec_id=25,
+        encode=_bz2_enc,
+        decode=_bz2_dec,
+        min_version=3,
+        doc="stdlib BWT backend (paper §II-B mentions BWT+MTF; block-sorting"
+        " is a poor TPU fit so it ships as a host-side leaf only)",
+    )
+)
+
+
+# -------------------------------------------------------------- zlib backend
+def _zlib_enc(streams, params):
+    s = streams[0]
+    if s.stype == SType.STRING:
+        raise ValueError("zlib_backend: fixed-width streams only (string_split first)")
+    level = int(params.get("level", 6))
+    payload = zlib.compress(s.content_bytes(), level)
+    h = HeaderWriter().u8(int(s.stype)).varint(s.width).done()
+    return [Stream(np.frombuffer(payload, dtype=np.uint8), SType.SERIAL, 1)], h
+
+
+def _zlib_dec(outs, header):
+    r = HeaderReader(header)
+    stype = SType(r.u8())
+    width = r.varint()
+    r.expect_end()
+    from repro.core.message import from_wire
+
+    return [from_wire(stype, width, zlib.decompress(outs[0].data.tobytes()), None)]
+
+
+register_codec(
+    CodecSpec(
+        "zlib_backend",
+        codec_id=17,
+        encode=_zlib_enc,
+        decode=_zlib_dec,
+        min_version=3,
+        doc="stdlib DEFLATE leaf (stands in for OpenZL's optimized C LZ kernels)",
+    )
+)

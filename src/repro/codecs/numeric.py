@@ -1,0 +1,382 @@
+"""Numeric transforms (paper §II-B/C, §IV): delta, zigzag, transpose,
+transpose_split, bitpack, range_pack, rle, tokenize.
+
+All are reversible; delta/zigzag are *reversible transforms*, rle/tokenize/
+bitpack/range_pack are *reductive*.  Everything is numpy-vectorized — these
+are the host twins of the Pallas kernels in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.codec import CodecSpec, register_codec
+from repro.core.message import Stream, SType, from_wire
+
+from ._util import (
+    UNSIGNED,
+    HeaderReader,
+    HeaderWriter,
+    min_uint_width,
+    numeric_stream,
+)
+
+
+def _require_numeric(s: Stream, op: str) -> np.ndarray:
+    if s.stype != SType.NUMERIC:
+        raise ValueError(f"{op}: numeric streams only, got {s.stype.name}")
+    return s.data.view(UNSIGNED[s.width])
+
+
+# --------------------------------------------------------------------- delta
+def _delta_enc(streams, params):
+    x = _require_numeric(streams[0], "delta")
+    d = np.empty_like(x)
+    if x.size:
+        d[0] = x[0]
+        # wrapping subtraction on the unsigned view: always reversible
+        np.subtract(x[1:], x[:-1], out=d[1:])
+    return [numeric_stream(d)], b""
+
+
+def _delta_dec(outs, header):
+    d = _require_numeric(outs[0], "delta")
+    with np.errstate(over="ignore"):
+        x = np.cumsum(d, dtype=d.dtype)
+    return [numeric_stream(x)]
+
+
+register_codec(
+    CodecSpec(
+        "delta",
+        codec_id=3,
+        encode=_delta_enc,
+        decode=_delta_dec,
+        doc="wrapping first-difference on the unsigned view (paper §II-B)",
+    )
+)
+
+
+# -------------------------------------------------------------------- zigzag
+def _zigzag_enc(streams, params):
+    s = streams[0]
+    u = _require_numeric(s, "zigzag")
+    bits = s.width * 8
+    x = u.view(np.dtype(f"int{bits}"))
+    zz = (u << u.dtype.type(1)) ^ (x >> (bits - 1)).view(u.dtype)
+    return [numeric_stream(zz)], b""
+
+
+def _zigzag_dec(outs, header):
+    s = outs[0]
+    u = _require_numeric(s, "zigzag")
+    one = u.dtype.type(1)
+    x = (u >> one) ^ (np.zeros_like(u) - (u & one))
+    return [numeric_stream(x)]
+
+
+register_codec(
+    CodecSpec(
+        "zigzag",
+        codec_id=4,
+        encode=_zigzag_enc,
+        decode=_zigzag_dec,
+        doc="signed -> small-unsigned mapping ((x<<1) ^ (x>>w-1))",
+    )
+)
+
+
+# ----------------------------------------------------------------- transpose
+def _transpose_enc(streams, params):
+    s = streams[0]
+    if s.stype not in (SType.STRUCT, SType.NUMERIC):
+        raise ValueError("transpose wants struct/numeric input")
+    raw = np.frombuffer(s.content_bytes(), dtype=np.uint8)
+    w = s.width
+    planes = np.ascontiguousarray(raw.reshape(-1, w).T).reshape(-1)
+    h = HeaderWriter().u8(int(s.stype)).varint(w).done()
+    return [Stream(planes, SType.SERIAL, 1)], h
+
+
+def _transpose_dec(outs, header):
+    r = HeaderReader(header)
+    stype = SType(r.u8())
+    w = r.varint()
+    r.expect_end()
+    planes = outs[0].data
+    n = planes.size // w
+    raw = np.ascontiguousarray(planes.reshape(w, n).T).reshape(-1)
+    return [from_wire(stype, w, raw.tobytes(), None)]
+
+
+register_codec(
+    CodecSpec(
+        "transpose",
+        codec_id=5,
+        encode=_transpose_enc,
+        decode=_transpose_dec,
+        doc="byte-plane shuffle (Blosc-style); makes high bytes runs (paper §IV)",
+    )
+)
+
+
+# ----------------------------------------------------------- transpose_split
+def _transpose_split_enc(streams, params):
+    s = streams[0]
+    if s.stype not in (SType.STRUCT, SType.NUMERIC):
+        raise ValueError("transpose_split wants struct/numeric input")
+    raw = np.frombuffer(s.content_bytes(), dtype=np.uint8)
+    w = s.width
+    mat = raw.reshape(-1, w)
+    outs = [Stream(np.ascontiguousarray(mat[:, j]), SType.SERIAL, 1) for j in range(w)]
+    h = HeaderWriter().u8(int(s.stype)).varint(w).done()
+    return outs, h
+
+
+def _transpose_split_dec(outs, header):
+    r = HeaderReader(header)
+    stype = SType(r.u8())
+    w = r.varint()
+    r.expect_end()
+    n = outs[0].data.size
+    mat = np.empty((n, w), dtype=np.uint8)
+    for j, o in enumerate(outs):
+        mat[:, j] = o.data
+    return [from_wire(stype, w, mat.reshape(-1).tobytes(), None)]
+
+
+register_codec(
+    CodecSpec(
+        "transpose_split",
+        codec_id=22,
+        encode=_transpose_split_enc,
+        decode=_transpose_split_dec,
+        n_outputs=-1,
+        doc="byte planes as separate outputs so each plane gets its own backend",
+    )
+)
+
+
+# ------------------------------------------------------------------- bitpack
+def _pack_bits(vals: np.ndarray, bits: int) -> np.ndarray:
+    """Pack unsigned values (< 2^bits) LSB-first into bytes.  bits <= 57 so a
+    single unaligned 8-byte window always covers a value (see _unpack_bits)."""
+    if bits > 57:
+        raise ValueError("bitpack supports <= 57 bits per value; store instead")
+    n = vals.size
+    total_bits = n * bits
+    out = np.zeros((total_bits + 7) // 8 + 8, dtype=np.uint8)
+    offs = np.arange(n, dtype=np.int64) * bits
+    v = vals.astype(np.uint64)
+    # each value touches at most ceil(bits/8)+1 bytes
+    for b in range((bits + 7) // 8 + 1):
+        byte_idx = (offs >> 3) + b
+        shift = (np.int64(b) << 3) - (offs & 7)
+        pos = shift >= 0
+        # two-sided shift without UB: clamp each direction's amount to >= 0
+        contrib = np.where(
+            pos,
+            v >> np.where(pos, shift, 0).clip(max=63).astype(np.uint64),
+            v << np.where(~pos, -shift, 0).astype(np.uint64),
+        )
+        contrib = np.where(shift >= 64, 0, contrib)  # avoid x86 shift-mod-64 UB
+        np.bitwise_or.at(out, byte_idx, (contrib & 0xFF).astype(np.uint8))
+    return out[: (total_bits + 7) // 8]
+
+
+def _unpack_bits(buf: np.ndarray, bits: int, n: int, out_width: int) -> np.ndarray:
+    padded = np.zeros(buf.size + 8, dtype=np.uint8)
+    padded[: buf.size] = buf
+    offs = np.arange(n, dtype=np.int64) * bits
+    byte0 = offs >> 3
+    # gather 8 consecutive bytes -> u64 window, shift, mask
+    gathered = np.zeros(n, dtype=np.uint64)
+    for b in range(8):
+        gathered |= padded[byte0 + b].astype(np.uint64) << np.uint64(8 * b)
+    vals = (gathered >> (offs & 7).astype(np.uint64)) & np.uint64((1 << bits) - 1)
+    return vals.astype(UNSIGNED[out_width])
+
+
+def _bitpack_enc(streams, params):
+    s = streams[0]
+    x = _require_numeric(s, "bitpack")
+    maxv = int(x.max()) if x.size else 0
+    bits = int(params.get("bits", 0)) or max(int(maxv).bit_length(), 1)
+    if maxv >= (1 << bits):
+        raise ValueError(f"bitpack: values need more than {bits} bits")
+    packed = _pack_bits(x, bits)
+    h = HeaderWriter().u8(bits).u8(s.width).varint(x.size).done()
+    return [Stream(packed, SType.SERIAL, 1)], h
+
+
+def _bitpack_dec(outs, header):
+    r = HeaderReader(header)
+    bits = r.u8()
+    width = r.u8()
+    n = r.varint()
+    r.expect_end()
+    vals = _unpack_bits(outs[0].data, bits, n, width)
+    return [numeric_stream(vals)]
+
+
+register_codec(
+    CodecSpec(
+        "bitpack",
+        codec_id=6,
+        encode=_bitpack_enc,
+        decode=_bitpack_dec,
+        doc="pack values into ceil(log2(max+1)) bits, LSB-first",
+    )
+)
+
+
+# ---------------------------------------------------------------- range_pack
+def _range_pack_enc(streams, params):
+    s = streams[0]
+    x = _require_numeric(s, "range_pack")
+    lo = int(x.min()) if x.size else 0
+    shifted = (x - x.dtype.type(lo)).astype(np.uint64)
+    maxv = int(shifted.max()) if x.size else 0
+    bits = max(int(maxv).bit_length(), 1)
+    packed = _pack_bits(shifted, bits)
+    h = HeaderWriter().u8(bits).u8(s.width).varint(x.size).varint(lo).done()
+    return [Stream(packed, SType.SERIAL, 1)], h
+
+
+def _range_pack_dec(outs, header):
+    r = HeaderReader(header)
+    bits = r.u8()
+    width = r.u8()
+    n = r.varint()
+    lo = r.varint()
+    r.expect_end()
+    vals = _unpack_bits(outs[0].data, bits, n, 8)
+    vals = (vals + np.uint64(lo)).astype(UNSIGNED[width])
+    return [numeric_stream(vals)]
+
+
+register_codec(
+    CodecSpec(
+        "range_pack",
+        codec_id=13,
+        encode=_range_pack_enc,
+        decode=_range_pack_dec,
+        doc="bounded ints: subtract min then bitpack (paper §IV SDEC0 idea)",
+    )
+)
+
+
+# ----------------------------------------------------------------------- rle
+def _rle_enc(streams, params):
+    s = streams[0]
+    if s.stype == SType.STRING:
+        raise ValueError("rle: fixed-width streams only")
+    raw = np.frombuffer(s.content_bytes(), dtype=np.uint8)
+    w = s.width if s.stype != SType.SERIAL else 1
+    mat = raw.reshape(-1, w)
+    n = mat.shape[0]
+    if n == 0:
+        starts = np.zeros(0, dtype=np.int64)
+    else:
+        change = np.any(mat[1:] != mat[:-1], axis=1)
+        starts = np.concatenate([[0], np.nonzero(change)[0] + 1])
+    runs = np.diff(np.concatenate([starts, [n]])).astype(np.uint32)
+    values_raw = np.ascontiguousarray(mat[starts]).reshape(-1)
+    values = from_wire(s.stype, s.width, values_raw.tobytes(), None)
+    h = HeaderWriter().u8(int(s.stype)).varint(s.width).done()
+    return [values, numeric_stream(runs)], h
+
+
+def _rle_dec(outs, header):
+    values, runs = outs
+    r = HeaderReader(header)
+    stype = SType(r.u8())
+    width = r.varint()
+    r.expect_end()
+    w = width if stype != SType.SERIAL else 1
+    mat = np.frombuffer(values.content_bytes(), dtype=np.uint8).reshape(-1, w)
+    rep = np.repeat(mat, runs.data.astype(np.int64), axis=0).reshape(-1)
+    return [from_wire(stype, width, rep.tobytes(), None)]
+
+
+register_codec(
+    CodecSpec(
+        "rle",
+        codec_id=7,
+        encode=_rle_enc,
+        decode=_rle_dec,
+        n_outputs=2,
+        doc="run-length: (values, u32 run lengths) (paper §II-C)",
+    )
+)
+
+
+# ------------------------------------------------------------------ tokenize
+def _tokenize_enc(streams, params):
+    s = streams[0]
+    if s.stype == SType.STRING:
+        items = s.to_strings()
+        seen = {}
+        order: List[bytes] = []
+        idx = np.empty(len(items), dtype=np.int64)
+        for i, it in enumerate(items):
+            j = seen.get(it)
+            if j is None:
+                j = len(order)
+                seen[it] = j
+                order.append(it)
+            idx[i] = j
+        from repro.core.message import strings as mk_strings
+
+        alphabet = mk_strings(order)
+        # indices are ALWAYS u32: predictable output types keep the graph
+        # type system static (downstream bitpack/range_pack reclaim the bits)
+        indices = numeric_stream(idx.astype(np.uint32))
+        h = HeaderWriter().u8(1).u8(4).done()
+        return [alphabet, indices], h
+    raw = np.frombuffer(s.content_bytes(), dtype=np.uint8)
+    w = s.width if s.stype != SType.SERIAL else 1
+    mat = raw.reshape(-1, w)
+    # first-occurrence ordering keeps the alphabet stable for delta-friendly ids
+    uniq, first_idx, inv = np.unique(mat, axis=0, return_index=True, return_inverse=True)
+    order = np.argsort(first_idx, kind="stable")
+    rank = np.empty_like(order)
+    rank[order] = np.arange(order.size)
+    inv = rank[inv]
+    uniq = uniq[order]
+    alphabet = from_wire(s.stype, s.width, np.ascontiguousarray(uniq).tobytes(), None)
+    indices = numeric_stream(inv.astype(np.uint32))  # always u32 (see above)
+    h = HeaderWriter().u8(0).u8(4).done()
+    return [alphabet, indices], h
+
+
+def _tokenize_dec(outs, header):
+    alphabet, indices = outs
+    r = HeaderReader(header)
+    is_string = r.u8()
+    _iw = r.u8()
+    r.expect_end()
+    idx = indices.data.astype(np.int64)
+    if is_string:
+        items = alphabet.to_strings()
+        from repro.core.message import strings as mk_strings
+
+        return [mk_strings([items[i] for i in idx.tolist()])]
+    w = alphabet.width if alphabet.stype != SType.SERIAL else 1
+    mat = np.frombuffer(alphabet.content_bytes(), dtype=np.uint8).reshape(-1, w)
+    out = np.ascontiguousarray(mat[idx]).reshape(-1)
+    return [from_wire(alphabet.stype, alphabet.width, out.tobytes(), None)]
+
+
+register_codec(
+    CodecSpec(
+        "tokenize",
+        codec_id=9,
+        encode=_tokenize_enc,
+        decode=_tokenize_dec,
+        n_outputs=2,
+        min_version=2,
+        doc="(alphabet, indices) split — the paper's motivating codec (§III-C)",
+    )
+)

@@ -1,0 +1,154 @@
+"""Parser frontends (paper §IV "Frontend", §VI-C).
+
+``csv_split``     — lossless rectangular CSV -> per-column STRING streams.
+``parse_numeric`` — STRING of ASCII decimal ints -> (bitmap, i64 values,
+                    exception strings).  Canonical integers go numeric; any
+                    string that would not round-trip exactly stays an
+                    exception — losslessness beats parsing coverage.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.codec import CodecSpec, register_codec
+from repro.core.message import Stream, SType, strings as mk_strings
+
+from ._util import HeaderReader, HeaderWriter, numeric_stream
+
+
+# ----------------------------------------------------------------- csv_split
+def _csv_split_enc(streams, params):
+    s = streams[0]
+    if s.stype != SType.SERIAL:
+        raise ValueError("csv_split wants serial bytes")
+    sep = params.get("sep", ",")
+    sep_b = sep.encode() if isinstance(sep, str) else bytes([sep])
+    raw = s.data.tobytes()
+    trailing_nl = raw.endswith(b"\n")
+    body = raw[:-1] if trailing_nl else raw
+    lines = body.split(b"\n") if body else []
+    if not lines:
+        raise ValueError("csv_split: empty input")
+    rows = [ln.split(sep_b) for ln in lines]
+    n_cols = len(rows[0])
+    if any(len(r) != n_cols for r in rows):
+        raise ValueError("csv_split: ragged rows (rectangular CSV only)")
+    outs: List[Stream] = []
+    for c in range(n_cols):
+        outs.append(mk_strings([r[c] for r in rows]))
+    h = (
+        HeaderWriter()
+        .u8(sep_b[0])
+        .u8(1 if trailing_nl else 0)
+        .varint(n_cols)
+        .varint(len(rows))
+        .done()
+    )
+    return outs, h
+
+
+def _csv_split_dec(outs, header):
+    r = HeaderReader(header)
+    sep = bytes([r.u8()])
+    trailing_nl = r.u8()
+    n_cols = r.varint()
+    n_rows = r.varint()
+    r.expect_end()
+    cols = [o.to_strings() for o in outs]
+    if len(cols) != n_cols or any(len(c) != n_rows for c in cols):
+        raise ValueError("csv_split: corrupt columns")
+    lines = [sep.join(cols[c][i] for c in range(n_cols)) for i in range(n_rows)]
+    raw = b"\n".join(lines) + (b"\n" if trailing_nl else b"")
+    return [Stream(np.frombuffer(raw, dtype=np.uint8), SType.SERIAL, 1)]
+
+
+register_codec(
+    CodecSpec(
+        "csv_split",
+        codec_id=20,
+        encode=_csv_split_enc,
+        decode=_csv_split_dec,
+        n_outputs=-1,
+        min_version=2,
+        doc="rectangular CSV -> per-column string streams (frontend, §IV)",
+    )
+)
+
+
+# ------------------------------------------------------------- parse_numeric
+def _canonical_int(b: bytes):
+    """Return int value if `b` is a canonical decimal i64 rendering, else None."""
+    if not b or len(b) > 20:
+        return None
+    neg = b[0:1] == b"-"
+    digits = b[1:] if neg else b
+    if not digits or not digits.isdigit():
+        return None
+    if len(digits) > 1 and digits[0:1] == b"0":
+        return None  # leading zeros don't round-trip
+    if neg and digits == b"0":
+        return None  # "-0" doesn't round-trip
+    v = int(b)
+    if not (-(1 << 63) <= v < (1 << 63)):
+        return None
+    return v
+
+
+def _parse_numeric_enc(streams, params):
+    s = streams[0]
+    if s.stype != SType.STRING:
+        raise ValueError("parse_numeric wants a string stream")
+    items = s.to_strings()
+    is_num = np.zeros(len(items), dtype=np.uint8)
+    values: List[int] = []
+    exceptions: List[bytes] = []
+    for i, it in enumerate(items):
+        v = _canonical_int(it)
+        if v is None:
+            exceptions.append(it)
+        else:
+            is_num[i] = 1
+            values.append(v)
+    vals = np.asarray(values, dtype=np.int64).view(np.uint64)
+    bitmap = np.packbits(is_num) if len(items) else np.zeros(0, np.uint8)
+    h = HeaderWriter().varint(len(items)).done()
+    return [
+        Stream(bitmap, SType.SERIAL, 1),
+        numeric_stream(vals),
+        mk_strings(exceptions),
+    ], h
+
+
+def _parse_numeric_dec(outs, header):
+    bitmap_s, vals_s, exc_s = outs
+    r = HeaderReader(header)
+    n = r.varint()
+    r.expect_end()
+    is_num = np.unpackbits(bitmap_s.data)[:n].astype(bool)
+    vals = vals_s.data.view(np.int64)
+    exceptions = exc_s.to_strings()
+    items: List[bytes] = []
+    vi = ei = 0
+    for i in range(n):
+        if is_num[i]:
+            items.append(str(int(vals[vi])).encode())
+            vi += 1
+        else:
+            items.append(exceptions[ei])
+            ei += 1
+    return [mk_strings(items)]
+
+
+register_codec(
+    CodecSpec(
+        "parse_numeric",
+        codec_id=19,
+        encode=_parse_numeric_enc,
+        decode=_parse_numeric_dec,
+        n_outputs=3,
+        min_version=2,
+        doc="ASCII ints -> (bitmap, i64 values, exceptions); lossless always",
+    )
+)

@@ -1,0 +1,142 @@
+"""Prebuilt compression graphs ("profiles") for common data families.
+
+These mirror OpenZL's shipped profiles: the §IV SAO graph, float/bfloat16
+checkpoint graphs (§VIII), a generic numeric graph, a text graph, and a CSV
+graph.  Profiles are ordinary Plans — serializable, trainable, composable.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.core.graph import GraphBuilder, Plan, pipeline
+
+__all__ = [
+    "generic_profile",
+    "numeric_profile",
+    "text_profile",
+    "float32_profile",
+    "bfloat16_profile",
+    "float64_profile",
+    "sao_profile",
+    "csv_profile",
+    "struct_profile",
+]
+
+
+def generic_profile() -> Plan:
+    g = GraphBuilder(1)
+    g.select("generic_auto", g.input(0))
+    return g.build("generic")
+
+
+def numeric_profile() -> Plan:
+    g = GraphBuilder(1)
+    g.select("numeric_auto", g.input(0))
+    return g.build("numeric")
+
+
+def text_profile(level: int = 6) -> Plan:
+    return pipeline(("zlib_backend", {"level": level}), name="text")
+
+
+def _float_profile(fmt: int, name: str) -> Plan:
+    """float_split -> per-plane backends (paper §VIII checkpoint trick).
+
+    signs: usually balanced -> store raw.  exponents: very low entropy -> fse.
+    mantissae: near-random low bytes; transpose exposes the near-constant top
+    byte(s) -> per-plane entropy choice.
+    """
+    g = GraphBuilder(1)
+    signs, exp, man = g.add("float_split", g.input(0), fmt=fmt)
+    g.select("bytes_auto", signs)
+    g.select("entropy_auto", exp)
+    g.select("numeric_auto", man)
+    return g.build(name)
+
+
+def float32_profile() -> Plan:
+    return _float_profile(2, "float32")
+
+
+def bfloat16_profile() -> Plan:
+    return _float_profile(0, "bfloat16")
+
+
+def float64_profile() -> Plan:
+    return _float_profile(3, "float64")
+
+
+# --------------------------------------------------------------- SAO (§IV)
+SAO_FIELDS = [  # (name, width-bytes) — 28-byte records, 6 fields
+    ("SRA0", 8),
+    ("SDEC0", 8),
+    ("IS", 2),
+    ("MAG", 2),
+    ("XRPM", 4),
+    ("XDPM", 4),
+]
+SAO_HEADER_BYTES = 28
+
+
+def sao_profile() -> Plan:
+    """The paper's worked example (§IV, Table I), as a graph:
+
+    header passthrough + field_split into the 6 star-record fields;
+    SRA0 (mostly sorted)  -> interpret u64 -> delta -> transpose_split -> entropy
+    SDEC0 (bounded)       -> interpret u64 -> transpose_split -> entropy/plane
+    IS/MAG/XRPM/XDPM (low cardinality) -> tokenize; alphabet and indices get
+    separate backends (sparse vs dense-bounded — paper §IV last bullet).
+    """
+    widths = [w for _, w in SAO_FIELDS]
+    rec = sum(widths)
+    g = GraphBuilder(1)
+    header, body = g.add(
+        "split_n", g.input(0), n_out=2, sizes=[SAO_HEADER_BYTES, -1]
+    )
+    # header: tiny, store raw
+    fields = g.add("field_split", body, n_out=len(widths), widths=widths)
+    sra0, sdec0, is_f, mag, xrpm, xdpm = fields
+
+    sra_num = g.add("interpret_numeric", sra0, width=8)
+    sra_d = g.add("delta", sra_num)
+    sra_planes = g.add("transpose_split", sra_d, n_out=8)
+    for p in sra_planes:
+        g.select("entropy_auto", p)
+
+    sdec_num = g.add("interpret_numeric", sdec0, width=8)
+    sdec_planes = g.add("transpose_split", sdec_num, n_out=8)
+    for p in sdec_planes:
+        g.select("entropy_auto", p)
+
+    for f, w in ((is_f, 2), (mag, 2), (xrpm, 4), (xdpm, 4)):
+        alpha, idx = g.add("tokenize", f)
+        g.add("transpose", alpha)  # sparse dictionary: byte planes then store
+        g.select("numeric_auto", idx)  # dense bounded ints
+    return g.build("sao")
+
+
+def csv_profile(n_cols: int, sep: str = ",") -> Plan:
+    """CSV frontend + per-column parse_numeric + auto backends (§VI-C)."""
+    g = GraphBuilder(1)
+    cols = g.add("csv_split", g.input(0), n_out=n_cols, sep=sep)
+    if isinstance(cols, int):
+        cols = [cols]
+    for c in cols:
+        bitmap, vals, exc = g.add("parse_numeric", c)
+        g.select("bytes_auto", bitmap)
+        g.select("numeric_auto", vals)
+        exc_content, exc_lens = g.add("string_split", exc)
+        g.select("bytes_auto", exc_content)
+        g.select("numeric_auto", exc_lens)
+    return g.build(f"csv{n_cols}")
+
+
+def struct_profile(widths: Sequence[int]) -> Plan:
+    """Generic record format: field_split + per-field auto backend."""
+    g = GraphBuilder(1)
+    fields = g.add("field_split", g.input(0), n_out=len(widths), widths=list(widths))
+    if isinstance(fields, int):
+        fields = [fields]
+    for f in fields:
+        g.select("generic_auto", f)
+    return g.build("struct" + "_".join(map(str, widths)))

@@ -1,0 +1,7 @@
+"""Architecture configs: one module per assigned arch (``--arch <id>``).
+
+  LM:     olmoe-1b-7b  kimi-k2-1t-a32b  yi-9b  h2o-danube-3-4b  llama3.2-1b
+  GNN:    graphcast
+  RecSys: xdeepfm  mind  sasrec  dcn-v2
+"""
+from .base import ArchSpec, ShapeSpec, all_archs, get_arch, register_arch  # noqa: F401

@@ -1,0 +1,32 @@
+"""DCN-v2 [arXiv:2008.13535; paper]: 13 dense + 26 sparse (embed 16),
+3 cross layers, MLP 1024-1024-512."""
+import dataclasses
+
+from repro.models.recsys import DCNv2Config
+
+from .base import ArchSpec, register_arch
+from .recsys_common import RECSYS_SHAPES
+
+CFG = DCNv2Config(
+    name="dcn-v2",
+    n_dense=13,
+    n_sparse=26,
+    vocab_per_field=1_000_000,
+    embed_dim=16,
+    n_cross_layers=3,
+    mlp_sizes=(1024, 1024, 512),
+)
+
+SPEC = register_arch(
+    ArchSpec(
+        arch_id="dcn-v2",
+        family="recsys",
+        source="arXiv:2008.13535; paper",
+        model_cfg=CFG,
+        shapes=RECSYS_SHAPES,
+        reduced_cfg=dataclasses.replace(
+            CFG, n_dense=3, n_sparse=4, vocab_per_field=100, embed_dim=4,
+            n_cross_layers=2, mlp_sizes=(16, 8),
+        ),
+    )
+)

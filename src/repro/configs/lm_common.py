@@ -1,0 +1,78 @@
+"""Shared shape set + input_specs for the LM-family transformers.
+
+Shapes (assignment): train_4k (train), prefill_32k (inference-prefill),
+decode_32k (one-token step with 32k KV cache), long_500k (524288-token
+decode — sub-quadratic attention only; full-attention archs carry an
+explicit skip reason, see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerConfig, init_kv_cache
+
+from .base import SDS, ArchSpec, ShapeSpec
+
+FULL_ATTN_SKIP = (
+    "long_500k requires sub-quadratic attention; this arch is pure full "
+    "attention (a 512k-KV full-attention decode is quadratic-cost) — skipped "
+    "per assignment, see DESIGN.md §5"
+)
+
+
+def lm_shapes(sub_quadratic: bool) -> tuple:
+    return (
+        ShapeSpec("train_4k", "train", {"seq_len": 4096, "global_batch": 256}),
+        ShapeSpec("prefill_32k", "prefill", {"seq_len": 32768, "global_batch": 32}),
+        ShapeSpec("decode_32k", "decode", {"seq_len": 32768, "global_batch": 128}),
+        ShapeSpec(
+            "long_500k",
+            "decode",
+            {"seq_len": 524288, "global_batch": 1},
+            skip=None if sub_quadratic else FULL_ATTN_SKIP,
+        ),
+    )
+
+
+def lm_input_specs(
+    cfg: TransformerConfig, shape: ShapeSpec, *, reduced: bool = False
+) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    S = shape.dims["seq_len"] if not reduced else min(shape.dims["seq_len"], 64)
+    B = shape.dims["global_batch"] if not reduced else min(shape.dims["global_batch"], 2)
+    if shape.kind == "train":
+        return {
+            "tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": SDS((B, S), jnp.int32)}
+    if shape.kind == "decode":
+        cache = jax.eval_shape(lambda: init_kv_cache(cfg, B, S))
+        return {
+            "cache": cache,
+            "tokens": SDS((B, 1), jnp.int32),
+            "position": SDS((), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+def reduced_lm(cfg: TransformerConfig) -> TransformerConfig:
+    """Smoke-test variant: same family/topology, tiny dims."""
+    return dataclasses.replace(
+        cfg,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        d_ff=128,
+        vocab=256,
+        n_experts=4 if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.n_experts else cfg.top_k,
+        sliding_window=16 if cfg.sliding_window else None,
+        remat=False,
+    )

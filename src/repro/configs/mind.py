@@ -1,0 +1,30 @@
+"""MIND [arXiv:1904.08030; unverified]: embed 64, 4 interest capsules,
+3 routing iterations, multi-interest retrieval; 1M-item catalogue."""
+import dataclasses
+
+from repro.models.recsys import MINDConfig
+
+from .base import ArchSpec, register_arch
+from .recsys_common import RECSYS_SHAPES
+
+CFG = MINDConfig(
+    name="mind",
+    n_items=1_000_000,
+    embed_dim=64,
+    n_interests=4,
+    capsule_iters=3,
+    seq_len=50,
+)
+
+SPEC = register_arch(
+    ArchSpec(
+        arch_id="mind",
+        family="recsys",
+        source="arXiv:1904.08030; unverified",
+        model_cfg=CFG,
+        shapes=RECSYS_SHAPES,
+        reduced_cfg=dataclasses.replace(
+            CFG, n_items=500, embed_dim=16, seq_len=10,
+        ),
+    )
+)

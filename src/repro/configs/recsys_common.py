@@ -1,0 +1,70 @@
+"""Shared shape set + input_specs for the recsys family.
+
+Shapes (assignment): train_batch (B=65,536 training), serve_p99 (B=512
+online), serve_bulk (B=262,144 offline scoring), retrieval_cand (one query
+against 1,000,000 candidates — a single batched matmul / bulk forward, never
+a loop)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from .base import SDS, ShapeSpec
+
+N_CANDIDATES = 1_000_000
+
+RECSYS_SHAPES = (
+    ShapeSpec("train_batch", "train", {"batch": 65_536}),
+    ShapeSpec("serve_p99", "serve", {"batch": 512}),
+    ShapeSpec("serve_bulk", "serve", {"batch": 262_144}),
+    ShapeSpec("retrieval_cand", "retrieval", {"batch": 1, "n_candidates": N_CANDIDATES}),
+)
+
+
+def _b(shape: ShapeSpec, reduced: bool) -> int:
+    return min(shape.dims.get("batch", 1), 8) if reduced else shape.dims.get("batch", 1)
+
+
+def _nc(shape: ShapeSpec, reduced: bool) -> int:
+    n = shape.dims.get("n_candidates", N_CANDIDATES)
+    return min(n, 64) if reduced else n
+
+
+def ctr_input_specs(
+    shape: ShapeSpec, n_sparse: int, n_dense: int = 0, *, reduced: bool = False
+) -> Dict[str, object]:
+    """xDeepFM / DCN-v2 style (sparse-field CTR models)."""
+    B = _b(shape, reduced)
+    if shape.kind == "retrieval":
+        # candidate scoring: item field varied across 1M candidates
+        specs = {
+            "base_ids": SDS((1, n_sparse), jnp.int32),
+            "candidates": SDS((_nc(shape, reduced),), jnp.int32),
+        }
+        if n_dense:
+            specs["dense"] = SDS((1, n_dense), jnp.float32)
+        return specs
+    specs = {"sparse_ids": SDS((B, n_sparse), jnp.int32)}
+    if n_dense:
+        specs["dense"] = SDS((B, n_dense), jnp.float32)
+    if shape.kind == "train":
+        specs["labels"] = SDS((B,), jnp.float32)
+    return specs
+
+
+def seq_input_specs(
+    shape: ShapeSpec, seq_len: int, *, reduced: bool = False
+) -> Dict[str, object]:
+    """SASRec / MIND style (sequential models)."""
+    B = _b(shape, reduced)
+    S = min(seq_len, 10) if reduced else seq_len
+    if shape.kind == "retrieval":
+        return {
+            "history": SDS((1, S), jnp.int32),
+            "candidates": SDS((_nc(shape, reduced),), jnp.int32),
+        }
+    specs = {"history": SDS((B, S), jnp.int32)}
+    if shape.kind == "train":
+        specs["target"] = SDS((B,), jnp.int32)
+    return specs

@@ -1,0 +1,30 @@
+"""SASRec [arXiv:1808.09781; paper]: embed 50, 2 blocks, 1 head, seq 50,
+self-attention over item history; 1M-item catalogue."""
+import dataclasses
+
+from repro.models.recsys import SASRecConfig
+
+from .base import ArchSpec, register_arch
+from .recsys_common import RECSYS_SHAPES
+
+CFG = SASRecConfig(
+    name="sasrec",
+    n_items=1_000_000,
+    embed_dim=50,
+    n_blocks=2,
+    n_heads=1,
+    seq_len=50,
+)
+
+SPEC = register_arch(
+    ArchSpec(
+        arch_id="sasrec",
+        family="recsys",
+        source="arXiv:1808.09781; paper",
+        model_cfg=CFG,
+        shapes=RECSYS_SHAPES,
+        reduced_cfg=dataclasses.replace(
+            CFG, n_items=500, embed_dim=16, seq_len=10,
+        ),
+    )
+)

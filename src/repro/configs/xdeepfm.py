@@ -1,0 +1,32 @@
+"""xDeepFM [arXiv:1803.05170; paper]: 39 sparse fields, embed 10, CIN
+200-200-200, DNN 400-400.  Criteo-scale hashed vocab 1e6/field: the 390M-row
+shared embedding table is the hot path (model-axis row sharding)."""
+import dataclasses
+
+from repro.models.recsys import XDeepFMConfig
+
+from .base import ArchSpec, register_arch
+from .recsys_common import RECSYS_SHAPES
+
+CFG = XDeepFMConfig(
+    name="xdeepfm",
+    n_sparse=39,
+    vocab_per_field=1_000_000,
+    embed_dim=10,
+    cin_layers=(200, 200, 200),
+    mlp_sizes=(400, 400),
+)
+
+SPEC = register_arch(
+    ArchSpec(
+        arch_id="xdeepfm",
+        family="recsys",
+        source="arXiv:1803.05170; paper",
+        model_cfg=CFG,
+        shapes=RECSYS_SHAPES,
+        reduced_cfg=dataclasses.replace(
+            CFG, n_sparse=5, vocab_per_field=100, embed_dim=4,
+            cin_layers=(8, 8), mlp_sizes=(16,),
+        ),
+    )
+)

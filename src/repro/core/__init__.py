@@ -1,0 +1,24 @@
+"""repro.core — the graph model of compression (paper §III).
+
+Public API:
+    Stream types ............ repro.core.message  (serial/numeric/struct/strings)
+    Codec registry .......... repro.core.codec
+    Graph authoring ......... repro.core.graph    (GraphBuilder, Plan, pipeline)
+    Selectors ............... repro.core.selector
+    Engine .................. repro.core.engine   (compress / decompress / Compressor)
+    Wire format ............. repro.core.wire
+    Serialized compressors .. repro.core.serialize
+    Format versioning ....... repro.core.versioning
+"""
+from .message import Stream, SType, serial, numeric, struct, strings  # noqa: F401
+from .graph import GraphBuilder, Plan, PlanNode, pipeline  # noqa: F401
+from .codec import CodecSpec, register_codec, get_codec, all_codecs  # noqa: F401
+from .selector import SelectorSpec, register_selector, get_selector  # noqa: F401
+from .engine import (  # noqa: F401
+    CompressionCtx,
+    Compressor,
+    compress,
+    decompress,
+    decompress_bytes,
+)
+from .versioning import CURRENT_FORMAT_VERSION, MIN_FORMAT_VERSION, VersionError  # noqa: F401

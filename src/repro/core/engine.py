@@ -1,0 +1,248 @@
+"""The execution engine: compress (with selector expansion) and the universal
+decoder (paper §III-D).
+
+Compression walks the plan in topological order, running codec encoders and
+expanding selectors recursively.  The result is a *resolved graph* — a linear
+record of (codec, input-edge-ids, n_out, header) — plus the terminal streams.
+Both are serialized by :mod:`repro.core.wire` into a self-describing frame.
+
+Decompression is purely procedural: parse the frame, then run codec decoders
+in reverse topological order.  No parameters, no selectors, no user code — any
+frame any graph ever produced decodes with this one function.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from . import wire
+from .codec import get_codec, get_codec_by_id
+from .graph import KIND_CODEC, KIND_SELECTOR, Plan
+from .message import Stream, serial
+from .selector import get_selector
+from .versioning import (
+    CURRENT_FORMAT_VERSION,
+    check_compress_version,
+    check_decode_version,
+)
+
+__all__ = [
+    "CompressionCtx",
+    "ResolvedNode",
+    "compress",
+    "decompress",
+    "decompress_bytes",
+    "Compressor",
+]
+
+
+@dataclass
+class CompressionCtx:
+    """Knobs visible to selectors during expansion."""
+
+    format_version: int = CURRENT_FORMAT_VERSION
+    level: int = 5  # 1 (fastest) .. 9 (smallest); selectors may consult this
+    extras: dict = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class ResolvedNode:
+    codec_id: int
+    inputs: Tuple[int, ...]
+    n_out: int
+    header: bytes
+
+
+class _Execution:
+    """Mutable state while compressing: resolved edge table + node list."""
+
+    def __init__(self, ctx: CompressionCtx):
+        self.ctx = ctx
+        self.edges: List[Stream] = []
+        self.consumed: List[bool] = []
+        self.nodes: List[ResolvedNode] = []
+
+    def new_edge(self, s: Stream) -> int:
+        self.edges.append(s)
+        self.consumed.append(False)
+        return len(self.edges) - 1
+
+    def consume(self, e: int) -> Stream:
+        if self.consumed[e]:
+            raise AssertionError(f"edge {e} consumed twice at runtime")
+        self.consumed[e] = True
+        return self.edges[e]
+
+    def run_plan(self, plan: Plan, input_edge_ids: Sequence[int], depth: int = 0):
+        if depth > 64:
+            raise RecursionError("selector expansion too deep (cycle?)")
+        if len(input_edge_ids) != plan.n_inputs:
+            raise ValueError(
+                f"plan {plan.name!r} wants {plan.n_inputs} inputs,"
+                f" got {len(input_edge_ids)}"
+            )
+        emap: Dict[int, int] = {i: eid for i, eid in enumerate(input_edge_ids)}
+        next_plan_edge = plan.n_inputs
+        for node in plan.nodes:
+            in_ids = [emap[e] for e in node.inputs]
+            if node.kind == KIND_CODEC:
+                spec = get_codec(node.name)
+                if spec.min_version > self.ctx.format_version:
+                    raise ValueError(
+                        f"codec {node.name!r} requires format version"
+                        f" >= {spec.min_version}, compressing at"
+                        f" {self.ctx.format_version}"
+                    )
+                ins = [self.consume(e) for e in in_ids]
+                outs, header = spec.run_encode(ins, node.param_dict())
+                if len(outs) != node.n_out:
+                    raise AssertionError(
+                        f"codec {node.name}: declared n_out={node.n_out},"
+                        f" produced {len(outs)}"
+                    )
+                out_ids = [self.new_edge(o) for o in outs]
+                self.nodes.append(
+                    ResolvedNode(spec.codec_id, tuple(in_ids), len(outs), header)
+                )
+                for k, oid in enumerate(out_ids):
+                    emap[next_plan_edge + k] = oid
+                next_plan_edge += node.n_out
+            else:  # selector: expand recursively
+                sel = get_selector(node.name)
+                ins = [self.edges[e] for e in in_ids]  # peek, not consume
+                subplan = sel.fn(ins, node.param_dict(), self.ctx).validate()
+                self.run_plan(subplan, in_ids, depth + 1)
+
+
+def compress(
+    plan: Plan,
+    inputs: Union[Stream, bytes, Sequence[Stream]],
+    *,
+    ctx: Optional[CompressionCtx] = None,
+) -> bytes:
+    """Compress ``inputs`` with ``plan`` into a self-describing frame."""
+    ctx = ctx or CompressionCtx()
+    check_compress_version(ctx.format_version)
+    if isinstance(inputs, (bytes, bytearray, memoryview)):
+        inputs = [serial(inputs)]
+    elif isinstance(inputs, Stream):
+        inputs = [inputs]
+    inputs = [s.validate() for s in inputs]
+    plan.validate()
+
+    ex = _Execution(ctx)
+    in_ids = [ex.new_edge(s) for s in inputs]
+    ex.run_plan(plan, in_ids)
+
+    stored = [
+        (eid, ex.edges[eid]) for eid in range(len(ex.edges)) if not ex.consumed[eid]
+    ]
+    return wire.write_frame(
+        ctx.format_version, len(inputs), ex.nodes, stored
+    )
+
+
+def decompress(frame: bytes) -> List[Stream]:
+    """The universal decoder (paper §III-D): frame -> regenerated inputs."""
+    version, n_inputs, nodes, stored = wire.read_frame(frame)
+    check_decode_version(version)
+
+    edges: Dict[int, Stream] = dict(stored)
+    # recompute each node's output edge ids (sequential assignment)
+    counter = n_inputs
+    out_ids_per_node: List[Tuple[int, ...]] = []
+    for node in nodes:
+        out_ids_per_node.append(tuple(range(counter, counter + node.n_out)))
+        counter += node.n_out
+
+    for node, out_ids in zip(reversed(nodes), reversed(out_ids_per_node)):
+        spec = get_codec_by_id(node.codec_id)
+        if spec.min_version > version:
+            raise ValueError(
+                f"frame v{version} contains codec {spec.name!r}"
+                f" (min_version {spec.min_version}) — corrupt frame?"
+            )
+        try:
+            outs = [edges.pop(e) for e in out_ids]
+        except KeyError as err:
+            raise ValueError(f"corrupt frame: missing edge {err}") from None
+        ins = spec.run_decode(outs, node.header)
+        if len(ins) != len(node.inputs):
+            raise ValueError(
+                f"codec {spec.name} regenerated {len(ins)} inputs,"
+                f" frame says {len(node.inputs)}"
+            )
+        for eid, s in zip(node.inputs, ins):
+            if eid in edges:
+                raise ValueError(f"corrupt frame: edge {eid} regenerated twice")
+            edges[eid] = s
+
+    try:
+        return [edges[i] for i in range(n_inputs)]
+    except KeyError as err:
+        raise ValueError(f"corrupt frame: input edge {err} not regenerated") from None
+
+
+def decompress_bytes(frame: bytes) -> bytes:
+    """Single-input convenience: regenerate and return the raw content bytes."""
+    (out,) = decompress(frame)
+    return out.content_bytes()
+
+
+class Compressor:
+    """A deployable compressor: plan + default ctx + stats (public API facade)."""
+
+    def __init__(
+        self,
+        plan: Plan,
+        *,
+        format_version: int = CURRENT_FORMAT_VERSION,
+        level: int = 5,
+        name: str = "",
+    ):
+        self.plan = plan.validate()
+        self.format_version = check_compress_version(format_version)
+        self.level = level
+        self.name = name or plan.name
+
+    def compress(self, inputs) -> bytes:
+        ctx = CompressionCtx(self.format_version, self.level)
+        return compress(self.plan, inputs, ctx=ctx)
+
+    @staticmethod
+    def decompress(frame: bytes) -> List[Stream]:
+        return decompress(frame)
+
+    def roundtrip_check(self, inputs) -> bool:
+        """Encode+decode and verify bit-exactness (used by tests & the trainer)."""
+        if isinstance(inputs, (bytes, bytearray)):
+            inputs = [serial(inputs)]
+        elif isinstance(inputs, Stream):
+            inputs = [inputs]
+        frame = self.compress(list(inputs))
+        outs = decompress(frame)
+        if len(outs) != len(inputs):
+            return False
+        for a, b in zip(inputs, outs):
+            if a.stype != b.stype or a.width != b.width:
+                return False
+            if a.content_bytes() != b.content_bytes():
+                return False
+            if a.stype.name == "STRING" and not np.array_equal(a.lengths, b.lengths):
+                return False
+        return True
+
+    def serialize(self) -> bytes:
+        from .serialize import serialize_plan
+
+        return serialize_plan(self.plan, name=self.name)
+
+    @staticmethod
+    def deserialize(blob: bytes) -> "Compressor":
+        from .serialize import deserialize_plan
+
+        plan, meta = deserialize_plan(blob)
+        return Compressor(plan, name=meta.get("name", ""))

@@ -1,0 +1,204 @@
+"""Typed message streams — the edges of the compression graph.
+
+The paper (§III-A, §V-A) defines messages as elements of *message sets* and
+approximates arbitrary sets with a 4-entry type system.  We mirror that:
+
+  * ``SERIAL``   — opaque bytes.
+  * ``STRUCT``   — fixed-size ``width``-byte records (``len(data) % width == 0``).
+  * ``NUMERIC``  — host-endian unsigned/signed integers of width 1/2/4/8.
+  * ``STRING``   — a sequence of byte strings (content bytes + a lengths array).
+
+Host-side streams are numpy arrays (exact sizes).  The device path
+(``repro.kernels``) uses the same layout with capacity-padded jnp buffers and a
+dynamic length scalar; conversion helpers live here so both worlds agree.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field, replace
+from typing import Iterable, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "SType",
+    "Stream",
+    "serial",
+    "numeric",
+    "struct",
+    "strings",
+]
+
+
+class SType(enum.IntEnum):
+    """Wire-stable message type tags (values are serialized — never renumber)."""
+
+    SERIAL = 0
+    STRUCT = 1
+    NUMERIC = 2
+    STRING = 3
+
+
+_NUMERIC_DTYPES = {
+    1: np.dtype(np.uint8),
+    2: np.dtype(np.uint16),
+    4: np.dtype(np.uint32),
+    8: np.dtype(np.uint64),
+}
+_SIGNED_DTYPES = {
+    1: np.dtype(np.int8),
+    2: np.dtype(np.int16),
+    4: np.dtype(np.int32),
+    8: np.dtype(np.int64),
+}
+
+
+@dataclass(frozen=True)
+class Stream:
+    """One message: a typed, immutable view over a flat buffer.
+
+    ``data`` is always 1-D.  For SERIAL/STRUCT/STRING it is uint8; for NUMERIC
+    it is the (un)signed integer dtype of ``width`` bytes.  ``lengths`` is only
+    present for STRING streams (uint32 per-string byte lengths; ``data`` is the
+    concatenated contents).
+    """
+
+    data: np.ndarray
+    stype: SType
+    width: int = 1
+    lengths: Optional[np.ndarray] = None
+
+    # ---------------------------------------------------------------- helpers
+    @property
+    def nbytes(self) -> int:
+        n = int(self.data.nbytes)
+        if self.stype == SType.STRING and self.lengths is not None:
+            n += int(self.lengths.nbytes)
+        return n
+
+    @property
+    def n_elts(self) -> int:
+        if self.stype == SType.SERIAL:
+            return int(self.data.size)
+        if self.stype == SType.STRUCT:
+            return int(self.data.size) // self.width
+        if self.stype == SType.NUMERIC:
+            return int(self.data.size)
+        return int(self.lengths.size) if self.lengths is not None else 0
+
+    def validate(self) -> "Stream":
+        if self.data.ndim != 1:
+            raise ValueError(f"stream data must be 1-D, got {self.data.shape}")
+        if self.stype in (SType.SERIAL, SType.STRUCT, SType.STRING):
+            if self.data.dtype != np.uint8:
+                raise ValueError(f"{self.stype.name} stream must be uint8")
+        if self.stype == SType.STRUCT:
+            if self.width < 1 or self.data.size % self.width:
+                raise ValueError(
+                    f"struct({self.width}) stream length {self.data.size} not divisible"
+                )
+        if self.stype == SType.NUMERIC:
+            if self.width not in _NUMERIC_DTYPES:
+                raise ValueError(f"numeric width must be 1/2/4/8, got {self.width}")
+            if self.data.dtype.itemsize != self.width:
+                raise ValueError(
+                    f"numeric({self.width}) carries dtype {self.data.dtype}"
+                )
+        if self.stype == SType.STRING:
+            if self.lengths is None:
+                raise ValueError("string stream requires lengths")
+            if int(self.lengths.sum()) != self.data.size:
+                raise ValueError("string lengths do not sum to content size")
+        return self
+
+    # ------------------------------------------------------- representations
+    def content_bytes(self) -> bytes:
+        """Raw little-endian bytes of the content buffer (for wire storage)."""
+        arr = self.data
+        if arr.dtype.byteorder == ">":  # normalise to LE — host-endian per paper
+            arr = arr.astype(arr.dtype.newbyteorder("<"))
+        return arr.tobytes()
+
+    def as_serial(self) -> "Stream":
+        """Reinterpret the content as opaque bytes (lossless view change)."""
+        return Stream(
+            np.frombuffer(self.content_bytes(), dtype=np.uint8), SType.SERIAL, 1
+        )
+
+    def as_unsigned(self) -> "Stream":
+        """View NUMERIC data as unsigned (bit-preserving)."""
+        if self.stype != SType.NUMERIC:
+            raise ValueError("as_unsigned on non-numeric stream")
+        return replace(self, data=self.data.view(_NUMERIC_DTYPES[self.width]))
+
+    def as_signed(self) -> "Stream":
+        if self.stype != SType.NUMERIC:
+            raise ValueError("as_signed on non-numeric stream")
+        return replace(self, data=self.data.view(_SIGNED_DTYPES[self.width]))
+
+    def to_strings(self) -> List[bytes]:
+        if self.stype != SType.STRING:
+            raise ValueError("to_strings on non-string stream")
+        out, off = [], 0
+        buf = self.data.tobytes()
+        for ln in self.lengths.tolist():
+            out.append(buf[off : off + ln])
+            off += ln
+        return out
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (
+            f"Stream({self.stype.name}, w={self.width}, n={self.n_elts},"
+            f" {self.nbytes}B)"
+        )
+
+
+# ------------------------------------------------------------------ builders
+def serial(data) -> Stream:
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        arr = np.frombuffer(bytes(data), dtype=np.uint8)
+    else:
+        arr = np.asarray(data, dtype=np.uint8).ravel()
+    return Stream(arr, SType.SERIAL, 1).validate()
+
+
+def numeric(arr) -> Stream:
+    """Build a NUMERIC stream.  Floats are bit-cast to same-width unsigned ints
+    (the paper's numeric type is integral; float semantics are recovered by
+    float-aware codecs such as ``float_split``)."""
+    a = np.asarray(arr)
+    if a.dtype.kind == "f":
+        a = a.view(_NUMERIC_DTYPES[a.dtype.itemsize])
+    if a.dtype.kind not in "iu":
+        raise ValueError(f"numeric stream from dtype {a.dtype}?")
+    if a.dtype.itemsize not in _NUMERIC_DTYPES:
+        raise ValueError(f"unsupported numeric width {a.dtype.itemsize}")
+    if a.dtype.byteorder == ">":
+        a = a.astype(a.dtype.newbyteorder("<"))
+    return Stream(np.ascontiguousarray(a.ravel()), SType.NUMERIC, a.dtype.itemsize).validate()
+
+
+def struct(data, width: int) -> Stream:
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        arr = np.frombuffer(bytes(data), dtype=np.uint8)
+    else:
+        arr = np.asarray(data, dtype=np.uint8).ravel()
+    return Stream(arr, SType.STRUCT, width).validate()
+
+
+def strings(items: Iterable[bytes]) -> Stream:
+    items = list(items)
+    lens = np.asarray([len(s) for s in items], dtype=np.uint32)
+    content = np.frombuffer(b"".join(items), dtype=np.uint8)
+    return Stream(content, SType.STRING, 1, lens).validate()
+
+
+def from_wire(
+    stype: SType, width: int, payload: bytes, lengths: Optional[np.ndarray]
+) -> Stream:
+    """Rebuild a stream from wire-format fields."""
+    if stype == SType.NUMERIC:
+        data = np.frombuffer(payload, dtype=_NUMERIC_DTYPES[width])
+        return Stream(data, stype, width).validate()
+    data = np.frombuffer(payload, dtype=np.uint8)
+    return Stream(data, stype, width, lengths).validate()

@@ -1,0 +1,64 @@
+"""Function graphs / selectors (paper §III-E, §V-A "Dynamism").
+
+A selector is a named function ``fn(streams, params, ctx) -> Plan`` that picks
+a sub-graph for its inputs at compression time.  Expansion happens during
+encoding; the wire frame only ever records the fully *resolved* graph, so the
+decoder never runs selectors — this is what keeps the decoder universal.
+
+Selectors are registered by name so that serialized compressors (paper §V-D)
+can reference them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Sequence
+
+from .graph import Plan
+from .message import Stream
+
+__all__ = ["SelectorSpec", "register_selector", "get_selector", "all_selectors"]
+
+SelectorFn = Callable[[Sequence[Stream], dict, "CompressionCtx"], Plan]
+
+
+@dataclass(frozen=True)
+class SelectorSpec:
+    name: str
+    fn: SelectorFn
+    n_inputs: int = 1  # -1 => variadic
+    doc: str = ""
+
+
+_SELECTORS: Dict[str, SelectorSpec] = {}
+
+
+def register_selector(spec: SelectorSpec) -> SelectorSpec:
+    if spec.name in _SELECTORS:
+        raise ValueError(f"duplicate selector {spec.name!r}")
+    _SELECTORS[spec.name] = spec
+    return spec
+
+
+def get_selector(name: str) -> SelectorSpec:
+    _ensure_loaded()
+    try:
+        return _SELECTORS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown selector {name!r}; known: {sorted(_SELECTORS)}"
+        ) from None
+
+
+def all_selectors() -> Dict[str, SelectorSpec]:
+    _ensure_loaded()
+    return dict(_SELECTORS)
+
+
+_loaded = False
+
+
+def _ensure_loaded() -> None:
+    global _loaded
+    if not _loaded:
+        _loaded = True
+        from repro import codecs as _  # noqa: F401  (registers standard selectors)

@@ -1,0 +1,62 @@
+"""Serialized compressors (paper §V-D).
+
+A plan — codec names, params, topology, selector references — serializes to a
+compact msgpack blob (<2 KB for realistic graphs, matching the paper's SAO
+figure) that can be shipped around and deployed like a config file.  The wire
+*frame* format (``wire.py``) is independent: frames embed resolved graphs and
+never need this module to decode.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import msgpack
+
+from .graph import KIND_CODEC, KIND_SELECTOR, Plan, PlanNode, _freeze, _thaw
+
+SERIAL_VERSION = 1
+
+__all__ = ["serialize_plan", "deserialize_plan"]
+
+
+def plan_to_dict(plan: Plan, name: str = "") -> dict:
+    return {
+        "v": SERIAL_VERSION,
+        "name": name or plan.name,
+        "n_inputs": plan.n_inputs,
+        "nodes": [
+            {
+                "k": 0 if n.kind == KIND_CODEC else 1,
+                "c": n.name,
+                "i": list(n.inputs),
+                "o": n.n_out,
+                "p": n.param_dict(),
+            }
+            for n in plan.nodes
+        ],
+    }
+
+
+def plan_from_dict(d: dict) -> Tuple[Plan, dict]:
+    if d.get("v") != SERIAL_VERSION:
+        raise ValueError(f"unsupported serialized-compressor version {d.get('v')}")
+    nodes = tuple(
+        PlanNode(
+            KIND_CODEC if nd["k"] == 0 else KIND_SELECTOR,
+            nd["c"],
+            tuple(nd["i"]),
+            nd["o"],
+            _freeze(nd.get("p") or {}),
+        )
+        for nd in d["nodes"]
+    )
+    plan = Plan(d["n_inputs"], nodes, d.get("name", "")).validate()
+    return plan, {"name": d.get("name", "")}
+
+
+def serialize_plan(plan: Plan, name: str = "") -> bytes:
+    return msgpack.packb(plan_to_dict(plan, name), use_bin_type=True)
+
+
+def deserialize_plan(blob: bytes) -> Tuple[Plan, dict]:
+    return plan_from_dict(msgpack.unpackb(blob, raw=False))

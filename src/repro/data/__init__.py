@@ -1,0 +1,5 @@
+"""Data pipeline: synthetic generators, OpenZL-compressed shard store,
+straggler-tolerant prefetcher, GNN neighbour sampler."""
+from .pipeline import Prefetcher, Straggler  # noqa: F401
+from .sampler import CSRGraph, sample_subgraph  # noqa: F401
+from .shard_store import CompressedShardStore  # noqa: F401

@@ -1,0 +1,107 @@
+"""Real neighbour sampler for the GNN ``minibatch_lg`` shape (fanout 15, 10).
+
+CSR over the full edge list; per batch: uniform fanout sampling per hop,
+padded to static shapes (XLA), with edge/node masks.  GraphSAGE-style.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class CSRGraph:
+    indptr: np.ndarray  # (N+1,)
+    indices: np.ndarray  # (E,) neighbour ids
+    n_nodes: int
+
+    @staticmethod
+    def from_edges(edges: np.ndarray, n_nodes: int) -> "CSRGraph":
+        src, dst = edges[:, 0], edges[:, 1]
+        order = np.argsort(src, kind="stable")
+        sorted_src = src[order]
+        indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+        counts = np.bincount(sorted_src, minlength=n_nodes)
+        np.cumsum(counts, out=indptr[1:])
+        return CSRGraph(indptr, dst[order].astype(np.int32), n_nodes)
+
+    def sample_neighbors(self, nodes: np.ndarray, fanout: int, rng) -> Tuple[np.ndarray, np.ndarray]:
+        """Uniform fanout sample -> (edges (len(nodes)*fanout, 2), mask)."""
+        deg = self.indptr[nodes + 1] - self.indptr[nodes]
+        # random offsets within each node's neighbour list
+        offs = (rng.random((nodes.shape[0], fanout)) * np.maximum(deg, 1)[:, None]).astype(np.int64)
+        idx = self.indptr[nodes][:, None] + offs
+        nbrs = self.indices[np.minimum(idx, len(self.indices) - 1)]
+        valid = (deg[:, None] > 0)
+        src = nbrs.reshape(-1)
+        dst = np.repeat(nodes, fanout)
+        mask = np.broadcast_to(valid, (nodes.shape[0], fanout)).reshape(-1)
+        edges = np.stack([src, dst], axis=1).astype(np.int32)
+        return edges, mask.astype(np.float32)
+
+
+def sample_subgraph(
+    graph: CSRGraph,
+    node_feats: np.ndarray,
+    targets: np.ndarray,
+    seeds: np.ndarray,
+    fanouts: List[int],
+    *,
+    pad_nodes: int,
+    pad_edges: int,
+    seed: int = 0,
+) -> Dict[str, np.ndarray]:
+    """Multi-hop sampled subgraph with LOCAL node ids, padded to static
+    shapes.  Seeds occupy local ids [0, len(seeds)); node_mask marks them
+    (the loss is computed on seeds only)."""
+    rng = np.random.default_rng(seed)
+    frontier = seeds.astype(np.int64)
+    all_edges = []
+    all_masks = []
+    layer_nodes = [seeds.astype(np.int64)]
+    for f in fanouts:
+        edges, mask = graph.sample_neighbors(frontier, f, rng)
+        all_edges.append(edges)
+        all_masks.append(mask)
+        frontier = np.unique(edges[mask > 0, 0])
+        layer_nodes.append(frontier)
+    # global -> local remap (seeds first), fully vectorized
+    global_ids = np.unique(np.concatenate(layer_nodes))
+    rest = np.setdiff1d(global_ids, seeds, assume_unique=False)
+    ordered = np.concatenate([seeds, rest])
+    n_real = len(ordered)
+    sort_idx = np.argsort(ordered, kind="stable")
+    sorted_vals = ordered[sort_idx]
+    edges_g = np.concatenate(all_edges) if all_edges else np.zeros((0, 2), np.int64)
+    emask = np.concatenate(all_masks) if all_masks else np.zeros(0, np.float32)
+    # masked (invalid) edges may reference unsampled nodes: zero them first
+    edges_g = np.where(emask[:, None] > 0, edges_g, ordered[0] if n_real else 0)
+
+    def to_local(g):
+        pos = np.searchsorted(sorted_vals, g)
+        return sort_idx[np.minimum(pos, n_real - 1)]
+
+    edges_l = np.stack([to_local(edges_g[:, 0]), to_local(edges_g[:, 1])], axis=1)
+    # pad to static shapes
+    nodes_out = np.zeros((pad_nodes, node_feats.shape[1]), np.float32)
+    nodes_out[:n_real] = node_feats[ordered]
+    tgt_out = np.zeros((pad_nodes, targets.shape[1]), np.float32)
+    tgt_out[:n_real] = targets[ordered]
+    nmask = np.zeros(pad_nodes, np.float32)
+    nmask[: len(seeds)] = 1.0  # loss on seeds
+    e_out = np.zeros((pad_edges, 2), np.int32)
+    m_out = np.zeros(pad_edges, np.float32)
+    ne = min(edges_l.shape[0], pad_edges)
+    e_out[:ne] = edges_l[:ne]
+    m_out[:ne] = emask[:ne]
+    return {
+        "nodes": nodes_out,
+        "edges": e_out,
+        "edge_feats": np.zeros((pad_edges, 4), np.float32),
+        "edge_mask": m_out,
+        "node_mask": nmask,
+        "targets": tgt_out,
+        "n_real_nodes": n_real,
+    }

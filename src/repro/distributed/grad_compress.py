@@ -1,0 +1,121 @@
+"""Compressed gradient collectives (beyond-paper distributed optimization).
+
+The cross-pod data-parallel all-reduce is the collective-bound term of
+multi-pod training (DCN links are ~10x slower than ICI).  Three policies:
+
+  none    — fp32 psum (baseline)
+  bf16    — cast to bf16 before the pod psum: wire bytes ÷2, error ~1e-3 rel
+  int8_ef — per-block (256) absmax int8 quantization with ERROR FEEDBACK:
+            wire bytes ÷4 (+1/64 for scales); the quantization residual is
+            carried to the next step, so the *accumulated* update is unbiased
+            (1-bit Adam / EF-SGD lineage).
+
+These run inside shard_map over the 'pod' axis; within a pod the usual
+XLA-SPMD sharding applies untouched.  EXPERIMENTS.md §Perf measures the
+collective-byte reduction on the lowered HLO.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8_blockwise(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (any shape) -> (int8 of same size padded to BLOCK, f32 scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)]) if pad else flat
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127).astype(
+        jnp.int8
+    )
+    return q, scale[:, 0]
+
+
+def dequantize_int8_blockwise(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def _all_gather_sum(g: jax.Array, axis_name: str, wire_dtype=None) -> jax.Array:
+    """psum expressed as all_gather + local sum.  Semantically identical;
+    chosen so all three policies differ ONLY in the wire payload dtype
+    (also dodges an XLA crash for psum under partial-manual shard_map)."""
+    if wire_dtype is None:
+        gathered = jax.lax.all_gather(g, axis_name)
+        return gathered.astype(jnp.float32).sum(axis=0).astype(g.dtype)
+    # route the narrow payload through an INTEGER bitcast: XLA's simplifier
+    # folds bf16->f32 convert pairs (re-widening the wire), but never folds
+    # through integer bitcasts
+    payload = jax.lax.bitcast_convert_type(g.astype(wire_dtype), jnp.int16)
+    gathered = jax.lax.all_gather(payload, axis_name)
+    back = jax.lax.bitcast_convert_type(gathered, wire_dtype)
+    return back.astype(jnp.float32).sum(axis=0).astype(g.dtype)
+
+
+def psum_none(tree: Any, axis_name: str) -> Any:
+    return jax.tree.map(lambda g: _all_gather_sum(g, axis_name), tree)
+
+
+def psum_bf16(tree: Any, axis_name: str) -> Any:
+    return jax.tree.map(
+        lambda g: _all_gather_sum(g, axis_name, jnp.bfloat16), tree
+    )
+
+
+def psum_int8_ef(tree: Any, ef_state: Any, axis_name: str) -> Tuple[Any, Any]:
+    """Error-feedback int8 all-reduce.  Returns (reduced_tree, new_ef_state).
+
+    Each device quantizes (grad + residual); the int8 payload crosses the
+    wire (psum over the pod axis accumulates int32-safe by upcasting AFTER
+    the all-gather of int8 shards); the residual stays local.
+    """
+
+    def red(g, ef):
+        g32 = g.astype(jnp.float32) + ef
+        q, scale = quantize_int8_blockwise(g32)
+        local_dq = dequantize_int8_blockwise(q, scale, g32.shape)
+        residual = g32 - local_dq  # error feedback
+        # wire: int8 payload + f32/BLOCK scales, gathered across pods
+        q_all = jax.lax.all_gather(q, axis_name)  # (P, nblk, BLOCK) int8
+        s_all = jax.lax.all_gather(scale, axis_name)  # (P, nblk) f32
+        summed = jnp.einsum(
+            "pbk,pb->bk", q_all.astype(jnp.float32), s_all
+        ).reshape(-1)
+        n = 1
+        for d in g32.shape:
+            n *= d
+        return summed[:n].reshape(g32.shape).astype(g.dtype), residual
+
+    flat_g, tree_def = jax.tree.flatten(tree)
+    flat_e = tree_def.flatten_up_to(ef_state)
+    out = [red(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        tree_def.unflatten([o[0] for o in out]),
+        tree_def.unflatten([o[1] for o in out]),
+    )
+
+
+def init_ef_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(tree, axis_name: str, method: str, ef_state=None):
+    if method == "none":
+        return psum_none(tree, axis_name), ef_state
+    if method == "bf16":
+        return psum_bf16(tree, axis_name), ef_state
+    if method == "int8_ef":
+        if ef_state is None:
+            raise ValueError("int8_ef needs error-feedback state")
+        return psum_int8_ef(tree, ef_state, axis_name)
+    raise ValueError(method)

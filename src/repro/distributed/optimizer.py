@@ -1,0 +1,151 @@
+"""Optimizers from scratch (no optax in this container): AdamW and Adafactor.
+
+Optimizer state mirrors the parameter tree, so it inherits the parameter
+sharding (FSDP'd params => fully sharded optimizer state, ZeRO-style).
+Adafactor's factored second moment (row/col statistics) is what makes the
+1T-param kimi config trainable at 512 chips (DESIGN.md §4): m in bf16,
+v factored — ~2.25 bytes/param of optimizer state instead of 8.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]  # params -> state
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params) -> (params, state)
+
+
+# ------------------------------------------------------------------- AdamW
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1**c
+        bc2 = 1.0 - b2**c
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            newp = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), m.astype(p.dtype if p.dtype == jnp.bfloat16 else jnp.float32), v.astype(jnp.float32)
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = tree.flatten_up_to(grads)
+        flat_m = tree.flatten_up_to(state["m"])
+        flat_v = tree.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tree.unflatten([o[0] for o in out])
+        new_m = tree.unflatten([o[1] for o in out])
+        new_v = tree.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer("adamw", init, update)
+
+
+# --------------------------------------------------------------- Adafactor
+def adafactor(
+    lr: float = 1e-3,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    momentum_dtype=jnp.bfloat16,
+) -> Optimizer:
+    """Shazeer & Stern (2018): factored second moments for >=2-D params."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf_state(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row stats
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    "m": jnp.zeros(p.shape, momentum_dtype),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32), "m": jnp.zeros(p.shape, momentum_dtype)}
+
+        return {
+            "per_param": jax.tree.map(leaf_state, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta = 1.0 - c**-decay  # increasing decay schedule
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps
+                    )
+                )
+                step = g32 / jnp.maximum(denom, eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                step = g32 / (jnp.sqrt(v) + eps)
+                new_s = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + eps)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            m = 0.9 * s["m"].astype(jnp.float32) + 0.1 * step
+            new_s["m"] = m.astype(momentum_dtype)
+            newp = (p.astype(jnp.float32) - lr * m).astype(p.dtype)
+            return newp, new_s
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = tree.flatten_up_to(grads)
+        flat_s = tree.flatten_up_to(state["per_param"])
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tree.unflatten([o[0] for o in out])
+        new_s = tree.unflatten([o[1] for o in out])
+        return new_p, {"per_param": new_s, "count": count}
+
+    return Optimizer("adafactor", init, update)
+
+
+def sgd(lr: float = 1e-2) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        new_p = jax.tree.map(lambda p, g: (p - lr * g.astype(p.dtype)), params, grads)
+        return new_p, {"count": state["count"] + 1}
+
+    return Optimizer("sgd", init, update)
+
+
+def for_arch(family: str, arch_id: str) -> Optimizer:
+    """Default optimizer per arch: Adafactor for the 1T MoE, AdamW otherwise."""
+    if arch_id.startswith("kimi"):
+        return adafactor()
+    return adamw()

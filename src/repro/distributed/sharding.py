@@ -1,0 +1,180 @@
+"""Sharding rules: DP (pod × data), FSDP (data), TP/EP (model).
+
+Mesh axes: ('data','model') single-pod, ('pod','data','model') multi-pod.
+  * batch dims shard over all DP axes ('pod','data'),
+  * parameters FSDP-shard a large dim over 'data' and TP/EP-shard heads /
+    d_ff / experts / vocab over 'model' (pod axis: pure replication => the
+    gradient all-reduce crosses pods once per step),
+  * optimizer state mirrors the parameter sharding (ZeRO).
+
+Rules are name-based over the parameter tree paths and check divisibility —
+a dim that doesn't divide its mesh axis falls back to replication (recorded;
+e.g. danube's d_head=120 on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(mesh: Mesh, dim: int, axes) -> Optional[Any]:
+    """Return axes if dim divides the axes' total size, else None."""
+    return axes if axes and dim % axis_size(mesh, axes) == 0 else None
+
+
+def _spec(mesh: Mesh, shape, *axes_per_dim) -> NamedSharding:
+    entries = [
+        _fit(mesh, d, a) for d, a in zip(shape, axes_per_dim)
+    ]
+    return NamedSharding(mesh, P(*entries))
+
+
+# ----------------------------------------------------------------- LM rules
+def lm_param_shardings(params_sds, mesh: Mesh):
+    """Path-pattern rules for transformer params (stacked layer leaves have a
+    leading L axis)."""
+
+    def rule(path, sds):
+        keys = [getattr(k, "key", str(k)) for k in path]
+        name = keys[-1]
+        shape = sds.shape
+        if name == "embed":
+            return _spec(mesh, shape, "model", "data")
+        if name == "lm_head":
+            return _spec(mesh, shape, "data", "model")
+        if name in ("final_norm", "attn_norm", "mlp_norm"):
+            return NamedSharding(mesh, P(*([None] * len(shape))))
+        if name in ("wq", "wk", "wv"):
+            return _spec(mesh, shape, None, "data", "model")
+        if name == "wo":
+            return _spec(mesh, shape, None, "model", "data")
+        if name == "router":
+            return _spec(mesh, shape, None, "data", None)
+        if name in ("w_gate", "w_up"):
+            if len(shape) == 4:  # MoE (L, E, D, F)
+                return _spec(mesh, shape, None, "model", "data", None)
+            return _spec(mesh, shape, None, "data", "model")
+        if name == "w_down":
+            if len(shape) == 4:  # MoE (L, E, F, D)
+                return _spec(mesh, shape, None, "model", None, "data")
+            return _spec(mesh, shape, None, "model", "data")
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return jax.tree_util.tree_map_with_path(rule, params_sds)
+
+
+def lm_cache_shardings(cache_sds, mesh: Mesh):
+    """KV cache (L, B, T, KV, dh): shard B on DP; shard KV or dh on model."""
+    dp = dp_axes(mesh)
+
+    def rule(path, sds):
+        L, B, T, KV, dh = sds.shape
+        b_ax = dp if B % axis_size(mesh, dp) == 0 else None
+        if KV % axis_size(mesh, "model") == 0:
+            return NamedSharding(mesh, P(None, b_ax, None, "model", None))
+        if dh % axis_size(mesh, "model") == 0:
+            return NamedSharding(mesh, P(None, b_ax, None, None, "model"))
+        return NamedSharding(mesh, P(None, b_ax, None, None, None))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_sds)
+
+
+# ---------------------------------------------------------------- GNN rules
+def gnn_param_shardings(params_sds, mesh: Mesh):
+    """Processor MLPs are small (~10M params): replicate; FSDP the encoder
+    when the input dim divides (it rarely matters)."""
+
+    def rule(path, sds):
+        return NamedSharding(mesh, P(*([None] * len(sds.shape))))
+
+    return jax.tree_util.tree_map_with_path(rule, params_sds)
+
+
+# ------------------------------------------------------------- recsys rules
+def recsys_param_shardings(params_sds, mesh: Mesh):
+    """Embedding tables row-shard on 'model' (they are the memory); everything
+    else replicates (MLPs are ~10M params)."""
+
+    def rule(path, sds):
+        keys = [getattr(k, "key", str(k)) for k in path]
+        name = keys[-1]
+        shape = sds.shape
+        if name in ("embed", "linear", "item_embed"):
+            return _spec(mesh, shape, "model", None)
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return jax.tree_util.tree_map_with_path(rule, params_sds)
+
+
+def param_shardings(family: str, params_sds, mesh: Mesh):
+    if family == "lm":
+        return lm_param_shardings(params_sds, mesh)
+    if family == "gnn":
+        return gnn_param_shardings(params_sds, mesh)
+    if family == "recsys":
+        return recsys_param_shardings(params_sds, mesh)
+    raise ValueError(family)
+
+
+# --------------------------------------------------------------- activations
+def batch_shardings(specs: Dict[str, Any], mesh: Mesh, family: str):
+    """First-dim DP sharding for every input (scalars replicated)."""
+    dp = dp_axes(mesh)
+
+    def rule(sds):
+        if not hasattr(sds, "shape") or len(sds.shape) == 0:
+            return NamedSharding(mesh, P())
+        b = sds.shape[0]
+        first = dp if b % axis_size(mesh, dp) == 0 else None
+        return NamedSharding(mesh, P(first, *([None] * (len(sds.shape) - 1))))
+
+    return jax.tree.map(rule, specs)
+
+
+def opt_state_shardings(opt_state_sds, params_shardings, mesh: Mesh):
+    """Optimizer leaves mirror the param sharding; factored Adafactor stats
+    drop the reduced dim's spec entry; scalars replicate."""
+    flat_params = {
+        tuple(getattr(k, "key", str(k)) for k in path): s
+        for path, s in jax.tree_util.tree_flatten_with_path(params_shardings)[0]
+    }
+
+    def rule(path, sds):
+        keys = tuple(getattr(k, "key", str(k)) for k in path)
+        if len(sds.shape) == 0:
+            return NamedSharding(mesh, P())
+        # match the param this state leaf mirrors: strip optimizer wrappers
+        stripped = tuple(k for k in keys if k not in ("m", "v", "vr", "vc", "per_param"))
+        leaf_kind = keys[-1]
+        pspec = None
+        for cand, sh in flat_params.items():
+            if cand == stripped:
+                pspec = sh.spec
+                break
+        if pspec is None:
+            return NamedSharding(mesh, P(*([None] * len(sds.shape))))
+        # normalize spec to the PARAM's ndim (P() pads implicitly with None)
+        param_ndim = len(sds.shape) + (1 if leaf_kind in ("vr", "vc") else 0)
+        full = tuple(pspec) + (None,) * (param_ndim - len(tuple(pspec)))
+        if leaf_kind == "vr":  # reduced over last dim
+            return NamedSharding(mesh, P(*full[:-1]))
+        if leaf_kind == "vc":  # reduced over second-to-last dim
+            return NamedSharding(mesh, P(*full[:-2], full[-1]))
+        return NamedSharding(mesh, P(*full))
+
+    return jax.tree_util.tree_map_with_path(rule, opt_state_sds)

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: k-bit pack/unpack over uint32 words.
+
+TPU restriction (DESIGN.md §2): k must divide 32 so values never straddle a
+word — the pack is then a reshape + shift + lane-reduce, a pure VPU op with
+no cross-lane bit carries.  The host codec keeps arbitrary-k support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK_WORDS = 512  # output words per grid step
+
+
+def _pack_kernel(bits: int):
+    per = 32 // bits
+
+    def kernel(x_ref, o_ref):
+        # iota built in-kernel: pallas_call kernels may not capture tracers
+        shifts = (jnp.arange(per, dtype=jnp.uint32) * np.uint32(bits))
+        v = x_ref[...].reshape(BLOCK_WORDS, per)
+        o_ref[...] = (v << shifts[None, :]).sum(axis=1, dtype=jnp.uint32)
+
+    return kernel
+
+
+def _unpack_kernel(bits: int):
+    per = 32 // bits
+    mask = np.uint32((1 << bits) - 1)
+
+    def kernel(w_ref, o_ref):
+        shifts = (jnp.arange(per, dtype=jnp.uint32) * np.uint32(bits))
+        w = w_ref[...]
+        o_ref[...] = ((w[:, None] >> shifts[None, :]) & mask).reshape(-1)
+
+    return kernel
+
+
+def bitpack_pallas(x: jax.Array, bits: int, *, interpret: bool = True) -> jax.Array:
+    assert 32 % bits == 0, "TPU bitpack: bits must divide 32"
+    per = 32 // bits
+    n = x.shape[0]
+    block_vals = BLOCK_WORDS * per
+    assert n % block_vals == 0, "caller pads to block multiple"
+    grid = (n // block_vals,)
+    return pl.pallas_call(
+        _pack_kernel(bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_vals,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK_WORDS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // per,), jnp.uint32),
+        interpret=interpret,
+    )(x)
+
+
+def bitunpack_pallas(w: jax.Array, bits: int, *, interpret: bool = True) -> jax.Array:
+    assert 32 % bits == 0
+    per = 32 // bits
+    m = w.shape[0]
+    assert m % BLOCK_WORDS == 0, "caller pads to block multiple"
+    grid = (m // BLOCK_WORDS,)
+    return pl.pallas_call(
+        _unpack_kernel(bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_WORDS,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK_WORDS * per,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m * per,), jnp.uint32),
+        interpret=interpret,
+    )(w)

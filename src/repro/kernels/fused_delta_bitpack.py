@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: FUSED delta + bitpack (beyond-paper optimization).
+
+The paper's modular graph executes `delta` then `bitpack` as two codecs —
+two HBM round-trips.  On TPU the stream transform is bandwidth-bound
+(arithmetic intensity ≈ 0.5 flop/byte), so fusing them halves HBM traffic:
+
+    baseline  : read x, write d      (delta)   + read d, write packed
+              = 2n reads + n + n/per writes
+    fused     : read x (+1 tail block), write packed
+              ≈ n reads + n/per writes                (~2x traffic cut)
+
+Encode-only fusion is lossless for monotone streams whose deltas fit `bits`
+(sorted indices, offset tables — exactly the paper's delta use cases); the
+ops.py wrapper verifies the precondition.  See EXPERIMENTS.md §Perf/K1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK_WORDS = 512
+
+
+def _fused_encode_kernel(bits: int):
+    per = 32 // bits
+    mask = np.uint32((1 << bits) - 1)
+    block_vals = BLOCK_WORDS * per
+
+    def kernel(x_ref, xprev_ref, o_ref):
+        shifts = jnp.arange(per, dtype=jnp.uint32) * np.uint32(bits)
+        i = pl.program_id(0)
+        x = x_ref[...]
+        prev_last = jnp.where(i == 0, jnp.uint32(0), xprev_ref[block_vals - 1])
+        shifted = jnp.concatenate([prev_last[None], x[:-1]])
+        d = (x - shifted) & mask
+        o_ref[...] = (d.reshape(BLOCK_WORDS, per) << shifts[None, :]).sum(
+            axis=1, dtype=jnp.uint32
+        )
+
+    return kernel
+
+
+def fused_delta_bitpack_pallas(
+    x: jax.Array, bits: int, *, interpret: bool = True
+) -> jax.Array:
+    assert 32 % bits == 0
+    per = 32 // bits
+    n = x.shape[0]
+    block_vals = BLOCK_WORDS * per
+    assert n % block_vals == 0, "caller pads to block multiple"
+    grid = (n // block_vals,)
+    return pl.pallas_call(
+        _fused_encode_kernel(bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_vals,), lambda i: (i,)),
+            pl.BlockSpec((block_vals,), lambda i: (jnp.maximum(i - 1, 0),)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_WORDS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // per,), jnp.uint32),
+        interpret=interpret,
+    )(x, x)
+
+
+def _fused_decode_sum_kernel(bits: int):
+    per = 32 // bits
+    mask = np.uint32((1 << bits) - 1)
+
+    def kernel(w_ref, o_ref):
+        shifts = jnp.arange(per, dtype=jnp.uint32) * np.uint32(bits)
+        w = w_ref[...]
+        d = ((w[:, None] >> shifts[None, :]) & mask).reshape(-1)
+        o_ref[...] = jnp.sum(d, dtype=jnp.uint32)[None]
+
+    return kernel
+
+
+def _fused_decode_scan_kernel(bits: int):
+    per = 32 // bits
+    mask = np.uint32((1 << bits) - 1)
+
+    def kernel(w_ref, carry_ref, o_ref):
+        shifts = jnp.arange(per, dtype=jnp.uint32) * np.uint32(bits)
+        w = w_ref[...]
+        d = ((w[:, None] >> shifts[None, :]) & mask).reshape(-1)
+        o_ref[...] = jnp.cumsum(d, dtype=jnp.uint32) + carry_ref[0]
+
+    return kernel
+
+
+def fused_delta_bitpack_decode_pallas(
+    w: jax.Array, bits: int, *, interpret: bool = True
+) -> jax.Array:
+    """Fused unpack+scan decode: packed words are read twice (sum pass + scan
+    pass) but the full-width delta stream never touches HBM at all."""
+    assert 32 % bits == 0
+    per = 32 // bits
+    m = w.shape[0]
+    assert m % BLOCK_WORDS == 0
+    grid = (m // BLOCK_WORDS,)
+    in_spec = pl.BlockSpec((BLOCK_WORDS,), lambda i: (i,))
+    sums = pl.pallas_call(
+        _fused_decode_sum_kernel(bits),
+        grid=grid,
+        in_specs=[in_spec],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m // BLOCK_WORDS,), jnp.uint32),
+        interpret=interpret,
+    )(w)
+    carry = jnp.cumsum(sums, dtype=jnp.uint32) - sums
+    return pl.pallas_call(
+        _fused_decode_scan_kernel(bits),
+        grid=grid,
+        in_specs=[in_spec, pl.BlockSpec((1,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK_WORDS * per,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m * per,), jnp.uint32),
+        interpret=interpret,
+    )(w, carry)

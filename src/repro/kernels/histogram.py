@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: 256-bin histogram via one-hot MXU contraction.
+
+Scatter-increment histograms are hostile to TPUs (no fast random-access
+scatter).  The TPU-native trick (DESIGN.md §2.5): build the one-hot matrix
+of a symbol block and contract it with a ones vector on the MXU.  The
+accumulator output ref is revisited by every grid step (out index_map is
+constant), initialised at step 0.
+
+Feeds Huffman/FSE table construction and the trainer's entropy estimator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _hist_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    one_hot = (x[:, None] == jnp.arange(256, dtype=jnp.int32)[None, :]).astype(
+        jnp.float32
+    )
+    # ones @ one_hot : a (1,BLOCK)x(BLOCK,256) MXU contraction
+    partial = jnp.dot(
+        jnp.ones((BLOCK,), jnp.float32), one_hot, preferred_element_type=jnp.float32
+    )
+    o_ref[...] += partial.astype(jnp.int32)
+
+
+def histogram_pallas(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    n = x.shape[0]
+    assert n % BLOCK == 0, "caller pads to BLOCK multiple"
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _hist_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((256,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((256,), jnp.int32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,205 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles capacity padding (XLA static shapes — DESIGN.md §2.1), backend
+selection (`use_pallas=False` falls back to the jnp oracle in ref.py), and
+the lossless-precondition checks for the fused kernel.
+
+On this CPU container Pallas executes in interpret mode; on TPU the same
+calls compile to Mosaic.  `interpret` is resolved from the backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .bitpack import BLOCK_WORDS, bitpack_pallas, bitunpack_pallas
+from .byteshuffle import BLOCK as SHUF_BLOCK, byteshuffle_pallas, byteunshuffle_pallas
+from .delta import BLOCK as DELTA_BLOCK, delta_decode_pallas, delta_encode_pallas
+from .float_split import BLOCK as FS_BLOCK, float_merge_pallas, float_split_pallas
+from .fused_delta_bitpack import (
+    fused_delta_bitpack_decode_pallas,
+    fused_delta_bitpack_pallas,
+)
+from .histogram import BLOCK as HIST_BLOCK, histogram_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+
+
+# --------------------------------------------------------------------- delta
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def delta_encode(x: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+    x = x.astype(jnp.uint32)
+    if x.shape[0] == 0:
+        return x
+    if not use_pallas:
+        return ref.delta_encode(x)
+    n = x.shape[0]
+    out = delta_encode_pallas(_pad_to(x, DELTA_BLOCK), interpret=_interpret())
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def delta_decode(d: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+    d = d.astype(jnp.uint32)
+    if d.shape[0] == 0:
+        return d
+    if not use_pallas:
+        return ref.delta_decode(d)
+    n = d.shape[0]
+    out = delta_decode_pallas(_pad_to(d, DELTA_BLOCK), interpret=_interpret())
+    return out[:n]
+
+
+# --------------------------------------------------------------- byteshuffle
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def byteshuffle(x: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+    """(n, w) uint8 -> (w, n)."""
+    if x.shape[0] == 0:
+        return x.T
+    if not use_pallas:
+        return ref.byteshuffle_encode(x)
+    n = x.shape[0]
+    out = byteshuffle_pallas(_pad_to(x, SHUF_BLOCK), interpret=_interpret())
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def byteunshuffle(p: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+    """(w, n) uint8 -> (n, w)."""
+    if p.shape[1] == 0:
+        return p.T
+    if not use_pallas:
+        return ref.byteshuffle_decode(p)
+    w, n = p.shape
+    pad = (-n) % SHUF_BLOCK
+    if pad:
+        p = jnp.concatenate([p, jnp.zeros((w, pad), p.dtype)], axis=1)
+    out = byteunshuffle_pallas(p, interpret=_interpret())
+    return out[:n]
+
+
+# ------------------------------------------------------------------- bitpack
+@functools.partial(jax.jit, static_argnames=("bits", "use_pallas"))
+def bitpack(x: jax.Array, bits: int, *, use_pallas: bool = True) -> jax.Array:
+    """Returns packed words for ceil(n/per) values; caller tracks n."""
+    x = x.astype(jnp.uint32)
+    per = 32 // bits
+    n = x.shape[0]
+    n_words = -(-n // per)
+    if n == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    if not use_pallas:
+        return ref.bitpack_encode(_pad_to(x, per), bits)[:n_words]
+    out = bitpack_pallas(_pad_to(x, BLOCK_WORDS * per), bits, interpret=_interpret())
+    return out[:n_words]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n", "use_pallas"))
+def bitunpack(w: jax.Array, bits: int, n: int, *, use_pallas: bool = True) -> jax.Array:
+    if w.shape[0] == 0:
+        return jnp.zeros((n,), jnp.uint32)
+    if not use_pallas:
+        return ref.bitpack_decode(w, bits)[:n]
+    out = bitunpack_pallas(_pad_to(w, BLOCK_WORDS), bits, interpret=_interpret())
+    return out[:n]
+
+
+# ----------------------------------------------------------------- histogram
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def histogram(x: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+    """256-bin counts of uint8 symbols.  Padding adds to bin 0; corrected."""
+    x = x.astype(jnp.uint8)
+    n = x.shape[0]
+    if n == 0:
+        return jnp.zeros((256,), jnp.int32)
+    if not use_pallas:
+        return ref.histogram(x)
+    pad = (-n) % HIST_BLOCK
+    counts = histogram_pallas(_pad_to(x, HIST_BLOCK), interpret=_interpret())
+    return counts.at[0].add(-pad)
+
+
+# --------------------------------------------------------------- float_split
+@functools.partial(jax.jit, static_argnames=("exp_bits", "man_bits", "use_pallas"))
+def float_split(u: jax.Array, exp_bits: int, man_bits: int, *, use_pallas: bool = True):
+    u = u.astype(jnp.uint32)
+    if u.shape[0] == 0:
+        return ref.float_split_encode(u, exp_bits, man_bits)
+    if not use_pallas:
+        return ref.float_split_encode(u, exp_bits, man_bits)
+    n = u.shape[0]
+    sign, exp, man = float_split_pallas(
+        _pad_to(u, FS_BLOCK), exp_bits, man_bits, interpret=_interpret()
+    )
+    return sign[:n], exp[:n], man[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("exp_bits", "man_bits", "use_pallas"))
+def float_merge(sign, exp, man, exp_bits: int, man_bits: int, *, use_pallas: bool = True):
+    if sign.shape[0] == 0:
+        return ref.float_split_decode(sign, exp, man, exp_bits, man_bits)
+    if not use_pallas:
+        return ref.float_split_decode(sign, exp, man, exp_bits, man_bits)
+    n = sign.shape[0]
+    out = float_merge_pallas(
+        _pad_to(sign, FS_BLOCK),
+        _pad_to(exp, FS_BLOCK),
+        _pad_to(man, FS_BLOCK),
+        exp_bits,
+        man_bits,
+        interpret=_interpret(),
+    )
+    return out[:n]
+
+
+# ------------------------------------------------- fused delta+bitpack (K1)
+def fused_delta_bitpack_fits(x: jax.Array, bits: int) -> jax.Array:
+    """Lossless precondition: every wrapped delta fits in `bits`."""
+    d = ref.delta_encode(x.astype(jnp.uint32))
+    return jnp.all(d < jnp.uint32(1 << bits))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_pallas"))
+def fused_delta_bitpack(x: jax.Array, bits: int, *, use_pallas: bool = True):
+    x = x.astype(jnp.uint32)
+    per = 32 // bits
+    n = x.shape[0]
+    n_words = -(-n // per)
+    if n == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    if not use_pallas:
+        return ref.fused_delta_bitpack_encode(_pad_to(x, per), bits)[:n_words]
+    # pad by REPEATING the last value so padded deltas are 0 (still fit)
+    pad = (-n) % (BLOCK_WORDS * per)
+    if pad and n:
+        x = jnp.concatenate([x, jnp.broadcast_to(x[-1], (pad,))])
+    elif pad:
+        x = jnp.zeros(pad, jnp.uint32)
+    out = fused_delta_bitpack_pallas(x, bits, interpret=_interpret())
+    return out[:n_words]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n", "use_pallas"))
+def fused_delta_bitpack_decode(w: jax.Array, bits: int, n: int, *, use_pallas: bool = True):
+    if w.shape[0] == 0:
+        return jnp.zeros((n,), jnp.uint32)
+    if not use_pallas:
+        return ref.fused_delta_bitpack_decode(w, bits)[:n]
+    out = fused_delta_bitpack_decode_pallas(
+        _pad_to(w, BLOCK_WORDS), bits, interpret=_interpret()
+    )
+    return out[:n]

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; the Pallas kernels must match them bit-exactly
+(tests sweep shapes/dtypes and assert equality).  They are also the fallback
+implementation on backends without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------- delta
+def delta_encode(x: jax.Array) -> jax.Array:
+    """out[0] = x[0]; out[i] = x[i] - x[i-1]  (wrapping, unsigned)."""
+    return jnp.concatenate([x[:1], x[1:] - x[:-1]])
+
+
+def delta_decode(d: jax.Array) -> jax.Array:
+    return jnp.cumsum(d, dtype=d.dtype)
+
+
+# --------------------------------------------------------------- byteshuffle
+def byteshuffle_encode(x: jax.Array) -> jax.Array:
+    """(n, w) uint8 records -> (w, n) byte planes (Blosc shuffle)."""
+    return x.T
+
+
+def byteshuffle_decode(p: jax.Array) -> jax.Array:
+    return p.T
+
+
+# ------------------------------------------------------------------- bitpack
+def bitpack_encode(x: jax.Array, bits: int) -> jax.Array:
+    """Pack uint32 values (< 2^bits) into uint32 words, LSB-first.
+
+    bits must divide 32 (TPU variant restriction; the host codec supports
+    arbitrary widths).  x.size must be a multiple of 32//bits.
+    """
+    per = 32 // bits
+    v = x.reshape(-1, per).astype(jnp.uint32)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits).astype(jnp.uint32)
+    return (v << shifts[None, :]).sum(axis=1, dtype=jnp.uint32)
+
+
+def bitpack_decode(w: jax.Array, bits: int) -> jax.Array:
+    per = 32 // bits
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits).astype(jnp.uint32)
+    mask = jnp.uint32((1 << bits) - 1)
+    return ((w[:, None] >> shifts[None, :]) & mask).reshape(-1)
+
+
+# ----------------------------------------------------------------- histogram
+def histogram(x: jax.Array) -> jax.Array:
+    """256-bin histogram of uint8 symbols -> int32 counts."""
+    one_hot = (x[:, None] == jnp.arange(256, dtype=x.dtype)[None, :]).astype(
+        jnp.float32
+    )
+    # MXU form: ones-vector contraction (see DESIGN.md §2.5)
+    counts = jnp.dot(jnp.ones((x.shape[0],), jnp.float32), one_hot)
+    return counts.astype(jnp.int32)
+
+
+# --------------------------------------------------------------- float_split
+def float_split_encode(u: jax.Array, exp_bits: int, man_bits: int):
+    """uint bit patterns -> (sign u8, exponent u8/u16, mantissa u32)."""
+    u = u.astype(jnp.uint32)
+    sign = (u >> (exp_bits + man_bits)).astype(jnp.uint8)
+    exp_mask = jnp.uint32((1 << exp_bits) - 1)
+    man_mask = jnp.uint32((1 << man_bits) - 1)
+    exp = ((u >> man_bits) & exp_mask).astype(jnp.uint16)
+    man = (u & man_mask).astype(jnp.uint32)
+    return sign, exp, man
+
+
+def float_split_decode(sign, exp, man, exp_bits: int, man_bits: int):
+    u = (
+        (sign.astype(jnp.uint32) << (exp_bits + man_bits))
+        | (exp.astype(jnp.uint32) << man_bits)
+        | man.astype(jnp.uint32)
+    )
+    return u
+
+
+# ------------------------------------------------- fused delta+bitpack (v3)
+def fused_delta_bitpack_encode(x: jax.Array, bits: int) -> jax.Array:
+    """Beyond-paper fusion: one pass instead of two HBM round-trips."""
+    return bitpack_encode(delta_encode(x) & jnp.uint32((1 << bits) - 1), bits)
+
+
+def fused_delta_bitpack_decode(w: jax.Array, bits: int) -> jax.Array:
+    # NOTE: only lossless when all deltas fit in `bits` (checked by caller)
+    return delta_decode(bitpack_decode(w, bits))

@@ -1,0 +1,407 @@
+"""Cell builder: one (architecture × input-shape) dry-run/smoke unit.
+
+A cell packages the step function (train_step / prefill / decode / serve /
+retrieval), abstract arguments (ShapeDtypeStructs — no allocation), and the
+in/out shardings for a mesh.  The dry-run lowers cells on the production
+meshes; smoke tests execute reduced cells on real (tiny) arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, ShapeSpec, get_arch
+from repro.configs.graphcast import gnn_cfg_for_shape, gnn_input_specs
+from repro.configs.lm_common import lm_input_specs
+from repro.configs.recsys_common import ctr_input_specs, seq_input_specs
+from repro.distributed import optimizer as opt_lib
+from repro.distributed.sharding import (
+    axis_size,
+    batch_shardings,
+    dp_axes,
+    lm_cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+)
+from repro.models import gnn, recsys, transformer
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    family: str
+    kind: str
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Optional[Tuple[Any, ...]]
+    out_shardings: Optional[Any]
+    make_real_args: Callable[[jax.Array], Tuple[Any, ...]]  # smoke tests
+    cfg: Any
+
+
+def _replicate_like(tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, P(*([None] * len(getattr(s, "shape", ()))))), tree
+    )
+
+
+def _production_dtype(cfg, reduced: bool):
+    """Full-scale cells run bf16 (the roofline target dtype); reduced smoke
+    cells stay f32 for test tolerance."""
+    if reduced or not hasattr(cfg, "dtype"):
+        return cfg
+    return dataclasses.replace(cfg, dtype=jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------- LM
+def _lm_cell(
+    spec: ArchSpec, shape: ShapeSpec, mesh, reduced: bool, variant: str = "base"
+) -> Cell:
+    cfg = _production_dtype(spec.reduced_cfg if reduced else spec.model_cfg, reduced)
+    if cfg.is_moe and mesh is not None:
+        g = axis_size(mesh, dp_axes(mesh))
+        cfg = dataclasses.replace(cfg, moe_groups=g)
+    if variant == "opt" and mesh is not None:
+        # §Perf/H1: vocab-sharded logits + activation sharding constraints
+        # (without act_dp, XLA propagates FSDP weight shardings onto the
+        # residual stream and batch becomes replicated — see EXPERIMENTS.md)
+        cfg = dataclasses.replace(
+            cfg,
+            logits_pspec=(dp_axes(mesh), None, "model"),
+            act_dp=dp_axes(mesh),
+            act_tp="model",
+        )
+    specs = lm_input_specs(cfg, shape, reduced=reduced)
+    params_sds = jax.eval_shape(lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = param_shardings("lm", params_sds, mesh) if mesh else None
+
+    if shape.kind == "train":
+        optimizer = opt_lib.for_arch("lm", spec.arch_id)
+        opt_sds = jax.eval_shape(optimizer.init, params_sds)
+        o_sh = opt_state_shardings(opt_sds, p_sh, mesh) if mesh else None
+        # §Perf/H1-iter3: microbatched gradient accumulation divides the
+        # stacked-residual live memory by accum_steps at zero collective cost
+        accum = 4 if (variant == "opt" and not reduced) else 1
+
+        def train_step(params, opt_state, batch):
+            if accum == 1:
+                loss, grads = jax.value_and_grad(transformer.loss_fn)(
+                    params, batch, cfg
+                )
+            else:
+                micro = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                    batch,
+                )
+
+                def body(acc, mb):
+                    l, g = jax.value_and_grad(transformer.loss_fn)(params, mb, cfg)
+                    return jax.tree.map(jnp.add, acc, g), l
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                grads, losses = jax.lax.scan(
+                    body, zeros, micro,
+                    unroll=accum if getattr(cfg, "scan_unroll", False) else 1,
+                )
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                loss = losses.mean()
+            params, opt_state = optimizer.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        b_sh = batch_shardings(specs, mesh, "lm") if mesh else None
+        return Cell(
+            spec.arch_id, shape.name, "lm", "train",
+            train_step,
+            (params_sds, opt_sds, specs),
+            (p_sh, o_sh, b_sh) if mesh else None,
+            (p_sh, o_sh, NamedSharding(mesh, P())) if mesh else None,
+            lambda key: _lm_real_train(key, cfg, specs, optimizer),
+            cfg,
+        )
+
+    if shape.kind == "prefill":
+        def prefill(params, tokens):
+            return transformer.forward(params, tokens, cfg)
+
+        b_sh = batch_shardings(specs, mesh, "lm") if mesh else None
+        return Cell(
+            spec.arch_id, shape.name, "lm", "prefill",
+            prefill,
+            (params_sds, specs["tokens"]),
+            (p_sh, b_sh["tokens"]) if mesh else None,
+            None,
+            lambda key: _lm_real_prefill(key, cfg, specs),
+            cfg,
+        )
+
+    # decode
+    cache_sds = specs["cache"]
+    c_sh = lm_cache_shardings(cache_sds, mesh) if mesh else None
+
+    def serve_step(params, cache, tokens, position):
+        return transformer.decode_step(params, cache, tokens, position, cfg)
+
+    tok_sh = (
+        batch_shardings({"tokens": specs["tokens"]}, mesh, "lm")["tokens"]
+        if mesh
+        else None
+    )
+    return Cell(
+        spec.arch_id, shape.name, "lm", "decode",
+        serve_step,
+        (params_sds, cache_sds, specs["tokens"], specs["position"]),
+        (p_sh, c_sh, tok_sh, NamedSharding(mesh, P())) if mesh else None,
+        (None, c_sh) if mesh else None,
+        lambda key: _lm_real_decode(key, cfg, specs),
+        cfg,
+    )
+
+
+def _lm_real_train(key, cfg, specs, optimizer):
+    params = transformer.init_params(key, cfg)
+    opt_state = optimizer.init(params)
+    B, S = specs["tokens"].shape
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    return params, opt_state, {"tokens": toks, "labels": toks}
+
+
+def _lm_real_prefill(key, cfg, specs):
+    params = transformer.init_params(key, cfg)
+    B, S = specs["tokens"].shape
+    return params, jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+
+def _lm_real_decode(key, cfg, specs):
+    params = transformer.init_params(key, cfg)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs["cache"])
+    B = specs["tokens"].shape[0]
+    return params, cache, jax.random.randint(key, (B, 1), 0, cfg.vocab), jnp.int32(3)
+
+
+# --------------------------------------------------------------------- GNN
+def _gnn_cell(
+    spec: ArchSpec, shape: ShapeSpec, mesh, reduced: bool, variant: str = "base"
+) -> Cell:
+    base_cfg = spec.reduced_cfg if reduced else spec.model_cfg
+    cfg = gnn_cfg_for_shape(base_cfg, shape) if not reduced else dataclasses.replace(
+        gnn_cfg_for_shape(base_cfg, shape), n_layers=base_cfg.n_layers,
+        d_hidden=base_cfg.d_hidden, remat=False
+    )
+    cfg = _production_dtype(cfg, reduced)
+    if variant == "opt" and mesh is not None:
+        # §Perf/H2: GNN params are replicated, so the 'model' axis is idle —
+        # row-shard node/edge activations over ALL mesh axes (256-way, not 16)
+        cfg = dataclasses.replace(cfg, act_axes=tuple(mesh.axis_names))
+    specs = gnn_input_specs(shape, reduced=reduced)
+    params_sds = jax.eval_shape(lambda: gnn.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = param_shardings("gnn", params_sds, mesh) if mesh else None
+    optimizer = opt_lib.for_arch("gnn", spec.arch_id)
+    opt_sds = jax.eval_shape(optimizer.init, params_sds)
+    o_sh = opt_state_shardings(opt_sds, p_sh, mesh) if mesh else None
+    loss = gnn.loss_fn_batched if shape.name == "molecule" else gnn.loss_fn
+
+    def train_step(params, opt_state, batch):
+        l, grads = jax.value_and_grad(loss)(params, batch, cfg)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, l
+
+    b_sh = batch_shardings(specs, mesh, "gnn") if mesh else None
+    if variant == "opt" and mesh is not None:
+        # inputs row-sharded over ALL axes to match act_axes
+        row = tuple(mesh.axis_names)
+
+        def _row_shard(sds):
+            if not hasattr(sds, "shape") or len(sds.shape) == 0:
+                return NamedSharding(mesh, P())
+            if sds.shape[0] % axis_size(mesh, row) == 0:
+                return NamedSharding(
+                    mesh, P(row, *([None] * (len(sds.shape) - 1)))
+                )
+            return NamedSharding(mesh, P(*([None] * len(sds.shape))))
+
+        b_sh = jax.tree.map(_row_shard, specs)
+    return Cell(
+        spec.arch_id, shape.name, "gnn", "train",
+        train_step,
+        (params_sds, opt_sds, specs),
+        (p_sh, o_sh, b_sh) if mesh else None,
+        (p_sh, o_sh, NamedSharding(mesh, P())) if mesh else None,
+        lambda key: _gnn_real(key, cfg, specs, optimizer, shape),
+        cfg,
+    )
+
+
+def _gnn_real(key, cfg, specs, optimizer, shape):
+    params = gnn.init_params(key, cfg)
+    opt_state = optimizer.init(params)
+    rng = np.random.default_rng(0)
+    batch = {}
+    for k, s in specs.items():
+        if k == "edges":
+            n_nodes = specs["nodes"].shape[-2]
+            batch[k] = jnp.asarray(
+                rng.integers(0, n_nodes, s.shape), jnp.int32
+            )
+        elif s.dtype == jnp.int32:
+            batch[k] = jnp.zeros(s.shape, jnp.int32)
+        else:
+            batch[k] = jnp.asarray(rng.normal(size=s.shape) * 0.1, s.dtype)
+    if "edge_mask" in batch:
+        batch["edge_mask"] = jnp.ones(specs["edge_mask"].shape, jnp.float32)
+    if "node_mask" in batch:
+        batch["node_mask"] = jnp.ones(specs["node_mask"].shape, jnp.float32)
+    return params, opt_state, batch
+
+
+# ------------------------------------------------------------------ recsys
+def _recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh, reduced: bool) -> Cell:
+    cfg = _production_dtype(spec.reduced_cfg if reduced else spec.model_cfg, reduced)
+    arch = spec.arch_id
+    if arch == "xdeepfm":
+        specs = ctr_input_specs(shape, cfg.n_sparse, 0, reduced=reduced)
+        init_fn = recsys.xdeepfm_init
+        loss_fn = recsys.xdeepfm_loss
+        fwd = lambda p, b: recsys.xdeepfm_forward(p, b["sparse_ids"], cfg)
+    elif arch == "dcn-v2":
+        specs = ctr_input_specs(shape, cfg.n_sparse, cfg.n_dense, reduced=reduced)
+        init_fn = recsys.dcnv2_init
+        loss_fn = recsys.dcnv2_loss
+        fwd = lambda p, b: recsys.dcnv2_forward(p, b["dense"], b["sparse_ids"], cfg)
+    elif arch == "sasrec":
+        specs = seq_input_specs(shape, cfg.seq_len, reduced=reduced)
+        init_fn = recsys.sasrec_init
+        loss_fn = recsys.sasrec_loss
+        fwd = lambda p, b: recsys.sasrec_encode(p, b["history"], cfg)
+    elif arch == "mind":
+        specs = seq_input_specs(shape, cfg.seq_len, reduced=reduced)
+        init_fn = recsys.mind_init
+        loss_fn = recsys.mind_loss
+        fwd = lambda p, b: recsys.mind_interests(p, b["history"], cfg)
+    else:
+        raise ValueError(arch)
+
+    params_sds = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0), cfg))
+    p_sh = param_shardings("recsys", params_sds, mesh) if mesh else None
+    b_sh = batch_shardings(specs, mesh, "recsys") if mesh else None
+
+    if shape.kind == "train":
+        optimizer = opt_lib.for_arch("recsys", arch)
+        opt_sds = jax.eval_shape(optimizer.init, params_sds)
+        o_sh = opt_state_shardings(opt_sds, p_sh, mesh) if mesh else None
+
+        def train_step(params, opt_state, batch):
+            l, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+            params, opt_state = optimizer.update(grads, opt_state, params)
+            return params, opt_state, l
+
+        return Cell(
+            arch, shape.name, "recsys", "train",
+            train_step,
+            (params_sds, opt_sds, specs),
+            (p_sh, o_sh, b_sh) if mesh else None,
+            (p_sh, o_sh, NamedSharding(mesh, P())) if mesh else None,
+            lambda key: _recsys_real(key, cfg, specs, init_fn, optimizer),
+            cfg,
+        )
+
+    if shape.kind == "serve":
+        def serve(params, batch):
+            return fwd(params, batch)
+
+        return Cell(
+            arch, shape.name, "recsys", "serve",
+            serve,
+            (params_sds, specs),
+            (p_sh, b_sh) if mesh else None,
+            None,
+            lambda key: _recsys_real(key, cfg, specs, init_fn, None),
+            cfg,
+        )
+
+    # retrieval: 1 query x 1M candidates — single batched matmul / bulk pass
+    if arch in ("sasrec", "mind"):
+        score = recsys.sasrec_score_candidates if arch == "sasrec" else recsys.mind_score_candidates
+
+        def retrieval(params, batch):
+            return score(params, batch["history"], batch["candidates"], cfg)
+    else:
+        def retrieval(params, batch):
+            base = batch["base_ids"]  # (1, m)
+            cands = batch["candidates"]  # (N,)
+            n = cands.shape[0]
+            ids = jnp.broadcast_to(base, (n, base.shape[1]))
+            ids = ids.at[:, 0].set(cands)  # candidate item in field 0
+            if arch == "dcn-v2":
+                dense = jnp.broadcast_to(batch["dense"], (n, batch["dense"].shape[1]))
+                return recsys.dcnv2_forward(params, dense, ids, cfg)
+            return recsys.xdeepfm_forward(params, ids, cfg)
+
+    return Cell(
+        arch, shape.name, "recsys", "retrieval",
+        retrieval,
+        (params_sds, specs),
+        (p_sh, b_sh) if mesh else None,
+        None,
+        lambda key: _recsys_real(key, cfg, specs, init_fn, None),
+        cfg,
+    )
+
+
+def _recsys_real(key, cfg, specs, init_fn, optimizer):
+    params = init_fn(key, cfg)
+    rng = np.random.default_rng(0)
+    vocab = getattr(cfg, "vocab_per_field", None) or getattr(cfg, "n_items")
+    batch = {}
+    for k, s in specs.items():
+        if s.dtype == jnp.int32:
+            batch[k] = jnp.asarray(rng.integers(0, vocab, s.shape), jnp.int32)
+        else:
+            batch[k] = jnp.asarray(rng.normal(size=s.shape), jnp.float32)
+    if "labels" in batch:
+        batch["labels"] = jnp.asarray(rng.integers(0, 2, specs["labels"].shape), jnp.float32)
+    if optimizer is not None:
+        return params, optimizer.init(params), batch
+    return params, batch
+
+
+# ------------------------------------------------------------------- public
+def build_cell(
+    arch_id: str,
+    shape_name: str,
+    mesh: Optional[Mesh] = None,
+    *,
+    reduced: bool = False,
+    variant: str = "base",
+    unroll: bool = False,
+) -> Cell:
+    spec = get_arch(arch_id)
+    shape = spec.shape(shape_name)
+    if shape.skip and not reduced:
+        raise ValueError(f"cell {arch_id}×{shape_name} skipped: {shape.skip}")
+    if spec.family == "lm":
+        cell = _lm_cell(spec, shape, mesh, reduced, variant)
+    elif spec.family == "gnn":
+        cell = _gnn_cell(spec, shape, mesh, reduced, variant)
+    else:
+        cell = _recsys_cell(spec, shape, mesh, reduced)
+    if unroll and hasattr(cell.cfg, "scan_unroll") and spec.family in ("lm", "gnn"):
+        # flop-accounting mode: rebuild the cell with the layer scan unrolled
+        # (cfg is captured in the step closure, so rebuild from a patched spec)
+        spec2 = dataclasses.replace(
+            spec,
+            model_cfg=dataclasses.replace(spec.model_cfg, scan_unroll=True),
+            reduced_cfg=dataclasses.replace(spec.reduced_cfg, scan_unroll=True),
+        )
+        builder = _lm_cell if spec.family == "lm" else _gnn_cell
+        cell = builder(spec2, shape, mesh, reduced, variant)
+    return cell

@@ -1,0 +1,322 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes, and extract the roofline inputs from the compiled
+artifact:
+
+    memory_analysis()  — per-device bytes (proves it fits / doesn't)
+    cost_analysis()    — per-device HLO FLOPs + bytes accessed
+    compiled HLO text  — collective ops, summed bytes by category
+
+Results cache incrementally as JSON under results/dryrun/ so the sweep is
+restartable (usage: python -m repro.launch.dryrun --all [--multi-pod]).
+Failures (sharding mismatch, OOM at compile, unsupported collective) are
+bugs in the system — they land in the JSON with status=error.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import all_archs, get_arch
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[sufc]\d+|bf16)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{([{}\d,]*)\}")
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+
+
+def _crosses_pods(line: str, half: int) -> bool:
+    """True if any replica group mixes devices < half and >= half (the pod
+    boundary on the (pod, data, model) mesh with row-major device order)."""
+    m = _EXPLICIT_GROUPS_RE.search(line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in grp.strip("{}").split(",") if x]
+            if ids and min(ids) < half <= max(ids):
+                return True
+        return False
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        import numpy as _np
+
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        arr = _np.arange(int(_np.prod(dims))).reshape(dims)
+        if m.group(4):
+            arr = arr.transpose([int(x) for x in m.group(4).split(",")])
+        groups = arr.reshape(g, s)
+        return bool(((groups < half).any(axis=1) & (groups >= half).any(axis=1)).any())
+    return False
+
+
+def collective_bytes(hlo_text: str, n_devices: int = 0) -> dict:
+    """Sum output bytes of every collective op in post-SPMD HLO, by kind,
+    plus the cross-pod subtotal (multi-pod meshes)."""
+    out = {}
+    cross = 0
+    half = n_devices // 2 if n_devices >= 512 else 0
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0) + b
+        if half and _crosses_pods(line, half):
+            cross += b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    if half:
+        out["cross_pod"] = cross
+    return out
+
+
+def run_cell(
+    arch_id: str,
+    shape_name: str,
+    multi_pod: bool,
+    variant: str = "base",
+    grad_compress: str = "",
+    unroll: bool = False,
+    serve_mesh: str = "",
+) -> dict:
+    if serve_mesh:
+        mesh_tag = f"serve{serve_mesh}"
+    else:
+        mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    spec = get_arch(arch_id)
+    shape = spec.shape(shape_name)
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_tag,
+        "family": spec.family,
+        "kind": shape.kind,
+        "dims": shape.dims,
+        "variant": variant
+        + (f"+gc_{grad_compress}" if grad_compress else "")
+        + ("+unroll" if unroll else ""),
+    }
+    if shape.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = shape.skip
+        return rec
+    t0 = time.time()
+    try:
+        if serve_mesh:
+            from repro.launch.mesh import make_serving_mesh
+
+            d, m = (int(x) for x in serve_mesh.split("x"))
+            mesh = make_serving_mesh(d, m)
+        else:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(
+            arch_id, shape_name, mesh=mesh, variant=variant, unroll=unroll
+        )
+        with mesh:
+            if grad_compress:
+                # §Perf/H3: pod-manual shard_map step w/ compressed psum
+                import dataclasses as _dc
+
+                from repro.distributed import optimizer as opt_lib
+                from repro.distributed.pod_step import (
+                    make_ef_state_specs,
+                    make_pod_dp_train_step,
+                )
+
+                assert multi_pod and shape.kind == "train" and spec.family == "lm"
+                cfg = cell.cfg
+                if variant == "opt":
+                    # inside the pod-manual body only intra-pod axes exist
+                    cfg = _dc.replace(
+                        cfg,
+                        act_dp=("data",),
+                        logits_pspec=(("data",), None, "model"),
+                    )
+                params_sds, opt_sds, batch_sds = cell.abstract_args
+                optimizer = opt_lib.for_arch("lm", arch_id)
+                step = make_pod_dp_train_step(cfg, optimizer, mesh, grad_compress)
+                ef_sds = make_ef_state_specs(params_sds, mesh.shape["pod"])
+                jitted = jax.jit(step)
+                lowered = jitted.lower(params_sds, opt_sds, ef_sds, batch_sds)
+            else:
+                jitted = jax.jit(
+                    cell.fn,
+                    in_shardings=cell.in_shardings,
+                    out_shardings=cell.out_shardings,
+                )
+                lowered = jitted.lower(*cell.abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_rec = {}
+        for attr in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_rec[attr] = int(v)
+        if mem_rec:
+            mem_rec["per_device_total"] = (
+                mem_rec.get("argument_size_in_bytes", 0)
+                + mem_rec.get("output_size_in_bytes", 0)
+                + mem_rec.get("temp_size_in_bytes", 0)
+                - mem_rec.get("alias_size_in_bytes", 0)
+            )
+        cost = compiled.cost_analysis() or {}
+        cost_rec = {
+            k: float(v)
+            for k, v in cost.items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "transcendentals") or k.startswith("bytes accessed")
+            )
+        }
+        hlo = compiled.as_text()
+        rec.update(
+            status="ok",
+            n_devices=int(mesh.size),
+            lower_seconds=round(t_lower, 2),
+            compile_seconds=round(t_compile, 2),
+            memory=mem_rec,
+            cost=cost_rec,
+            collectives=collective_bytes(hlo, int(mesh.size)),
+            hlo_lines=hlo.count("\n"),
+        )
+    except Exception as e:  # a failure here is a bug in our sharding config
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_seconds"] = round(time.time() - t0, 2)
+    return rec
+
+
+def cell_path(
+    arch_id: str, shape_name: str, multi_pod: bool, variant: str = "base",
+    grad_compress: str = "", unroll: bool = False, serve_mesh: str = "",
+) -> Path:
+    if serve_mesh:
+        mesh_tag = f"serve{serve_mesh}"
+    else:
+        mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = "" if variant == "base" else f"__{variant}"
+    if grad_compress:
+        suffix += f"__gc_{grad_compress}"
+    if unroll:
+        suffix += "__unroll"
+    return RESULTS / f"{arch_id}__{shape_name}__{mesh_tag}{suffix}.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", help="single arch id")
+    ap.add_argument("--shape", help="single shape name")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="sweep every cell")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--variant", default="base", choices=["base", "opt"])
+    ap.add_argument(
+        "--grad-compress", default="", choices=["", "none", "bf16", "int8_ef"],
+        help="lower the pod-manual compressed-DP step (multi-pod LM train only)",
+    )
+    ap.add_argument(
+        "--unroll", action="store_true",
+        help="unroll layer scans (XLA cost_analysis counts loop bodies once)",
+    )
+    ap.add_argument(
+        "--serve-mesh", default="", choices=["", "4x4", "8x8"],
+        help="lower on a small serving slice instead (decode cells)",
+    )
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch_id, spec in sorted(all_archs().items()):
+            for shape in spec.shapes:
+                cells.append((arch_id, shape.name))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    n_err = 0
+    for arch_id, shape_name in cells:
+        for multi_pod in meshes:
+            path = cell_path(
+                arch_id, shape_name, multi_pod, args.variant,
+                args.grad_compress, args.unroll, args.serve_mesh,
+            )
+            if path.exists() and not args.force:
+                rec = json.loads(path.read_text())
+                print(f"[cached] {path.stem}: {rec['status']}")
+                continue
+            rec = run_cell(
+                arch_id, shape_name, multi_pod, args.variant,
+                args.grad_compress, args.unroll, args.serve_mesh,
+            )
+            path.write_text(json.dumps(rec, indent=1))
+            status = rec["status"]
+            n_err += status == "error"
+            extra = ""
+            if status == "ok":
+                mem = rec["memory"].get("per_device_total", 0) / (1 << 30)
+                coll = rec["collectives"]["total"] / (1 << 30)
+                extra = (
+                    f" mem/dev={mem:.2f}GiB coll={coll:.3f}GiB"
+                    f" flops/dev={rec['cost'].get('flops', 0):.3g}"
+                    f" compile={rec['compile_seconds']}s"
+                )
+            elif status == "error":
+                extra = " " + rec["error"][:120]
+            print(f"[{status}] {path.stem}{extra}", flush=True)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Batched LM serving driver: prefill + KV-cache decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+        --batch 8 --prompt-len 32 --gen 32
+
+Loads the latest checkpoint from --ckpt-dir if present (OpenZL frames),
+otherwise serves random-init weights.  Reports prefill and decode
+throughput.  SWA archs (h2o-danube) serve with a ring-buffer cache of
+window size — constant memory however long the generation runs.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.distributed.checkpoint import CheckpointManager
+from repro.models import transformer
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args(argv)
+
+    spec = get_arch(args.arch)
+    cfg = spec.reduced_cfg if args.reduced else spec.model_cfg
+    cfg = dataclasses.replace(cfg, remat=False)
+
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir)
+        restored = mgr.restore_or_none({"params": params})
+        if restored is not None:
+            step, tree, _ = restored
+            params = jax.tree.map(jnp.asarray, tree["params"])
+            print(f"[serve] loaded checkpoint step {step}")
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_len = P + G
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)
+
+    # ---- prefill: full forward, then write the prompt KV into the cache by
+    # replaying tokens through decode_step (simple, cache-layout agnostic)
+    decode = jax.jit(
+        lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg)
+    )
+    cache = transformer.init_kv_cache(cfg, B, max_len)
+    t0 = time.time()
+    logits = None
+    for t in range(P):
+        logits, cache = decode(params, cache, prompts[:, t : t + 1], jnp.int32(t))
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    # ---- decode
+    key = jax.random.PRNGKey(2)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    t0 = time.time()
+    for t in range(P, P + G - 1):
+        logits, cache = decode(params, cache, tok, jnp.int32(t))
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits / args.temperature, axis=-1
+            )[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    out = jnp.concatenate(generated, axis=1)
+    print(f"[serve] arch={args.arch} batch={B} prompt={P} gen={G}")
+    print(
+        f"  prefill: {B*P} tokens in {t_prefill:.2f}s"
+        f" ({B*P/max(t_prefill,1e-9):.0f} tok/s, incl. compile)"
+    )
+    print(
+        f"  decode:  {B*(G-1)} tokens in {t_decode:.2f}s"
+        f" ({B*(G-1)/max(t_decode,1e-9):.0f} tok/s)"
+    )
+    print(f"  sample[0,:12] = {np.asarray(out[0, :12]).tolist()}")
+    cache_mb = sum(x.nbytes for x in jax.tree.leaves(cache)) / 1e6
+    print(f"  kv-cache: {cache_mb:.1f} MB ({'ring/SWA' if cfg.sliding_window else 'linear'})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+"""Pure-JAX model zoo for the 10 assigned architectures: LM transformers
+(dense + MoE + GQA + SWA), GraphCast-style message-passing GNN, and four
+recsys models (xDeepFM, DCN-v2, SASRec, MIND)."""
+from . import gnn, layers, recsys, transformer  # noqa: F401

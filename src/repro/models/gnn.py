@@ -1,0 +1,161 @@
+"""GraphCast-style encode-process-decode message-passing GNN (arXiv:2212.12794).
+
+JAX has no sparse message-passing primitive — per the assignment, the
+edge-index -> ``jax.ops.segment_sum`` scatter IS part of the system:
+
+    msg_e   = MLP([h_src(e), h_dst(e), e_feat(e)])
+    agg_v   = segment_sum(msg, dst, N)
+    h_v    += MLP([h_v, agg_v])          (residual, as in GraphCast)
+    e_feat += msg                         (edge residual update)
+
+Supports full-batch graphs (cora/ogbn-products shapes), sampled minibatches
+(padded subgraphs from the neighbour sampler in repro.data.sampler), and
+batched small molecule graphs (leading batch dim via vmap).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, mlp_apply, mlp_init
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    name: str = "graphcast"
+    n_layers: int = 16
+    d_hidden: int = 512
+    d_in: int = 227  # n_vars for graphcast; d_feat for benchmark graphs
+    d_out: int = 227
+    d_edge_in: int = 4  # raw edge features (e.g. displacement vectors)
+    aggregator: str = "sum"
+    mesh_refinement: int = 6  # graphcast icosahedral refinement (metadata)
+    dtype: Any = jnp.float32
+    remat: bool = True
+    # §Perf/H2: row-shard node/edge activations over these mesh axes so the
+    # per-layer (N,H)/(E,H) tensors never replicate.
+    act_axes: Optional[tuple] = None
+    scan_unroll: bool = False  # dry-run flop accounting (see transformer.py)
+
+
+def init_params(key: jax.Array, cfg: GNNConfig) -> Params:
+    H = cfg.d_hidden
+    k_enc_n, k_enc_e, k_proc, k_dec = jax.random.split(key, 4)
+
+    def proc_layer(k) -> Params:
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "msg": mlp_init(k1, [3 * H, H, H], cfg.dtype),
+            "upd": mlp_init(k2, [2 * H, H, H], cfg.dtype),
+        }
+
+    layer_keys = jax.random.split(k_proc, cfg.n_layers)
+    return {
+        "enc_node": mlp_init(k_enc_n, [cfg.d_in, H, H], cfg.dtype),
+        "enc_edge": mlp_init(k_enc_e, [cfg.d_edge_in, H, H], cfg.dtype),
+        "layers": jax.vmap(proc_layer)(layer_keys),
+        "dec_node": mlp_init(k_dec, [H, H, cfg.d_out], cfg.dtype),
+    }
+
+
+def _aggregate(msgs: jax.Array, dst: jax.Array, n_nodes: int, how: str) -> jax.Array:
+    if how == "sum":
+        return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+    if how == "mean":
+        s = jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+        cnt = jax.ops.segment_sum(jnp.ones_like(dst, msgs.dtype), dst, num_segments=n_nodes)
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if how == "max":
+        return jax.ops.segment_max(msgs, dst, num_segments=n_nodes)
+    raise ValueError(how)
+
+
+def forward(
+    params: Params,
+    nodes: jax.Array,  # (N, d_in)
+    edges: jax.Array,  # (E, 2) int32 [src, dst]
+    edge_feats: Optional[jax.Array],  # (E, d_edge_in) or None
+    cfg: GNNConfig,
+    edge_mask: Optional[jax.Array] = None,  # (E,) 1.0 valid / 0.0 padding
+) -> jax.Array:
+    N = nodes.shape[0]
+    src, dst = edges[:, 0], edges[:, 1]
+
+    def _constrain(x):
+        if cfg.act_axes is None:
+            return x
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(x, P(cfg.act_axes, None))
+
+    h = _constrain(mlp_apply(params["enc_node"], nodes.astype(cfg.dtype), act=jax.nn.silu))
+    if edge_feats is None:
+        edge_feats = jnp.zeros((edges.shape[0], cfg.d_edge_in), cfg.dtype)
+    e = _constrain(mlp_apply(params["enc_edge"], edge_feats.astype(cfg.dtype), act=jax.nn.silu))
+
+    def layer(carry, lp):
+        h, e = carry
+
+        def inner(h, e, lp):
+            m_in = jnp.concatenate([h[src], h[dst], e], axis=-1)
+            msg = _constrain(mlp_apply(lp["msg"], m_in, act=jax.nn.silu))
+            if edge_mask is not None:
+                msg = msg * edge_mask[:, None].astype(msg.dtype)
+            agg = _constrain(_aggregate(msg, dst, N, cfg.aggregator))
+            upd = mlp_apply(lp["upd"], jnp.concatenate([h, agg], -1), act=jax.nn.silu)
+            return _constrain(h + upd), _constrain(e + msg)
+
+        if cfg.remat:
+            h, e = jax.checkpoint(inner)(h, e, lp)
+        else:
+            h, e = inner(h, e, lp)
+        return (h, e), None
+
+    (h, _e), _ = jax.lax.scan(
+        layer, (h, e), params["layers"], unroll=cfg.n_layers if cfg.scan_unroll else 1
+    )
+    return mlp_apply(params["dec_node"], h, act=jax.nn.silu)
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: GNNConfig):
+    """Regression MSE on node targets (GraphCast trains on weather residuals);
+    node_mask selects training nodes (e.g. sampled seed nodes)."""
+    out = forward(
+        params,
+        batch["nodes"],
+        batch["edges"],
+        batch.get("edge_feats"),
+        cfg,
+        edge_mask=batch.get("edge_mask"),
+    )
+    err = jnp.square(out - batch["targets"].astype(out.dtype))
+    mask = batch.get("node_mask")
+    if mask is not None:
+        return jnp.sum(err * mask[:, None]) / jnp.maximum(
+            jnp.sum(mask) * err.shape[-1], 1.0
+        )
+    return jnp.mean(err)
+
+
+def forward_batched(params, nodes, edges, edge_feats, cfg, edge_mask=None):
+    """Batched small graphs (molecule shape): vmap over the leading axis."""
+    fn = partial(forward, cfg=cfg)
+    return jax.vmap(lambda n, ed, ef, m: fn(params, n, ed, ef, edge_mask=m))(
+        nodes, edges, edge_feats, edge_mask
+    )
+
+
+def loss_fn_batched(params, batch, cfg):
+    out = forward_batched(
+        params,
+        batch["nodes"],
+        batch["edges"],
+        batch.get("edge_feats"),
+        cfg,
+        batch.get("edge_mask"),
+    )
+    return jnp.mean(jnp.square(out - batch["targets"].astype(out.dtype)))

@@ -1,0 +1,84 @@
+"""Shared pure-JAX layers: initializers, RMSNorm, RoPE, MLPs.
+
+No flax/optax in this container — parameters are plain pytrees (nested dicts
+of jnp arrays), models are (init, apply) function pairs.  Logical sharding
+axes are attached later by repro.distributed.sharding via path-pattern rules.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float = 1.0):
+    std = scale / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def mlp_init(key, sizes: Sequence[int], dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], sizes[i], sizes[i + 1], dtype)
+        for i in range(len(sizes) - 1)
+    } | {
+        f"b{i}": jnp.zeros((sizes[i + 1],), dtype) for i in range(len(sizes) - 1)
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array, act=jax.nn.relu, final_act=None) -> jax.Array:
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, d_head: int, theta: float = 10000.0):
+    """positions: (...,) int -> cos/sin of shape (..., d_head//2)."""
+    inv_freq = 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., d_head); cos/sin broadcastable to (..., d_head//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------- utilities
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array, mask=None):
+    """logits (..., V), labels (...) int -> mean NLL (fp32)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))

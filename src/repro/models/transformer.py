@@ -1,0 +1,364 @@
+"""LM-family transformer: dense + MoE, GQA, optional sliding-window attention,
+RoPE, scan-over-layers (stacked params keep HLO size O(1) in depth), KV-cache
+decode step.  Covers olmoe-1b-7b, kimi-k2-1t-a32b, yi-9b, h2o-danube-3-4b,
+llama3.2-1b from the assignment.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (
+    Params,
+    apply_rope,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    rms_norm,
+    rope_angles,
+)
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    # MoE (n_experts == 0 => dense)
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    moe_groups: int = 1  # dispatch groups == data-parallel shards at scale
+    # attention
+    sliding_window: Optional[int] = None  # h2o-danube SWA
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    dtype: Any = jnp.float32
+    remat: bool = True
+    # §Perf/H1: constrain logits to (batch_axes, None, vocab_axis) so the
+    # (tokens, vocab) activation is vocab-sharded instead of all-gathered.
+    logits_pspec: Optional[tuple] = None
+    # §Perf/H1-iter2: activation sharding constraints.  act_dp = mesh axes for
+    # the batch dim of every activation; act_tp = mesh axis for heads/ffn.
+    # Without these, XLA propagates the FSDP weight shardings onto the
+    # residual stream (batch becomes REPLICATED) — see EXPERIMENTS.md §Perf.
+    act_dp: Optional[tuple] = None
+    act_tp: Optional[str] = None
+    # unroll the layer scan (dry-run flop accounting: XLA cost_analysis
+    # counts while-loop bodies ONCE, so loops undercount flops by ~n_layers)
+    scan_unroll: bool = False
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+
+# ------------------------------------------------------------------- init
+def init_params(key: jax.Array, cfg: TransformerConfig) -> Params:
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    D, H, KV, dh, F = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_ff
+
+    def layer_params(k) -> Params:
+        ks = jax.random.split(k, 10)
+        p: Params = {
+            "attn_norm": jnp.ones((D,), cfg.dtype),
+            "mlp_norm": jnp.ones((D,), cfg.dtype),
+            "wq": dense_init(ks[0], D, H * dh, cfg.dtype),
+            "wk": dense_init(ks[1], D, KV * dh, cfg.dtype),
+            "wv": dense_init(ks[2], D, KV * dh, cfg.dtype),
+            "wo": dense_init(ks[3], H * dh, D, cfg.dtype),
+        }
+        if cfg.is_moe:
+            E = cfg.n_experts
+            p["router"] = dense_init(ks[4], D, E, cfg.dtype)
+            p["w_gate"] = (
+                jax.random.normal(ks[5], (E, D, F)) / np.sqrt(D)
+            ).astype(cfg.dtype)
+            p["w_up"] = (jax.random.normal(ks[6], (E, D, F)) / np.sqrt(D)).astype(cfg.dtype)
+            p["w_down"] = (jax.random.normal(ks[7], (E, F, D)) / np.sqrt(F)).astype(cfg.dtype)
+        else:
+            p["w_gate"] = dense_init(ks[5], D, F, cfg.dtype)
+            p["w_up"] = dense_init(ks[6], D, F, cfg.dtype)
+            p["w_down"] = dense_init(ks[7], F, D, cfg.dtype)
+        return p
+
+    # stacked layer params: every leaf gets a leading (n_layers,) axis
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(layer_params)(layer_keys)
+
+    params: Params = {
+        "embed": embed_init(k_embed, cfg.vocab, D, cfg.dtype),
+        "final_norm": jnp.ones((D,), cfg.dtype),
+        "layers": stacked,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, D, cfg.vocab, cfg.dtype)
+    return params
+
+
+# -------------------------------------------------------------- attention
+def _shard(x, *spec):
+    """with_sharding_constraint helper; None spec entries pass through."""
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _gqa_attention(
+    q: jax.Array,  # (B, S, H, dh)
+    k: jax.Array,  # (B, T, KV, dh)
+    v: jax.Array,  # (B, T, KV, dh)
+    *,
+    cfg: "TransformerConfig",
+    sliding_window: Optional[int],
+    q_positions: jax.Array,  # (S,) absolute positions of queries
+    kv_positions: jax.Array,  # (T,)
+) -> jax.Array:
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    # flatten GQA groups to a single H dim (repeat_kv): heads then shard
+    # H-way on the TP axis — (KV, group) split dims cap tiling at KV-way
+    k = jnp.repeat(k, H // KV, axis=2)  # (B, T, H, dh)
+    v = jnp.repeat(v, H // KV, axis=2)
+    if cfg.act_dp is not None:
+        q = _shard(q, cfg.act_dp, None, cfg.act_tp, None)
+        k = _shard(k, cfg.act_dp, None, cfg.act_tp, None)
+        v = _shard(v, cfg.act_dp, None, cfg.act_tp, None)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) / np.sqrt(dh)
+    if cfg.act_dp is not None:
+        scores = _shard(scores, cfg.act_dp, cfg.act_tp, None, None)
+    # mask: causal + optional sliding window on absolute positions
+    rel = q_positions[:, None] - kv_positions[None, :]  # (S, T)
+    mask = rel >= 0
+    if sliding_window is not None:
+        mask &= rel < sliding_window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out.reshape(B, S, H * dh)
+
+
+# ------------------------------------------------------------------- MoE
+def _moe_ffn(p: Params, x: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    """Top-k routed experts, grouped scatter dispatch (GShard capacity model).
+
+    Tokens are split into `n_groups` dispatch groups (sharded on the data
+    mesh axes); each group has local expert capacity C.  Dispatch/combine are
+    scatter-add / gather — O(N·D) memory, never materializing the one-hot
+    (N,K,E,C) tensor.  With experts sharded on 'model', the grouped einsum
+    reshard lowers to the MoE all-to-all.
+    """
+    B, S, D = x.shape
+    E, K, G = cfg.n_experts, cfg.top_k, cfg.moe_groups
+    N = B * S
+    assert N % G == 0, f"tokens {N} not divisible by moe_groups {G}"
+    Ng = N // G
+    C = max(int(cfg.capacity_factor * Ng * K / E), 1)
+    xt = x.reshape(G, Ng, D)
+    if cfg.act_dp is not None:
+        xt = _shard(xt, cfg.act_dp, None, None)
+    logits = jnp.einsum("gnd,de->gne", xt, p["router"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)  # (G, Ng, K)
+    gate_vals = (
+        gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    ).astype(x.dtype)
+    # position of each (token, k) pick within its expert's queue (per group)
+    onehot = jax.nn.one_hot(idx.reshape(G, Ng * K), E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - onehot  # (G, Ng*K, E)
+    pos = jnp.take_along_axis(
+        pos, idx.reshape(G, Ng * K)[..., None], axis=-1
+    )[..., 0].reshape(G, Ng, K)
+    keep = pos < C
+    slot = jnp.where(keep, idx * C + pos, E * C)  # overflow slot E*C
+    # dispatch: scatter tokens into (G, E*C+1, D) expert buffers
+    g_idx = jnp.arange(G)[:, None, None]
+    buf = jnp.zeros((G, E * C + 1, D), x.dtype)
+    buf = buf.at[g_idx, slot].add(xt[:, :, None, :] * keep[..., None].astype(x.dtype))
+    expert_in = buf[:, : E * C].reshape(G, E, C, D)
+    # NOTE (§Perf/H1-iter4, refuted hypothesis): constraining expert_in to
+    # P(dp, tp, None, None) here FORCED a reshard of the (G,E,C,D) buffer and
+    # DOUBLED MoE collective bytes (olmoe train 70->146 GiB).  The grouped
+    # einsum against E-sharded weights already lowers to the right all-to-all;
+    # leave the dispatch buffers unconstrained.
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
+    ) * jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])  # (G, E, C, D)
+    # combine: gather each pick's expert output, weight by gate
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(G, E * C, D), jnp.zeros((G, 1, D), x.dtype)], axis=1
+    )
+    picked = flat_out[g_idx, slot]  # (G, Ng, K, D)
+    out = jnp.sum(picked * gate_vals[..., None], axis=2)
+    return out.reshape(B, S, D)
+
+
+def _dense_ffn(p: Params, x: jax.Array, cfg: "TransformerConfig") -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    if cfg.act_dp is not None:
+        h = _shard(h, cfg.act_dp, None, cfg.act_tp)
+    return h @ p["w_down"]
+
+
+# ------------------------------------------------------------------ layers
+def _layer_fwd(
+    p: Params,
+    x: jax.Array,
+    cfg: TransformerConfig,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+):
+    """One transformer block.  Returns (x, new_kv) where new_kv is the
+    (k, v) to store when running with a cache."""
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    if cfg.act_dp is not None:
+        x = _shard(x, cfg.act_dp, None, None)
+    h = rms_norm(x, p["attn_norm"])
+    q = (h @ p["wq"]).reshape(B, S, H, dh)
+    k = (h @ p["wk"]).reshape(B, S, KV, dh)
+    v = (h @ p["wv"]).reshape(B, S, KV, dh)
+    cos_q, sin_q = rope_angles(q_positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos_q[None, :, None, :], sin_q[None, :, None, :])
+    k_rot = apply_rope(k, cos_q[None, :, None, :], sin_q[None, :, None, :])
+
+    if kv_cache is not None:
+        ck, cv = kv_cache  # (B, T, KV, dh) ring or linear cache
+        ck = jax.lax.dynamic_update_slice(ck, k_rot, (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, cache_index, 0, 0))
+        attn = _gqa_attention(
+            q,
+            ck,
+            cv,
+            cfg=cfg,
+            sliding_window=cfg.sliding_window,
+            q_positions=q_positions,
+            kv_positions=kv_positions,
+        )
+        new_kv = (ck, cv)
+    else:
+        attn = _gqa_attention(
+            q,
+            k_rot,
+            v,
+            cfg=cfg,
+            sliding_window=cfg.sliding_window,
+            q_positions=q_positions,
+            kv_positions=kv_positions,
+        )
+        new_kv = (k_rot, v)
+    x = x + attn @ p["wo"]
+    if cfg.act_dp is not None:
+        x = _shard(x, cfg.act_dp, None, None)
+    h2 = rms_norm(x, p["mlp_norm"])
+    ffn = _moe_ffn(p, h2, cfg) if cfg.is_moe else _dense_ffn(p, h2, cfg)
+    out = x + ffn
+    if cfg.act_dp is not None:
+        out = _shard(out, cfg.act_dp, None, None)
+    return out, new_kv
+
+
+# ------------------------------------------------------------------ forward
+def forward(params: Params, tokens: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, V).  lax.scan over stacked layers."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(S)
+
+    def body(x, layer_p):
+        def one_layer(p, h):
+            return _layer_fwd(
+                p, h, cfg=cfg, q_positions=positions, kv_positions=positions
+            )[0]
+
+        if cfg.remat:
+            one_layer = jax.checkpoint(one_layer)
+        return one_layer(layer_p, x), None
+
+    x, _ = jax.lax.scan(
+        body, x, params["layers"], unroll=cfg.n_layers if cfg.scan_unroll else 1
+    )
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    if cfg.logits_pspec is not None:
+        from jax.sharding import PartitionSpec as P
+
+        logits = jax.lax.with_sharding_constraint(logits, P(*cfg.logits_pspec))
+    return logits
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: TransformerConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------- KV cache
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int) -> Params:
+    """Cache length: sliding-window archs only keep `window` entries — that is
+    what makes h2o-danube's long_500k decode sub-quadratic AND sub-linear in
+    memory."""
+    T = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (cfg.n_layers, batch, T, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def decode_step(
+    params: Params,
+    cache: Params,
+    tokens: jax.Array,  # (B, 1) the new token
+    position: jax.Array,  # scalar: absolute position of the new token
+    cfg: TransformerConfig,
+):
+    """One incremental decode step -> (logits (B, V), updated cache)."""
+    B = tokens.shape[0]
+    T = cache["k"].shape[2]
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, 1, D)
+    q_pos = position[None]  # (1,)
+    slot = position % T  # ring-buffer slot for SWA; linear when T >= max_len
+    # absolute positions held in each cache slot after this write
+    slots = jnp.arange(T)
+    written = jnp.where(
+        position >= T,
+        position - ((slot - slots) % T),
+        slots,
+    )
+    valid = written <= position
+    # invalid (unwritten) slots get a FUTURE position so the causal mask
+    # (rel >= 0) rejects them for full-attention archs too
+    kv_positions = jnp.where(valid, written, position + 1_000_000_000)
+
+    def body(x, layer):
+        layer_p, ck, cv = layer
+        out, (nk, nv) = _layer_fwd(
+            layer_p,
+            x,
+            cfg,
+            q_positions=q_pos,
+            kv_positions=kv_positions,
+            kv_cache=(ck, cv),
+            cache_index=slot,
+        )
+        return out, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0]
+    return logits, {"k": nk, "v": nv}

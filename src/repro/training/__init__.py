@@ -1,0 +1,15 @@
+"""Automated compressor training (paper §VI-C): greedy stream clustering +
+NSGA-II genetic search over backend graphs + Pareto merge."""
+from .cluster import Clustering, cluster_streams  # noqa: F401
+from .gp import GNode, compile_genome, crossover, mutate, random_genome  # noqa: F401
+from .nsga2 import nsga2, nondominated_sort, pareto_prune  # noqa: F401
+from .trainer import (  # noqa: F401
+    CsvFrontend,
+    Frontend,
+    MultiStreamFrontend,
+    NumericFrontend,
+    StructFrontend,
+    TradeoffPoint,
+    TrainedCompressor,
+    train,
+)

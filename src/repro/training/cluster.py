@@ -1,0 +1,88 @@
+"""Greedy stream clustering (paper §VI-C, first training stage).
+
+Initially every parsed stream is its own cluster; the trainer greedily merges
+the pair whose combined compressed size is smaller than the sum of the
+individual sizes, repeating until a local minimum.  Only same-signature
+streams may merge (concat requires it), which also bounds the pair set.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import CompressionCtx, compress
+from repro.core.graph import GraphBuilder, Plan
+from repro.core.message import Stream, SType
+
+
+def _concat_streams(streams: Sequence[Stream]) -> Stream:
+    s0 = streams[0]
+    if len(streams) == 1:
+        return s0
+    if s0.stype == SType.STRING:
+        return Stream(
+            np.concatenate([s.data for s in streams]),
+            SType.STRING,
+            1,
+            np.concatenate([s.lengths for s in streams]).astype(np.uint32),
+        )
+    # unsigned bit views: mixed i64/u64 would promote to f64 (lossy!)
+    parts = [
+        s.as_unsigned().data if s.stype == SType.NUMERIC else s.data for s in streams
+    ]
+    return Stream(np.concatenate(parts), s0.stype, s0.width)
+
+
+def _probe_plan(sig: Tuple[int, int]) -> Plan:
+    """Cheap, codec-agnostic size probe used for cluster decisions: the
+    generic auto selector at a fast level."""
+    g = GraphBuilder(1)
+    g.select("generic_auto", g.input(0))
+    return g.build("probe")
+
+
+def _size_of(streams: Sequence[Stream], level: int) -> int:
+    s = _concat_streams(streams)
+    sig = (int(s.stype), s.width)
+    try:
+        return len(compress(_probe_plan(sig), [s], ctx=CompressionCtx(level=level)))
+    except Exception:
+        return s.nbytes + 64
+
+
+@dataclass
+class Clustering:
+    clusters: List[List[int]]  # stream indices per cluster
+    sizes: List[int]  # probe compressed size per cluster
+
+    def assignment(self) -> Dict[int, int]:
+        return {i: c for c, idxs in enumerate(self.clusters) for i in idxs}
+
+
+def cluster_streams(
+    streams: Sequence[Stream], *, level: int = 5, max_rounds: int = 64
+) -> Clustering:
+    sigs = [(int(s.stype), s.width) for s in streams]
+    clusters: List[List[int]] = [[i] for i in range(len(streams))]
+    sizes: List[int] = [_size_of([streams[i]], level) for i in range(len(streams))]
+
+    for _ in range(max_rounds):
+        best = None  # (gain, a, b, merged_size)
+        for a in range(len(clusters)):
+            for b in range(a + 1, len(clusters)):
+                if sigs[clusters[a][0]] != sigs[clusters[b][0]]:
+                    continue
+                merged = [streams[i] for i in clusters[a] + clusters[b]]
+                msize = _size_of(merged, level)
+                gain = sizes[a] + sizes[b] - msize
+                if gain > 0 and (best is None or gain > best[0]):
+                    best = (gain, a, b, msize)
+        if best is None:
+            break  # local minimum (paper: "repeats until local minimum")
+        _, a, b, msize = best
+        clusters[a] = clusters[a] + clusters[b]
+        sizes[a] = msize
+        del clusters[b], sizes[b]
+    return Clustering(clusters, sizes)

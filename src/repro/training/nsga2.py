@@ -1,0 +1,126 @@
+"""NSGA-II (Deb et al. 2002) — the multi-objective engine behind the paper's
+backend graph generator (§VI-C): fast nondominated sort, crowding distance,
+binary tournament, elitist environmental selection."""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+from typing import Callable, Generic, List, Sequence, Tuple, TypeVar
+
+T = TypeVar("T")
+
+Objectives = Tuple[float, ...]  # minimized
+
+
+def dominates(a: Objectives, b: Objectives) -> bool:
+    return all(x <= y for x, y in zip(a, b)) and any(x < y for x, y in zip(a, b))
+
+
+def nondominated_sort(objs: Sequence[Objectives]) -> List[List[int]]:
+    n = len(objs)
+    S = [[] for _ in range(n)]
+    dom_count = [0] * n
+    fronts: List[List[int]] = [[]]
+    for p in range(n):
+        for q in range(n):
+            if p == q:
+                continue
+            if dominates(objs[p], objs[q]):
+                S[p].append(q)
+            elif dominates(objs[q], objs[p]):
+                dom_count[p] += 1
+        if dom_count[p] == 0:
+            fronts[0].append(p)
+    i = 0
+    while fronts[i]:
+        nxt: List[int] = []
+        for p in fronts[i]:
+            for q in S[p]:
+                dom_count[q] -= 1
+                if dom_count[q] == 0:
+                    nxt.append(q)
+        i += 1
+        fronts.append(nxt)
+    return fronts[:-1]
+
+
+def crowding_distance(objs: Sequence[Objectives], front: Sequence[int]) -> dict:
+    dist = {i: 0.0 for i in front}
+    if len(front) <= 2:
+        return {i: math.inf for i in front}
+    m = len(objs[0])
+    for k in range(m):
+        srt = sorted(front, key=lambda i: objs[i][k])
+        lo, hi = objs[srt[0]][k], objs[srt[-1]][k]
+        dist[srt[0]] = dist[srt[-1]] = math.inf
+        if hi == lo:
+            continue
+        for j in range(1, len(srt) - 1):
+            dist[srt[j]] += (objs[srt[j + 1]][k] - objs[srt[j - 1]][k]) / (hi - lo)
+    return dist
+
+
+def pareto_prune(
+    items: List[T], objs: List[Objectives], keep: int
+) -> Tuple[List[T], List[Objectives]]:
+    """The paper's merge step: keep `keep` items, preferring better fronts and
+    within a front the highest crowding distance (§VI-C last paragraph)."""
+    fronts = nondominated_sort(objs)
+    out_idx: List[int] = []
+    for front in fronts:
+        if len(out_idx) + len(front) <= keep:
+            out_idx.extend(front)
+        else:
+            dist = crowding_distance(objs, front)
+            ranked = sorted(front, key=lambda i: -dist[i])
+            out_idx.extend(ranked[: keep - len(out_idx)])
+            break
+    return [items[i] for i in out_idx], [objs[i] for i in out_idx]
+
+
+@dataclass
+class NSGA2Result(Generic[T]):
+    pareto: List[T]
+    pareto_objs: List[Objectives]
+    evaluations: int
+
+
+def nsga2(
+    seed_pop: List[T],
+    evaluate: Callable[[T], Objectives],
+    mutate: Callable[[T, random.Random], T],
+    crossover: Callable[[T, T, random.Random], T],
+    *,
+    pop_size: int = 20,
+    generations: int = 10,
+    rng: random.Random = None,
+) -> NSGA2Result:
+    rng = rng or random.Random(0)
+    pop: List[T] = list(seed_pop)[:pop_size]
+    while len(pop) < pop_size:
+        pop.append(mutate(rng.choice(seed_pop), rng))
+    objs = [evaluate(p) for p in pop]
+    evals = len(pop)
+
+    def tournament() -> T:
+        i, j = rng.randrange(len(pop)), rng.randrange(len(pop))
+        return pop[i] if dominates(objs[i], objs[j]) or rng.random() < 0.5 else pop[j]
+
+    for _gen in range(generations):
+        children: List[T] = []
+        while len(children) < pop_size:
+            a, b = tournament(), tournament()
+            c = crossover(a, b, rng) if rng.random() < 0.7 else a
+            if rng.random() < 0.6:
+                c = mutate(c, rng)
+            children.append(c)
+        child_objs = [evaluate(c) for c in children]
+        evals += len(children)
+        merged = pop + children
+        merged_objs = objs + child_objs
+        pop, objs = pareto_prune(merged, merged_objs, pop_size)
+
+    fronts = nondominated_sort(objs)
+    first = fronts[0] if fronts else []
+    return NSGA2Result([pop[i] for i in first], [objs[i] for i in first], evals)

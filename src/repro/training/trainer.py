@@ -1,0 +1,318 @@
+"""End-to-end compressor training (paper §VI-C) — the ``zli-train`` analogue.
+
+Pipeline: frontend-parse sample files into streams -> greedy clustering ->
+per-cluster NSGA-II backend search (objectives: compressed bytes, encode
+seconds) -> iterative Pareto merge across clusters pruned by crowding
+distance -> a set of deployable tradeoff-point compressors (serializable
+Plans, paper §V-D).
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.codec import get_codec
+from repro.core.engine import CompressionCtx, Compressor, compress
+from repro.core.graph import GraphBuilder, Plan
+from repro.core.message import Stream, SType
+
+from .cluster import Clustering, _concat_streams, cluster_streams
+from .gp import GNode, compile_genome, crossover, emit_genome, mutate, random_genome
+from .nsga2 import nsga2, pareto_prune
+
+SAMPLE_LIMIT = 1 << 18  # per-cluster evaluation sample (256 KiB)
+
+
+# ------------------------------------------------------------------ frontends
+@dataclass
+class Frontend:
+    """How raw input bytes become typed streams + the plan prefix for it."""
+
+    name: str = "raw"
+
+    @property
+    def n_inputs(self) -> int:
+        return 1
+
+    def parse(self, inputs: Sequence[Stream]) -> List[Stream]:
+        return list(inputs)
+
+    def emit(self, g: GraphBuilder) -> List[int]:
+        return [g.input(i) for i in range(self.n_inputs)]
+
+
+@dataclass
+class CsvFrontend(Frontend):
+    n_cols: int = 0
+    sep: str = ","
+    name: str = "csv"
+
+    def parse(self, inputs):
+        outs, _ = get_codec("csv_split").run_encode(
+            list(inputs), {"sep": self.sep}
+        )
+        if len(outs) != self.n_cols:
+            raise ValueError(f"csv has {len(outs)} cols, expected {self.n_cols}")
+        return outs
+
+    def emit(self, g):
+        cols = g.add("csv_split", g.input(0), n_out=self.n_cols, sep=self.sep)
+        return cols if isinstance(cols, list) else [cols]
+
+
+@dataclass
+class StructFrontend(Frontend):
+    widths: Tuple[int, ...] = ()
+    name: str = "struct"
+
+    def parse(self, inputs):
+        outs, _ = get_codec("field_split").run_encode(
+            list(inputs), {"widths": list(self.widths)}
+        )
+        return outs
+
+    def emit(self, g):
+        fields = g.add(
+            "field_split", g.input(0), n_out=len(self.widths), widths=list(self.widths)
+        )
+        return fields if isinstance(fields, list) else [fields]
+
+
+@dataclass
+class NumericFrontend(Frontend):
+    width: int = 4
+    name: str = "numeric"
+
+    def parse(self, inputs):
+        outs, _ = get_codec("interpret_numeric").run_encode(
+            list(inputs), {"width": self.width}
+        )
+        return outs
+
+    def emit(self, g):
+        return [g.add("interpret_numeric", g.input(0), width=self.width)]
+
+
+@dataclass
+class MultiStreamFrontend(Frontend):
+    """Inputs are already typed streams (e.g. Parquet-decoded columns)."""
+
+    k: int = 1
+    name: str = "multistream"
+
+    @property
+    def n_inputs(self) -> int:
+        return self.k
+
+
+# ----------------------------------------------------------- trained result
+@dataclass
+class TradeoffPoint:
+    genomes: List[Optional[GNode]]  # one per cluster
+    est_size: float
+    est_time: float
+
+
+@dataclass
+class TrainedCompressor:
+    frontend: Frontend
+    clustering: Clustering
+    sigs: List[Tuple[int, int]]  # signature per cluster
+    points: List[TradeoffPoint]  # Pareto tradeoff points (size-ordered)
+    stats: Dict[str, float] = field(default_factory=dict)
+
+    def build_plan(self, point: TradeoffPoint) -> Plan:
+        g = GraphBuilder(self.frontend.n_inputs)
+        stream_edges = self.frontend.emit(g)
+        for ci, idxs in enumerate(self.clustering.clusters):
+            edges = [stream_edges[i] for i in idxs]
+            src = edges[0] if len(edges) == 1 else g.add("concat", *edges)
+            emit_genome(g, point.genomes[ci], src, self.sigs[ci])
+        return g.build(f"trained_{self.frontend.name}")
+
+    def best_ratio_plan(self) -> Plan:
+        return self.build_plan(min(self.points, key=lambda p: p.est_size))
+
+    def fastest_plan(self) -> Plan:
+        return self.build_plan(min(self.points, key=lambda p: p.est_time))
+
+    def pareto_plans(self) -> List[Tuple[Plan, float, float]]:
+        return [
+            (self.build_plan(p), p.est_size, p.est_time)
+            for p in sorted(self.points, key=lambda p: p.est_size)
+        ]
+
+
+# ------------------------------------------------------------------- training
+def _sample_stream(s: Stream, limit: int = SAMPLE_LIMIT) -> Stream:
+    if s.nbytes <= limit:
+        return s
+    if s.stype == SType.STRING:
+        cut = int(np.searchsorted(np.cumsum(s.lengths), limit)) + 1
+        cut = min(cut, int(s.lengths.size))
+        nb = int(s.lengths[:cut].sum())
+        return Stream(s.data[:nb], SType.STRING, 1, s.lengths[:cut])
+    n_elts = max(limit // max(s.width, 1), 1)
+    if s.stype == SType.NUMERIC:
+        return Stream(s.data[:n_elts], s.stype, s.width)
+    take = n_elts * (s.width if s.stype == SType.STRUCT else 1)
+    return Stream(s.data[:take], s.stype, s.width)
+
+
+def _seed_genomes(sig: Tuple[int, int]) -> List[Optional[GNode]]:
+    """Paper: "population is seeded with simple but commonly effective
+    compression graphs"."""
+    N, S, T, G = (int(x) for x in (SType.NUMERIC, SType.SERIAL, SType.STRUCT, SType.STRING))
+    stype, w = sig
+    seeds: List[Optional[GNode]] = [
+        None,
+        GNode("zlib_backend", {"level": 6}),
+    ]
+    if stype != G:
+        seeds.append(GNode("lzma_backend", {"preset": 6}))
+        seeds.append(GNode("bz2_backend", {"level": 9}))
+    if stype == N:
+        seeds += [
+            GNode("range_pack"),
+            GNode("delta", {}, [GNode("range_pack")]),
+            GNode("transpose", {}, [GNode("huffman")]),
+            GNode("delta", {}, [GNode("transpose", {}, [GNode("fse", {"table_log": 11})])]),
+            GNode("delta", {}, [GNode("transpose", {}, [GNode("lzma_backend", {"preset": 6})])]),
+            GNode("delta", {}, [GNode("lzma_backend", {"preset": 6})]),
+            GNode("tokenize", {}, [None, GNode("range_pack")]),
+            # sparse/run-heavy data (era5 snow/precip): RLE first
+            GNode("rle", {}, [GNode("lzma_backend", {"preset": 6}), GNode("range_pack")]),
+        ]
+        if w in (2, 4, 8):
+            seeds.append(GNode("float_split", {"fmt": {2: 0, 4: 2, 8: 3}[w]}))
+    elif stype in (S,) or (stype == T and w == 1):
+        seeds += [
+            GNode("huffman"),
+            GNode("fse", {"table_log": 11}),
+            GNode("lz77", {}, [GNode("huffman"), GNode("range_pack"), GNode("range_pack"), GNode("range_pack")]),
+        ]
+    elif stype == T:
+        seeds += [
+            GNode("transpose", {}, [GNode("huffman")]),
+            GNode("interpret_numeric", {"width": w if w in (1, 2, 4, 8) else 1}),
+        ]
+    elif stype == G:
+        seeds += [
+            GNode("tokenize"),
+            GNode("string_split", {}, [GNode("zlib_backend", {"level": 6}), GNode("delta", {}, [GNode("range_pack")])]),
+            GNode("parse_numeric", {}, [None, GNode("delta", {}, [GNode("transpose", {}, [GNode("huffman")])]), None]),
+        ]
+    return seeds
+
+
+def _evaluate_genome(genome, sample: Stream, sig) -> Tuple[float, float]:
+    try:
+        plan = compile_genome(genome, sig)
+        t0 = time.perf_counter()
+        frame = compress(plan, [sample], ctx=CompressionCtx(level=5))
+        dt = time.perf_counter() - t0
+        # verify losslessness on the sample — broken genomes are discarded
+        from repro.core.engine import decompress
+
+        (back,) = decompress(frame)
+        if back.content_bytes() != sample.content_bytes():
+            return (float("inf"), float("inf"))
+        if back.stype != sample.stype or back.width != sample.width:
+            return (float("inf"), float("inf"))  # type-faithfulness required
+        if sample.stype == SType.STRING and not np.array_equal(
+            back.lengths, sample.lengths
+        ):
+            return (float("inf"), float("inf"))
+        return (float(len(frame)), float(dt))
+    except Exception:
+        return (float("inf"), float("inf"))
+
+
+def train(
+    sample_inputs: List[List[Stream]],
+    frontend: Frontend,
+    *,
+    pop_size: int = 16,
+    generations: int = 6,
+    n_points: int = 8,
+    seed: int = 0,
+    verbose: bool = False,
+) -> TrainedCompressor:
+    """Train a compressor from sample inputs (each a list of input streams)."""
+    t_start = time.perf_counter()
+    rng = random.Random(seed)
+
+    # 1. parse every sample and concatenate slot-wise
+    parsed = [frontend.parse(s) for s in sample_inputs]
+    n_slots = len(parsed[0])
+    if any(len(p) != n_slots for p in parsed):
+        raise ValueError("inconsistent stream counts across samples")
+    streams = [
+        _concat_streams([p[i] for p in parsed]) for i in range(n_slots)
+    ]
+    total_bytes = sum(s.nbytes for s in streams)
+
+    # 2. greedy clustering (paper: trainer merges clusters while it shrinks)
+    clustering = cluster_streams(streams)
+    if verbose:
+        print(f"[train] {n_slots} streams -> {len(clustering.clusters)} clusters")
+
+    # 3. per-cluster NSGA-II backend search
+    sigs: List[Tuple[int, int]] = []
+    per_cluster: List[Tuple[List[Optional[GNode]], List[Tuple[float, float]]]] = []
+    for ci, idxs in enumerate(clustering.clusters):
+        merged = _concat_streams([streams[i] for i in idxs])
+        sig = (int(merged.stype), merged.width)
+        sigs.append(sig)
+        sample = _sample_stream(merged)
+        res = nsga2(
+            _seed_genomes(sig),
+            lambda gno: _evaluate_genome(gno, sample, sig),
+            lambda gno, r: mutate(gno, sig, r),
+            lambda a, b, r: crossover(a, b, sig, r),
+            pop_size=pop_size,
+            generations=generations,
+            rng=random.Random(rng.randrange(1 << 30)),
+        )
+        # drop invalid entries
+        pareto = [
+            (g, o) for g, o in zip(res.pareto, res.pareto_objs) if o[0] != float("inf")
+        ] or [(None, _evaluate_genome(None, sample, sig))]
+        genomes, objs = zip(*pareto)
+        per_cluster.append((list(genomes), list(objs)))
+        if verbose:
+            print(
+                f"[train] cluster {ci} ({len(idxs)} streams, sig {sig}):"
+                f" {len(genomes)} pareto pts, best {min(o[0] for o in objs):.0f}B"
+            )
+
+    # 4. iterative Pareto merge across clusters (paper §VI-C last paragraph)
+    points: List[TradeoffPoint] = [TradeoffPoint([], 0.0, 0.0)]
+    for genomes, objs in per_cluster:
+        expanded: List[TradeoffPoint] = []
+        for pt in points:
+            for gno, (sz, tm) in zip(genomes, objs):
+                expanded.append(
+                    TradeoffPoint(pt.genomes + [gno], pt.est_size + sz, pt.est_time + tm)
+                )
+        objs2 = [(p.est_size, p.est_time) for p in expanded]
+        points, _ = pareto_prune(expanded, objs2, n_points)
+
+    dt = time.perf_counter() - t_start
+    return TrainedCompressor(
+        frontend,
+        clustering,
+        sigs,
+        sorted(points, key=lambda p: p.est_size),
+        stats={
+            "train_seconds": dt,
+            "train_bytes": float(total_bytes),
+            "train_speed_mib_min": total_bytes / (1 << 20) / (dt / 60.0) if dt else 0.0,
+            "n_clusters": float(len(clustering.clusters)),
+            "n_streams": float(n_slots),
+        },
+    )

@@ -1,0 +1,135 @@
+"""Graph-model core: plan validation, wire format, universal decoder,
+serialization, versioning."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionCtx,
+    Compressor,
+    GraphBuilder,
+    Plan,
+    VersionError,
+    compress,
+    decompress,
+    decompress_bytes,
+    numeric,
+    pipeline,
+    serial,
+    strings,
+)
+from repro.core.graph import KIND_CODEC, PlanNode
+from repro.core.wire import FrameError, read_frame
+
+
+def test_single_consumer_enforced():
+    g = GraphBuilder(1)
+    e = g.add("delta", g.input(0))
+    g.add("range_pack", e)
+    with pytest.raises(ValueError, match="consumed twice"):
+        g.add("range_pack", e)
+        g.build()
+
+
+def test_undefined_edge_rejected():
+    plan = Plan(1, (PlanNode(KIND_CODEC, "delta", (5,), 1),))
+    with pytest.raises(ValueError, match="undefined"):
+        plan.validate()
+
+
+def test_dup_enables_fanout():
+    g = GraphBuilder(1)
+    a, b = g.add("dup", g.input(0))
+    g.add("huffman", a)
+    g.add("fse", b)
+    c = Compressor(g.build())
+    assert c.roundtrip_check(b"abcabcabc" * 100)
+
+
+def test_empty_plan_stores_input():
+    frame = compress(Plan(1, ()), b"raw passthrough")
+    assert decompress_bytes(frame) == b"raw passthrough"
+
+
+def test_multi_input_graph():
+    g = GraphBuilder(2)
+    merged = g.add("concat", g.input(0), g.input(1))
+    g.add("huffman", merged)
+    plan = g.build()
+    a, b = serial(b"xxxxyyy" * 50), serial(b"zzzz" * 99)
+    frame = compress(plan, [a, b])
+    out = decompress(frame)
+    assert out[0].content_bytes() == a.content_bytes()
+    assert out[1].content_bytes() == b.content_bytes()
+
+
+def test_universal_decoder_needs_no_plan():
+    """Any frame decodes through the same decompress() — no plan argument."""
+    plans = [
+        pipeline("delta", "range_pack"),
+        pipeline("transpose", "huffman"),
+        pipeline("transpose", "fse"),
+    ]
+    x = numeric(np.arange(1000, dtype=np.uint32))
+    for p in plans:
+        frame = compress(p, [x])
+        (out,) = decompress(frame)  # same universal entry point
+        assert out.content_bytes() == x.content_bytes()
+
+
+def test_frame_crc_detects_corruption():
+    frame = bytearray(compress(pipeline("huffman"), b"hello entropy" * 64))
+    frame[len(frame) // 2] ^= 0xFF
+    with pytest.raises(FrameError, match="checksum"):
+        read_frame(bytes(frame))
+
+
+def test_frame_magic_rejected():
+    with pytest.raises(FrameError, match="magic"):
+        read_frame(b"NOPE" + b"\x00" * 32)
+
+
+def test_version_gating_encode():
+    with pytest.raises(ValueError, match="requires format version"):
+        compress(
+            pipeline("zlib_backend"), b"x" * 10, ctx=CompressionCtx(format_version=2)
+        )
+
+
+def test_version_out_of_range():
+    with pytest.raises(VersionError):
+        compress(pipeline("store"), b"x", ctx=CompressionCtx(format_version=99))
+
+
+def test_frame_records_selected_version():
+    frame = compress(pipeline("delta"), numeric(np.arange(10, dtype=np.uint8)),
+                     ctx=CompressionCtx(format_version=1))
+    version, *_ = read_frame(frame)
+    assert version == 1
+
+
+def test_serialized_compressor_roundtrip():
+    from repro.codecs import sao_profile
+
+    c = Compressor(sao_profile())
+    blob = c.serialize()
+    assert len(blob) < 2048, "paper §V-D: serialized compressors are <2KB"
+    c2 = Compressor.deserialize(blob)
+    assert c2.plan == c.plan
+
+
+def test_selector_expansion_is_recorded_resolved():
+    """Frames never contain selectors — only resolved codecs (paper §III-E)."""
+    from repro.codecs import generic_profile
+    from repro.core.codec import get_codec_by_id
+
+    frame = compress(generic_profile(), numeric(np.arange(5000, dtype=np.uint32)))
+    _, _, nodes, _ = read_frame(frame)
+    for node in nodes:
+        get_codec_by_id(node.codec_id)  # raises if not a registered codec
+
+
+def test_string_streams_roundtrip_via_wire():
+    s = strings([b"alpha", b"", b"gamma" * 10])
+    frame = compress(Plan(1, ()), [s])
+    (out,) = decompress(frame)
+    assert out.to_strings() == s.to_strings()

@@ -1,0 +1,50 @@
+"""The examples are part of the public API surface: the fast ones must run
+to completion as subprocesses."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_example(name: str, timeout: int = 240) -> str:
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(
+        [sys.executable, str(REPO / "examples" / name)],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+        cwd=REPO,
+    )
+    assert out.returncode == 0, f"{name} failed:\n{out.stderr[-2000:]}"
+    return out.stdout
+
+
+def test_quickstart():
+    out = run_example("quickstart.py")
+    assert "universal decoder: roundtrip OK" in out
+    assert "serialized compressor" in out
+
+
+def test_device_codec():
+    out = run_example("device_codec.py")
+    assert "bit-exact" in out
+    assert "exponent entropy" in out
+
+
+def test_serve_lm_smoke():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.serve",
+            "--arch", "llama3.2-1b", "--reduced",
+            "--batch", "2", "--prompt-len", "8", "--gen", "8",
+        ],
+        capture_output=True, text=True, timeout=240, env=env, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "decode:" in out.stdout

@@ -1,0 +1,144 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert bit-exact match between
+the Pallas kernel (interpret=True on CPU) and the ref.py pure-jnp oracle,
+plus cross-checks against the numpy host codecs."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+SIZES = [0, 1, 7, 128, 2048, 2049, 5000, 16384]
+rng = np.random.default_rng(42)
+
+
+def _u32(n, hi=None):
+    return rng.integers(0, hi if hi is not None else (1 << 32), size=n, dtype=np.uint64).astype(np.uint32)
+
+
+# --------------------------------------------------------------------- delta
+@pytest.mark.parametrize("n", SIZES)
+def test_delta_encode_matches_ref(n):
+    x = _u32(n)
+    got = np.asarray(ops.delta_encode(jnp.asarray(x)))
+    want = np.asarray(ref.delta_encode(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_delta_roundtrip_kernel(n):
+    x = _u32(n)
+    d = ops.delta_encode(jnp.asarray(x))
+    back = np.asarray(ops.delta_decode(d))
+    np.testing.assert_array_equal(back, x)
+
+
+def test_delta_matches_host_codec():
+    """Device kernel and numpy wire codec agree bit-for-bit."""
+    from repro.core import numeric
+    from repro.core.codec import get_codec
+
+    x = _u32(4999)
+    (host_out,), _ = get_codec("delta").run_encode([numeric(x)], {})
+    dev_out = np.asarray(ops.delta_encode(jnp.asarray(x)))
+    np.testing.assert_array_equal(host_out.data, dev_out)
+
+
+# --------------------------------------------------------------- byteshuffle
+@pytest.mark.parametrize("n", [0, 1, 100, 2048, 4097])
+@pytest.mark.parametrize("w", [2, 4, 8])
+def test_byteshuffle_matches_ref(n, w):
+    x = rng.integers(0, 256, size=(n, w), dtype=np.uint8)
+    got = np.asarray(ops.byteshuffle(jnp.asarray(x)))
+    want = np.asarray(ref.byteshuffle_encode(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, want)
+    back = np.asarray(ops.byteunshuffle(jnp.asarray(got)))
+    np.testing.assert_array_equal(back, x)
+
+
+# ------------------------------------------------------------------- bitpack
+@pytest.mark.parametrize("bits", [1, 2, 4, 8, 16, 32])
+@pytest.mark.parametrize("n", [0, 1, 31, 32, 1000, 8192])
+def test_bitpack_roundtrip_and_ref(bits, n):
+    x = _u32(n, hi=1 << bits)
+    packed = ops.bitpack(jnp.asarray(x), bits)
+    per = 32 // bits
+    want = np.asarray(ref.bitpack_encode(jnp.asarray(np.pad(x, (0, (-n) % per))), bits))[
+        : -(-n // per) if n else 0
+    ]
+    np.testing.assert_array_equal(np.asarray(packed), want)
+    back = np.asarray(ops.bitunpack(packed, bits, n))
+    np.testing.assert_array_equal(back, x)
+
+
+# ----------------------------------------------------------------- histogram
+@pytest.mark.parametrize("n", [0, 1, 4096, 5000, 65536])
+def test_histogram_matches_numpy(n):
+    x = rng.integers(0, 256, size=n, dtype=np.uint8)
+    got = np.asarray(ops.histogram(jnp.asarray(x)))
+    want = np.bincount(x, minlength=256).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_histogram_matches_ref():
+    x = rng.integers(0, 256, size=4096, dtype=np.uint8)
+    got = np.asarray(ops.histogram(jnp.asarray(x)))
+    want = np.asarray(ref.histogram(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------- float_split
+@pytest.mark.parametrize("n", [0, 1, 2048, 3000])
+@pytest.mark.parametrize("fmt", [(8, 23), (8, 7), (5, 10)])  # f32, bf16, f16
+def test_float_split_roundtrip_and_ref(n, fmt):
+    exp_bits, man_bits = fmt
+    width_bits = 1 + exp_bits + man_bits
+    u = _u32(n, hi=1 << min(width_bits, 32))
+    sign, exp, man = ops.float_split(jnp.asarray(u), exp_bits, man_bits)
+    rs, re, rm = ref.float_split_encode(jnp.asarray(u), exp_bits, man_bits)
+    np.testing.assert_array_equal(np.asarray(sign), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(exp), np.asarray(re))
+    np.testing.assert_array_equal(np.asarray(man), np.asarray(rm))
+    back = np.asarray(ops.float_merge(sign, exp, man, exp_bits, man_bits))
+    np.testing.assert_array_equal(back, u)
+
+
+def test_float_split_matches_host_codec():
+    from repro.core import numeric
+    from repro.core.codec import get_codec
+
+    f = rng.normal(size=5000).astype(np.float32)
+    outs, _ = get_codec("float_split").run_encode([numeric(f)], {"fmt": 2})
+    u = f.view(np.uint32)
+    sign, exp, man = ops.float_split(jnp.asarray(u), 8, 23)
+    np.testing.assert_array_equal(np.unpackbits(outs[0].data)[: f.size], np.asarray(sign))
+    np.testing.assert_array_equal(outs[1].data, np.asarray(exp).astype(np.uint8))
+    np.testing.assert_array_equal(outs[2].data, np.asarray(man))
+
+
+# ------------------------------------------------- fused delta+bitpack (K1)
+@pytest.mark.parametrize("bits", [4, 8, 16])
+@pytest.mark.parametrize("n", [0, 1, 100, 8192, 10000])
+def test_fused_delta_bitpack_roundtrip(bits, n):
+    # monotone stream with deltas < 2^bits: the documented lossless domain
+    steps = rng.integers(0, 1 << bits, size=n).astype(np.uint32)
+    x = np.cumsum(steps, dtype=np.uint32)
+    assert bool(ops.fused_delta_bitpack_fits(jnp.asarray(x), bits)) or n == 0
+    packed = ops.fused_delta_bitpack(jnp.asarray(x), bits)
+    want = np.asarray(
+        ref.fused_delta_bitpack_encode(
+            jnp.asarray(np.pad(x, (0, (-n) % (32 // bits)), mode="edge" if n else "constant")), bits
+        )
+    )
+    np.testing.assert_array_equal(np.asarray(packed), want[: packed.shape[0]])
+    back = np.asarray(ops.fused_delta_bitpack_decode(packed, bits, n))
+    np.testing.assert_array_equal(back, x)
+
+
+def test_fused_equals_unfused_composition():
+    """K1 invariant: fused kernel == delta ∘ bitpack composition."""
+    bits = 8
+    x = np.cumsum(rng.integers(0, 200, size=7000).astype(np.uint32), dtype=np.uint32)
+    fused = np.asarray(ops.fused_delta_bitpack(jnp.asarray(x), bits))
+    d = ops.delta_encode(jnp.asarray(x))
+    unfused = np.asarray(ops.bitpack(d, bits))
+    np.testing.assert_array_equal(fused, unfused)

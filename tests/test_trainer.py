@@ -1,0 +1,156 @@
+"""Trainer: NSGA-II invariants, GP genome validity, clustering behaviour,
+end-to-end training (paper §VI-C)."""
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Compressor, numeric, serial
+from repro.core.message import SType, Stream
+from repro.training import (
+    CsvFrontend,
+    NumericFrontend,
+    StructFrontend,
+    cluster_streams,
+    compile_genome,
+    crossover,
+    mutate,
+    nondominated_sort,
+    pareto_prune,
+    random_genome,
+    train,
+)
+
+rng_np = np.random.default_rng(0)
+
+
+# ----------------------------------------------------------------- NSGA-II
+@given(
+    st.lists(
+        st.tuples(st.floats(0, 100), st.floats(0, 100)), min_size=1, max_size=40
+    )
+)
+@settings(max_examples=30, deadline=None)
+def test_nondominated_sort_front0_is_nondominated(objs):
+    fronts = nondominated_sort(objs)
+    f0 = fronts[0]
+    for i in f0:
+        for j in f0:
+            if i != j:
+                assert not (
+                    objs[i][0] <= objs[j][0]
+                    and objs[i][1] <= objs[j][1]
+                    and (objs[i][0] < objs[j][0] or objs[i][1] < objs[j][1])
+                )
+
+
+@given(
+    st.lists(st.tuples(st.floats(0, 100), st.floats(0, 100)), min_size=5, max_size=40),
+    st.integers(1, 10),
+)
+@settings(max_examples=30, deadline=None)
+def test_pareto_prune_keeps_k(objs, k):
+    items = list(range(len(objs)))
+    kept, kobjs = pareto_prune(items, objs, k)
+    assert len(kept) == min(k, len(items))
+
+
+# ------------------------------------------------------------------ GP ops
+@pytest.mark.parametrize("sig", [(int(SType.NUMERIC), 4), (int(SType.SERIAL), 1),
+                                 (int(SType.NUMERIC), 8), (int(SType.STRUCT), 3)])
+def test_random_genomes_compile_and_roundtrip(sig):
+    r = random.Random(7)
+    stype, w = sig
+    if stype == int(SType.NUMERIC):
+        data = numeric(rng_np.integers(0, 1000, 500).astype(f"uint{8*w}"))
+    elif stype == int(SType.STRUCT):
+        from repro.core import struct as mk_struct
+
+        data = mk_struct(rng_np.integers(0, 5, 300 * w).astype(np.uint8), w)
+    else:
+        data = serial(rng_np.integers(0, 30, 800).astype(np.uint8).tobytes())
+    for _ in range(25):
+        gno = random_genome(sig, r)
+        plan = compile_genome(gno, sig)
+        c = Compressor(plan)
+        try:
+            assert c.roundtrip_check(data), "silent corruption is never allowed"
+        except ValueError:
+            # data-dependent applicability (e.g. bitpack >57 bits) may REJECT
+            # at encode time — a clean refusal, which the trainer discards
+            pass
+
+
+def test_mutate_and_crossover_stay_valid():
+    sig = (int(SType.NUMERIC), 4)
+    r = random.Random(3)
+    data = numeric(np.cumsum(rng_np.integers(0, 9, 400)).astype(np.uint32))
+    a = random_genome(sig, r)
+    b = random_genome(sig, r)
+    for _ in range(30):
+        a = mutate(a, sig, r)
+        child = crossover(a, b, sig, r)
+        assert Compressor(compile_genome(child, sig)).roundtrip_check(data)
+
+
+# -------------------------------------------------------------- clustering
+def test_clustering_merges_identical_streams():
+    # identical streams: zlib finds the cross-boundary match after concat,
+    # so merged size < sum of individual sizes -> greedy merge fires
+    base = rng_np.integers(0, 1 << 16, 4000).astype(np.uint32)
+    streams = [numeric(base), numeric(base.copy()), numeric(rng_np.integers(0, 1 << 30, 4000).astype(np.uint32))]
+    cl = cluster_streams(streams)
+    asn = cl.assignment()
+    assert asn[0] == asn[1], "identical streams should merge"
+    assert asn[2] != asn[0], "uncorrelated stream should stay apart"
+
+
+def test_clustering_respects_type_signatures():
+    streams = [numeric(np.arange(100, dtype=np.uint32)), numeric(np.arange(100, dtype=np.uint16))]
+    cl = cluster_streams(streams)
+    assert len(cl.clusters) == 2  # different widths can never concat
+
+
+# ------------------------------------------------------------- end-to-end
+def test_train_struct_end_to_end():
+    def sample(n):
+        a = np.sort(rng_np.integers(0, 1 << 20, n)).astype(np.uint32)
+        b = rng_np.integers(0, 7, n).astype(np.uint32)
+        rec = np.empty((n, 8), np.uint8)
+        rec[:, :4] = a.view(np.uint8).reshape(n, 4)
+        rec[:, 4:] = b.view(np.uint8).reshape(n, 4)
+        return rec.reshape(-1).tobytes()
+
+    tc = train(
+        [[serial(sample(1500))] for _ in range(2)],
+        StructFrontend(widths=(4, 4)),
+        pop_size=8,
+        generations=2,
+    )
+    test_blob = sample(4000)
+    plan = tc.best_ratio_plan()
+    c = Compressor(plan)
+    assert c.roundtrip_check(test_blob)
+    assert len(c.compress(test_blob)) < len(test_blob) * 0.6
+    # Pareto ordering: sizes ascending, times (roughly) descending
+    sizes = [p.est_size for p in tc.points]
+    assert sizes == sorted(sizes)
+    # serialized deployment (paper §V-D)
+    blob = Compressor(plan).serialize()
+    c2 = Compressor.deserialize(blob)
+    assert c2.roundtrip_check(test_blob)
+
+
+def test_train_csv_end_to_end():
+    rows = [b"%d,%s,%d" % (i, b"cat" if i % 3 else b"dog", (i * 7) % 50) for i in range(4000)]
+    blob = b"\n".join(rows) + b"\n"
+    tc = train(
+        [[serial(blob)]],
+        CsvFrontend(n_cols=3),
+        pop_size=10,
+        generations=4,
+    )
+    c = Compressor(tc.best_ratio_plan())
+    assert c.roundtrip_check(blob)
+    assert len(c.compress(blob)) < len(blob) * 0.5
