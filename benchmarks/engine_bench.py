@@ -1,0 +1,114 @@
+"""Engine-phase benchmarks: resolve-cache hit rate, host vs device backend,
+and chunked-parallel throughput.
+
+Rows (CSV, appended to benchmarks/run.py output):
+    engine/resolve_cache      — selector profile compressed repeatedly;
+                                derived shows the cache hit rate
+    engine/host_single        — one-shot host compression of the big input
+    engine/device_single      — same plan via the device backend
+    engine/chunked_host       — chunk_bytes split, thread-pool execution;
+                                derived shows the speedup vs host_single
+                                (acceptance floor: >= 1.5x on >= 32 MiB)
+
+The input is a >= 32 MiB synthetic numeric stream (delta-friendly cumsum) and
+the plan is delta -> transpose -> zlib, whose heavy stages release the GIL —
+which is exactly what chunked compression exploits.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    CompressionCtx,
+    compress,
+    decompress,
+    numeric,
+    pipeline,
+    resolve_cache_clear,
+    resolve_cache_info,
+)
+
+MIB = 1 << 20
+TOTAL_BYTES = int(os.environ.get("REPRO_ENGINE_BENCH_MIB", "32")) * MIB
+CHUNK_BYTES = 4 * MIB
+
+
+def _big_input():
+    rng = np.random.default_rng(0)
+    n = TOTAL_BYTES // 4
+    return numeric(np.cumsum(rng.integers(0, 50, n, dtype=np.int64)).astype(np.uint32))
+
+
+def _time_compress(plan, stream, **kw):
+    t0 = time.perf_counter()
+    frame = compress(plan, stream, **kw)
+    return time.perf_counter() - t0, frame
+
+
+def run(print_rows: bool = True):
+    rows = []
+
+    # -- resolve cache: selector expansion amortized across calls ------------
+    from repro.codecs import generic_profile
+
+    resolve_cache_clear()
+    prof = generic_profile()
+    small = numeric(np.cumsum(np.random.default_rng(1).integers(0, 9, 1 << 16)).astype(np.uint32))
+    n_calls = 6
+    t0 = time.perf_counter()
+    for _ in range(n_calls):
+        compress(prof, small)
+    per_call_us = (time.perf_counter() - t0) / n_calls * 1e6
+    info = resolve_cache_info()
+    top_level_hits = n_calls - 1  # first call misses, the rest reuse
+    hit_rate = info["hits"] / max(info["hits"] + info["misses"], 1)
+    rows.append(
+        f"engine/resolve_cache,{per_call_us:.1f},"
+        f"hit_rate={hit_rate:.2f};hits={info['hits']};misses={info['misses']};"
+        f"calls={n_calls};top_level_hits={top_level_hits}"
+    )
+
+    # -- backend + chunked throughput on the big input -----------------------
+    stream = _big_input()
+    raw_mib = stream.nbytes / MIB
+    plan = pipeline("delta", "transpose", ("zlib_backend", {"level": 1}))
+
+    t_host, frame_host = _time_compress(plan, stream)
+    assert decompress(frame_host)[0].content_bytes() == stream.content_bytes()
+    rows.append(
+        f"engine/host_single,{t_host*1e6:.1f},"
+        f"c_mibs={raw_mib/t_host:.2f};size={len(frame_host)};input_mib={raw_mib:.0f}"
+    )
+
+    # warm the jit caches so device_single measures steady state
+    warm = numeric(stream.data[: 1 << 16])
+    _time_compress(pipeline("delta", "transpose"), warm, backend="device")
+    t_dev, frame_dev = _time_compress(plan, stream, backend="device")
+    assert frame_dev == frame_host, "device frame must be byte-identical"
+    rows.append(
+        f"engine/device_single,{t_dev*1e6:.1f},"
+        f"c_mibs={raw_mib/t_dev:.2f};size={len(frame_dev)};bit_exact=1"
+    )
+
+    t_chunk, frame_chunk = _time_compress(plan, stream, chunk_bytes=CHUNK_BYTES)
+    assert decompress(frame_chunk)[0].content_bytes() == stream.content_bytes()
+    speedup = t_host / t_chunk
+    rows.append(
+        f"engine/chunked_host,{t_chunk*1e6:.1f},"
+        f"c_mibs={raw_mib/t_chunk:.2f};size={len(frame_chunk)};"
+        f"chunk_mib={CHUNK_BYTES/MIB:.0f};speedup={speedup:.2f};"
+        f"workers={os.cpu_count()}"
+    )
+
+    if print_rows:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -22,9 +22,15 @@ def run(print_rows: bool = True) -> Dict[str, List[Result]]:
         for comp in ("zlib-6", "zlib-9", "xz-9", "bz2-9"):
             enc, dec = COMPETITORS[comp]
             rows.append(time_codec(comp, blob, enc, dec))
-        # best-ratio trained point (paper Fig.6 is the ratio-focused config)
-        plan, _, _ = min(entry["plans"], key=lambda t: t[1])
-        rows.append(time_openzl_plan("openzl-trained", plan, streams))
+        # best-ratio trained point (paper Fig.6 is the ratio-focused config);
+        # fall back through the Pareto set if a plan picked on the training
+        # prefix refuses the full data (train/test range mismatch)
+        for plan, _, _ in sorted(entry["plans"], key=lambda t: t[1]):
+            try:
+                rows.append(time_openzl_plan("openzl-trained", plan, streams))
+                break
+            except ValueError as e:
+                print(f"# fig6_{name}: trained point skipped: {e}")
         all_results[name] = rows
         if print_rows:
             for r in rows:

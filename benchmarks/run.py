@@ -9,6 +9,7 @@ Emits ``name,us_per_call,derived`` CSV rows.  Sections:
     fig7_*       — paper Fig. 7   (ratio/speed Pareto frontiers)
     t3_training  — paper Table III (trainer stats)
     kernels      — Pallas kernel micro-bench + K1 fusion traffic model
+    engine       — resolve-cache hit rate, host/device/chunked throughput
     roofline     — §Roofline terms from the dry-run artifacts
 """
 from __future__ import annotations
@@ -38,6 +39,9 @@ def main() -> int:
     from . import kernels_bench
 
     kernels_bench.run()
+    from . import engine_bench
+
+    engine_bench.run()
     try:
         from . import roofline
 

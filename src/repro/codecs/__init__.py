@@ -1,5 +1,6 @@
 """The standard codec + selector suite.  Importing this package registers
-every codec (wire-stable ids) and selector with the core registries.
+every codec (wire-stable ids), every device-backend encoder twin, and every
+selector with the core registries.
 
 Codec id map (never reuse):
    1 store        2 dup          3 delta         4 zigzag       5 transpose
@@ -7,7 +8,7 @@ Codec id map (never reuse):
   11 split_n     12 concat      13 range_pack   14 huffman     15 fse
   16 lz77        17 zlib_backend 18 float_split 19 parse_numeric
   20 csv_split   21 string_split 22 transpose_split 23 interpret_numeric
-  24 lzma_backend  25 bz2_backend
+  24 lzma_backend  25 bz2_backend 26 fused_delta_bitpack (v4)
 """
 from . import basic  # noqa: F401
 from . import numeric  # noqa: F401

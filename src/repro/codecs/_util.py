@@ -66,6 +66,31 @@ class HeaderReader:
             raise ValueError("trailing bytes in codec header")
 
 
+# ------------------------------------------------------- device-backend glue
+_JAX_OK: bool = None  # tri-state: None = not probed yet
+
+
+def device_available() -> bool:
+    """True when jax is importable (the device backend can be offered)."""
+    global _JAX_OK
+    if _JAX_OK is None:
+        try:
+            import jax  # noqa: F401
+
+            _JAX_OK = True
+        except Exception:  # pragma: no cover - container always has jax
+            _JAX_OK = False
+    return _JAX_OK
+
+
+def device_use_pallas() -> bool:
+    """Real Mosaic kernels on TPU; the jit'd jnp oracle elsewhere (Pallas
+    interpret mode is a correctness tool, far too slow for the data path)."""
+    import jax
+
+    return jax.default_backend() == "tpu"
+
+
 def min_uint_width(max_value: int) -> int:
     if max_value < 1 << 8:
         return 1

@@ -16,10 +16,16 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.codec import CodecSpec, register_codec
+from repro.core.codec import CodecSpec, register_backend_codec, register_codec
 from repro.core.message import Stream, SType
 
-from ._util import HeaderReader, HeaderWriter, numeric_stream
+from ._util import (
+    HeaderReader,
+    HeaderWriter,
+    device_available,
+    device_use_pallas,
+    numeric_stream,
+)
 
 # fmt tag -> (width, exp_bits, man_bits)
 FORMATS = {
@@ -89,4 +95,40 @@ register_codec(
         min_version=3,
         doc="sign/exponent/mantissa planes (paper §VIII checkpoint compression)",
     )
+)
+
+
+# --------------------------------------------------------------- device twin
+# The float_split Pallas kernel works on u32 lanes, i.e. fmt 2 (float32);
+# other formats fall back to the host encoder.  Output planes and header are
+# bit-identical to the host path.
+def _float_split_applies_device(streams, params):
+    s = streams[0]
+    if not (device_available() and s.stype == SType.NUMERIC and s.width == 4):
+        return False
+    return int(params.get("fmt", _FMT_BY_WIDTH.get(s.width, -1))) == 2
+
+
+def _float_split_enc_device(streams, params):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    s = streams[0]
+    fmt = 2
+    _width, exp_bits, man_bits = FORMATS[fmt]
+    u = s.data.view(np.uint32)
+    sign, exp, man = ops.float_split(
+        jnp.asarray(u), exp_bits, man_bits, use_pallas=device_use_pallas()
+    )
+    h = HeaderWriter().u8(fmt).varint(u.size).done()
+    return [
+        Stream(_pack_sign_bits(np.asarray(sign, np.uint8)), SType.SERIAL, 1),
+        numeric_stream(np.asarray(exp).astype(_EXP_DTYPE[fmt], copy=False)),
+        numeric_stream(np.asarray(man).astype(_MAN_DTYPE[fmt], copy=False)),
+    ], h
+
+
+register_backend_codec(
+    "device", "float_split", _float_split_enc_device, _float_split_applies_device
 )

@@ -1,23 +1,30 @@
 """Numeric transforms (paper §II-B/C, §IV): delta, zigzag, transpose,
-transpose_split, bitpack, range_pack, rle, tokenize.
+transpose_split, bitpack, range_pack, rle, tokenize, fused_delta_bitpack.
 
 All are reversible; delta/zigzag are *reversible transforms*, rle/tokenize/
-bitpack/range_pack are *reductive*.  Everything is numpy-vectorized — these
-are the host twins of the Pallas kernels in ``repro.kernels``.
+bitpack/range_pack are *reductive*.  Everything is numpy-vectorized.
+
+Device twins: for the transform nodes that have Pallas kernels
+(``repro.kernels.ops``) this module also registers *device-backend* encoders
+(``register_backend_codec``) that are bit-exact with the host encoders — same
+output streams, same headers — so frames are byte-identical regardless of
+which backend produced them.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
-from repro.core.codec import CodecSpec, register_codec
+from repro.core.codec import CodecSpec, register_backend_codec, register_codec
 from repro.core.message import Stream, SType, from_wire
 
 from ._util import (
     UNSIGNED,
     HeaderReader,
     HeaderWriter,
+    device_available,
+    device_use_pallas,
     min_uint_width,
     numeric_stream,
 )
@@ -379,4 +386,275 @@ register_codec(
         min_version=2,
         doc="(alphabet, indices) split — the paper's motivating codec (§III-C)",
     )
+)
+
+
+# ------------------------------------------------- fused delta+bitpack (K1)
+# Wire twin of kernels/fused_delta_bitpack.py: one HBM pass instead of two.
+# Semantics are fixed in the u32 domain (matching the kernel): d[0] = x[0],
+# d[i] = (x[i] - x[i-1]) mod 2^32, packed LSB-first at `bits` per value with
+# bits | 32 — which makes the packed words' little-endian bytes identical to
+# the host bitpack's continuous bitstream.
+FUSED_BITS_CHOICES = (1, 2, 4, 8, 16, 32)
+# dynamic bit selection stops here: packing >16 bits per delta loses to
+# running delta+bitpack separately (which adapts to the stream width)
+_FUSED_DYNAMIC_MAX_BITS = 16
+
+
+def _u32_delta(s: Stream) -> np.ndarray:
+    x = s.data.view(UNSIGNED[s.width]).astype(np.uint32, copy=False)
+    d = np.empty_like(x)
+    if x.size:
+        d[0] = x[0]
+        np.subtract(x[1:], x[:-1], out=d[1:])
+    return d
+
+
+def _bits_for_need(need: int, explicit_bits: int) -> Optional[int]:
+    """Packing width for a max-delta bit length, or None to refuse.
+
+    Dynamic selection only fuses when the width is *exact* (need is itself a
+    32-divisor <= 16): rounding 3 bits up to 4 would inflate the packed
+    stream vs separate delta+bitpack, and the device backend guarantees
+    frames never larger than the host's.  Explicit widths are the caller's
+    ratio decision and are honored as long as the kernel can express them.
+    """
+    if explicit_bits:
+        if explicit_bits not in FUSED_BITS_CHOICES or need > explicit_bits:
+            return None
+        return explicit_bits
+    if need in FUSED_BITS_CHOICES and need <= _FUSED_DYNAMIC_MAX_BITS:
+        return need
+    return None
+
+
+def _bits_for_delta(d: np.ndarray, explicit_bits: int) -> Optional[int]:
+    maxd = int(d.max()) if d.size else 0
+    return _bits_for_need(max(maxd.bit_length(), 1), explicit_bits)
+
+
+def fused_bits_for(s: Stream, explicit_bits: int = 0) -> Optional[int]:
+    """Packing width if the fused kernel's lossless precondition holds.
+
+    Returns None when the node must run as separate delta+bitpack: non-numeric
+    or u64 input, a wrapped u32 delta that does not fit, an explicit width the
+    32-bit-word kernel cannot express, or (dynamic case) a width where fusion
+    stops paying for itself.
+    """
+    if s.stype != SType.NUMERIC or s.width not in (1, 2, 4):
+        return None
+    return _bits_for_delta(_u32_delta(s), explicit_bits)
+
+
+def _fused_enc(streams, params):
+    s = streams[0]
+    if s.stype != SType.NUMERIC or s.width not in (1, 2, 4):
+        raise ValueError("fused_delta_bitpack: numeric(1/2/4) streams only")
+    d = _u32_delta(s)  # computed once: precondition check and packing share it
+    bits = _bits_for_delta(d, int(params.get("bits", 0)))
+    if bits is None:
+        raise ValueError(
+            "fused_delta_bitpack: lossless precondition failed (delta too wide)"
+        )
+    packed = _pack_bits(d, bits)
+    h = HeaderWriter().u8(bits).u8(s.width).varint(s.n_elts).done()
+    return [Stream(packed, SType.SERIAL, 1)], h
+
+
+def _fused_dec(outs, header):
+    r = HeaderReader(header)
+    bits = r.u8()
+    width = r.u8()
+    n = r.varint()
+    r.expect_end()
+    d = _unpack_bits(outs[0].data, bits, n, 4)
+    with np.errstate(over="ignore"):
+        x = np.cumsum(d, dtype=np.uint32)
+    return [numeric_stream(x.astype(UNSIGNED[width], copy=False))]
+
+
+register_codec(
+    CodecSpec(
+        "fused_delta_bitpack",
+        codec_id=26,
+        encode=_fused_enc,
+        decode=_fused_dec,
+        min_version=4,
+        doc="single-pass delta+bitpack (device kernel K1); u32-domain deltas",
+    )
+)
+
+
+# --------------------------------------------------------------- device twins
+# Encoders routed through the jit'd Pallas wrappers (kernels/ops.py).  Each
+# `applies` predicate gates on exactly the shapes the kernel expresses; the
+# engine falls back to the host encoder otherwise.  Outputs and headers are
+# bit-identical to the host path — verified by tests/test_engine_phases.py.
+def _dev_ready(s: Stream, widths=(1, 2, 4)) -> bool:
+    return device_available() and s.stype == SType.NUMERIC and s.width in widths
+
+
+def _delta_applies_device(streams, params):
+    return _dev_ready(streams[0])
+
+
+def _delta_enc_device(streams, params):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    s = streams[0]
+    x = s.data.view(UNSIGNED[s.width])
+    d32 = np.asarray(
+        ops.delta_encode(
+            jnp.asarray(x.astype(np.uint32, copy=False)),
+            use_pallas=device_use_pallas(),
+        )
+    )
+    # truncating back to the stream width is exact: subtraction mod 2^32
+    # then mod 2^(8w) equals subtraction mod 2^(8w)
+    return [numeric_stream(d32.astype(UNSIGNED[s.width], copy=False))], b""
+
+
+register_backend_codec("device", "delta", _delta_enc_device, _delta_applies_device)
+
+
+def _bitpack_applies_device(streams, params):
+    """One max() pass decides routability; the chosen bits are stashed in
+    ``params`` (run_encode_via passes the same dict to applies and encode) so
+    the encoder does not rescan the array."""
+    s = streams[0]
+    if not _dev_ready(s):
+        return False
+    x = s.data.view(UNSIGNED[s.width])
+    maxv = int(x.max()) if x.size else 0
+    bits = int(params.get("bits", 0)) or max(maxv.bit_length(), 1)
+    # the kernel packs u32 words: bits must divide 32 and values must fit
+    if bits not in FUSED_BITS_CHOICES or maxv >= (1 << bits):
+        return False
+    params["_device_bits"] = bits
+    return True
+
+
+def _packed_words_to_bytes(words: np.ndarray, n: int, bits: int) -> np.ndarray:
+    """LE word bytes truncated to the host codec's ceil(n*bits/8) length."""
+    nbytes = (n * bits + 7) // 8
+    return np.ascontiguousarray(words.view(np.uint8)[:nbytes])
+
+
+def _bitpack_enc_device(streams, params):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    s = streams[0]
+    x = s.data.view(UNSIGNED[s.width])
+    bits = params.get("_device_bits") or int(params.get("bits", 0)) or max(
+        (int(x.max()) if x.size else 0).bit_length(), 1
+    )
+    words = np.asarray(
+        ops.bitpack(
+            jnp.asarray(x.astype(np.uint32, copy=False)),
+            bits,
+            use_pallas=device_use_pallas(),
+        )
+    )
+    packed = _packed_words_to_bytes(words, x.size, bits)
+    h = HeaderWriter().u8(bits).u8(s.width).varint(x.size).done()
+    return [Stream(packed, SType.SERIAL, 1)], h
+
+
+register_backend_codec("device", "bitpack", _bitpack_enc_device, _bitpack_applies_device)
+
+
+def _fused_applies_device(streams, params):
+    # static checks only; the encoder validates the data-dependent lossless
+    # precondition itself and raises a refusal (the executor's lowering signal)
+    explicit = int(params.get("bits", 0))
+    return _dev_ready(streams[0]) and (
+        not explicit or explicit in FUSED_BITS_CHOICES
+    )
+
+
+def _fused_enc_device(streams, params):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    s = streams[0]
+    if s.stype != SType.NUMERIC or s.width not in (1, 2, 4):
+        raise ValueError("fused_delta_bitpack: numeric(1/2/4) streams only")
+    x = s.data.view(UNSIGNED[s.width]).astype(np.uint32, copy=False)
+    xj = jnp.asarray(x)
+    # precondition check stays on device — the host never touches the deltas
+    maxd = int(jnp.max(ref.delta_encode(xj))) if x.size else 0
+    bits = _bits_for_need(max(maxd.bit_length(), 1), int(params.get("bits", 0)))
+    if bits is None:
+        raise ValueError(
+            "fused_delta_bitpack: lossless precondition failed (delta too wide)"
+        )
+    words = np.asarray(
+        ops.fused_delta_bitpack(xj, bits, use_pallas=device_use_pallas())
+    )
+    packed = _packed_words_to_bytes(words, x.size, bits).copy()
+    # the kernel zero-pads the *input*, so the padding deltas (0 - x[-1]) can
+    # smear garbage into the final partial byte; the host bitstream is zero
+    # there — mask to stay bit-identical
+    tail_bits = (x.size * bits) % 8
+    if tail_bits and packed.size:
+        packed[-1] &= (1 << tail_bits) - 1
+    h = HeaderWriter().u8(bits).u8(s.width).varint(x.size).done()
+    return [Stream(packed, SType.SERIAL, 1)], h
+
+
+register_backend_codec(
+    "device", "fused_delta_bitpack", _fused_enc_device, _fused_applies_device
+)
+
+
+def _shuffle_planes(s: Stream) -> np.ndarray:
+    """(w, n) byte planes of a fixed-width stream via the byteshuffle kernel."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    raw = np.frombuffer(s.content_bytes(), dtype=np.uint8)
+    mat = raw.reshape(-1, s.width)
+    return np.asarray(ops.byteshuffle(jnp.asarray(mat), use_pallas=device_use_pallas()))
+
+
+def _transpose_applies_device(streams, params):
+    s = streams[0]
+    return (
+        device_available()
+        and s.stype in (SType.STRUCT, SType.NUMERIC)
+        and s.width >= 1
+    )
+
+
+def _transpose_enc_device(streams, params):
+    s = streams[0]
+    planes = _shuffle_planes(s)
+    h = HeaderWriter().u8(int(s.stype)).varint(s.width).done()
+    return [Stream(np.ascontiguousarray(planes).reshape(-1), SType.SERIAL, 1)], h
+
+
+register_backend_codec(
+    "device", "transpose", _transpose_enc_device, _transpose_applies_device
+)
+
+
+def _transpose_split_enc_device(streams, params):
+    s = streams[0]
+    planes = _shuffle_planes(s)
+    outs = [
+        Stream(np.ascontiguousarray(planes[j]), SType.SERIAL, 1)
+        for j in range(s.width)
+    ]
+    h = HeaderWriter().u8(int(s.stype)).varint(s.width).done()
+    return outs, h
+
+
+register_backend_codec(
+    "device", "transpose_split", _transpose_split_enc_device, _transpose_applies_device
 )

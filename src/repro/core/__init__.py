@@ -12,13 +12,35 @@ Public API:
 """
 from .message import Stream, SType, serial, numeric, struct, strings  # noqa: F401
 from .graph import GraphBuilder, Plan, PlanNode, pipeline  # noqa: F401
-from .codec import CodecSpec, register_codec, get_codec, all_codecs  # noqa: F401
+from .codec import (  # noqa: F401
+    CodecSpec,
+    register_codec,
+    get_codec,
+    all_codecs,
+    register_backend_codec,
+    get_backend_codec,
+    available_backends,
+)
 from .selector import SelectorSpec, register_selector, get_selector  # noqa: F401
 from .engine import (  # noqa: F401
     CompressionCtx,
     Compressor,
+    ResolvedPlan,
+    ResolvedStep,
+    StreamMeta,
     compress,
     decompress,
     decompress_bytes,
+    execute,
+    fuse_resolved,
+    resolve,
+    resolve_cache_clear,
+    resolve_cache_info,
+    stream_meta,
 )
-from .versioning import CURRENT_FORMAT_VERSION, MIN_FORMAT_VERSION, VersionError  # noqa: F401
+from .versioning import (  # noqa: F401
+    CONTAINER_MIN_VERSION,
+    CURRENT_FORMAT_VERSION,
+    MIN_FORMAT_VERSION,
+    VersionError,
+)

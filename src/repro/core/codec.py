@@ -10,15 +10,37 @@ contract that makes the *universal decoder* possible (paper §III-D):
 
 Codec ids are wire-stable; ``min_version`` implements the paper's codec-by-codec
 format-version gating (§V-C).
+
+Backends
+--------
+The *encode* side of a codec may additionally be implemented per execution
+backend (``register_backend_codec``).  The engine's ``execute`` phase asks the
+selected backend for an implementation of each resolved node; when one is
+registered and its ``applies`` predicate accepts the concrete streams, it is
+used — otherwise execution falls back to the host encoder.  Backend encoders
+must be bit-exact with the host encoder (same output streams, same header);
+decode is always the host (universal-decoder) path.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .message import Stream
 
-__all__ = ["CodecSpec", "register_codec", "get_codec", "get_codec_by_id", "all_codecs"]
+__all__ = [
+    "CodecSpec",
+    "register_codec",
+    "get_codec",
+    "get_codec_by_id",
+    "all_codecs",
+    "BackendCodecImpl",
+    "register_backend_codec",
+    "get_backend_codec",
+    "available_backends",
+    "run_encode_via",
+]
 
 EncodeFn = Callable[..., Tuple[List[Stream], bytes]]
 DecodeFn = Callable[[Sequence[Stream], bytes], List[Stream]]
@@ -93,12 +115,93 @@ def all_codecs() -> Dict[str, CodecSpec]:
     return dict(_BY_NAME)
 
 
+# ----------------------------------------------------------------- backends
+HOST_BACKEND = "host"
+
+ApplyFn = Callable[[Sequence[Stream], dict], bool]
+
+
+@dataclass(frozen=True)
+class BackendCodecImpl:
+    """An alternate encoder for (backend, codec) — e.g. a Pallas kernel."""
+
+    backend: str
+    codec_name: str
+    encode: EncodeFn
+    applies: ApplyFn  # routability predicate over concrete (streams, params)
+
+
+_BACKEND_IMPLS: Dict[Tuple[str, str], BackendCodecImpl] = {}
+
+
+def register_backend_codec(
+    backend: str,
+    codec_name: str,
+    encode: EncodeFn,
+    applies: Optional[ApplyFn] = None,
+) -> BackendCodecImpl:
+    if backend == HOST_BACKEND:
+        raise ValueError("'host' is the codec's own encoder; register others")
+    key = (backend, codec_name)
+    if key in _BACKEND_IMPLS:
+        raise ValueError(f"duplicate backend impl {backend}:{codec_name}")
+    impl = BackendCodecImpl(backend, codec_name, encode, applies or (lambda s, p: True))
+    _BACKEND_IMPLS[key] = impl
+    return impl
+
+
+def get_backend_codec(backend: str, codec_name: str) -> Optional[BackendCodecImpl]:
+    _ensure_standard_library()
+    return _BACKEND_IMPLS.get((backend, codec_name))
+
+
+def available_backends() -> List[str]:
+    """'host' plus every backend with at least one registered encoder."""
+    _ensure_standard_library()
+    return [HOST_BACKEND] + sorted({b for b, _ in _BACKEND_IMPLS})
+
+
+def run_encode_via(
+    spec: CodecSpec,
+    backend: str,
+    streams: Sequence[Stream],
+    params: Optional[dict] = None,
+) -> Tuple[List[Stream], bytes]:
+    """Encode through ``backend`` when an applicable impl exists, else host.
+
+    Backend output passes the same postconditions as the host encoder.
+    """
+    params = dict(params or {})
+    if backend != HOST_BACKEND:
+        impl = get_backend_codec(backend, spec.name)
+        if impl is not None and impl.applies(streams, params):
+            outs, header = impl.encode(list(streams), params)
+            if spec.n_outputs >= 0 and len(outs) != spec.n_outputs:
+                raise AssertionError(
+                    f"backend {backend}:{spec.name}: produced {len(outs)} outputs,"
+                    f" spec says {spec.n_outputs}"
+                )
+            if not isinstance(header, (bytes, bytearray)):
+                raise AssertionError(f"backend {backend}:{spec.name}: header must be bytes")
+            return [o.validate() for o in outs], bytes(header)
+    return spec.run_encode(streams, params)
+
+
 _loaded = False
+_load_lock = threading.RLock()
 
 
 def _ensure_standard_library() -> None:
-    """Lazily import the standard codec suite so `core` has no import cycle."""
+    """Lazily import the standard codec suite so `core` has no import cycle.
+
+    Thread-safe: the loaded flag is only set after the import completes (a
+    fresh process decoding a multi-chunk container hits this from the decode
+    thread pool, all threads at once).
+    """
     global _loaded
     if not _loaded:
-        _loaded = True
-        from repro import codecs as _  # noqa: F401  (registers on import)
+        with _load_lock:
+            if not _loaded:
+                from repro import codecs as _  # noqa: F401  (registers on import)
+
+                _loaded = True

@@ -1,29 +1,54 @@
-"""The execution engine: compress (with selector expansion) and the universal
-decoder (paper §III-D).
+"""The two-phase execution engine (paper §III-D, §V).
 
-Compression walks the plan in topological order, running codec encoders and
-expanding selectors recursively.  The result is a *resolved graph* — a linear
-record of (codec, input-edge-ids, n_out, header) — plus the terminal streams.
-Both are serialized by :mod:`repro.core.wire` into a self-describing frame.
+Compression is split into:
 
-Decompression is purely procedural: parse the frame, then run codec decoders
-in reverse topological order.  No parameters, no selectors, no user code — any
-frame any graph ever produced decodes with this one function.
+  * **resolve** — ``resolve(plan, streams, ctx) -> ResolvedPlan``: selector
+    expansion.  Walks the plan in topological order, expanding selectors
+    recursively, and emits a linear codec-only program.  Resolution is
+    memoized on ``(plan, stream metas, level, format_version)`` so a deployed
+    compressor pays for selector trials once per stream shape, not once per
+    ``compress()`` call.
+  * **execute** — ``execute(resolved, streams, backend=...) -> frame``: runs
+    the codec encoders over concrete data.  Encoders dispatch per *backend*:
+    ``host`` is the numpy codec suite; ``device`` routes numeric transform
+    nodes through the jit'd Pallas wrappers in ``repro.kernels.ops`` (bit-exact
+    with host) and applies a graph-rewrite pass fusing adjacent
+    ``delta``+``bitpack`` nodes into the single-pass ``fused_delta_bitpack``
+    kernel when its lossless precondition holds.
+
+``compress()`` composes the two and optionally chunks large inputs
+(``chunk_bytes=N``) into independently compressed pieces executed on a thread
+pool (numpy/zlib/JAX release the GIL) and stored in a multi-chunk container
+frame (``wire.py``, format v4+).
+
+Decompression is purely procedural and backend-free: parse the frame, run
+codec decoders in reverse topological order.  No parameters, no selectors, no
+user code — any frame any graph ever produced decodes with this one function,
+including both single- and multi-chunk frames.
 """
 from __future__ import annotations
 
-import time
+import os
+import threading
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from . import wire
-from .codec import get_codec, get_codec_by_id
+from .codec import (
+    available_backends,
+    get_codec,
+    get_codec_by_id,
+    run_encode_via,
+)
 from .graph import KIND_CODEC, KIND_SELECTOR, Plan
-from .message import Stream, serial
+from .message import Stream, SType, serial
 from .selector import get_selector
 from .versioning import (
+    CONTAINER_MIN_VERSION,
     CURRENT_FORMAT_VERSION,
     check_compress_version,
     check_decode_version,
@@ -32,11 +57,22 @@ from .versioning import (
 __all__ = [
     "CompressionCtx",
     "ResolvedNode",
+    "ResolvedStep",
+    "ResolvedPlan",
+    "StreamMeta",
+    "stream_meta",
+    "resolve",
+    "execute",
+    "fuse_resolved",
+    "resolve_cache_info",
+    "resolve_cache_clear",
     "compress",
     "decompress",
     "decompress_bytes",
     "Compressor",
 ]
+
+FUSED_NAME = "fused_delta_bitpack"
 
 
 @dataclass
@@ -50,20 +86,84 @@ class CompressionCtx:
 
 @dataclass(frozen=True)
 class ResolvedNode:
+    """One executed codec as recorded on the wire (headers are per-call)."""
+
     codec_id: int
     inputs: Tuple[int, ...]
     n_out: int
     header: bytes
 
 
-class _Execution:
-    """Mutable state while compressing: resolved edge table + node list."""
+# ----------------------------------------------------------- resolved plans
+@dataclass(frozen=True)
+class StreamMeta:
+    """The shape of a stream, for resolve-cache keying (not its contents)."""
+
+    stype: SType
+    width: int
+    size_bucket: int  # floor(log2(n_elts))+1 — selector choices track scale
+
+
+def stream_meta(s: Stream) -> StreamMeta:
+    return StreamMeta(s.stype, s.width, int(s.n_elts).bit_length())
+
+
+@dataclass(frozen=True)
+class ResolvedStep:
+    """One codec invocation in a resolved program.
+
+    Edge ids are *resolved-plan* ids: inputs ``0..n_inputs-1`` are the graph
+    inputs, each step's outputs take the next consecutive ids.  The execute
+    phase maps these to runtime edge ids (they diverge only when a fused step
+    falls back to its constituent codecs).
+    """
+
+    name: str
+    codec_id: int
+    inputs: Tuple[int, ...]
+    n_out: int
+    params: tuple = ()  # frozen dict items (graph.py _freeze format)
+
+    def param_dict(self) -> dict:
+        from .graph import _thaw
+
+        return _thaw(self.params) if self.params else {}
+
+
+@dataclass(frozen=True)
+class ResolvedPlan:
+    """A selector-free compression program: the cacheable resolve artifact."""
+
+    n_inputs: int
+    steps: Tuple[ResolvedStep, ...]
+    format_version: int
+    level: int
+    name: str = ""
+    fused: bool = False  # True once the delta+bitpack rewrite has run
+
+    @property
+    def n_edges(self) -> int:
+        return self.n_inputs + sum(s.n_out for s in self.steps)
+
+    def codec_names(self) -> List[str]:
+        return [s.name for s in self.steps]
+
+
+# ------------------------------------------------------------- resolve phase
+class _Resolver:
+    """Expands selectors by walking the plan over concrete streams.
+
+    Intermediate streams are materialized with host encoders because nested
+    selectors sample their *actual* inputs (trial compression).  The encoded
+    bytes are discarded — only the step list survives, which is what makes
+    the result reusable across calls.
+    """
 
     def __init__(self, ctx: CompressionCtx):
         self.ctx = ctx
         self.edges: List[Stream] = []
         self.consumed: List[bool] = []
-        self.nodes: List[ResolvedNode] = []
+        self.steps: List[ResolvedStep] = []
 
     def new_edge(self, s: Stream) -> int:
         self.edges.append(s)
@@ -72,7 +172,7 @@ class _Execution:
 
     def consume(self, e: int) -> Stream:
         if self.consumed[e]:
-            raise AssertionError(f"edge {e} consumed twice at runtime")
+            raise AssertionError(f"edge {e} consumed twice at resolution")
         self.consumed[e] = True
         return self.edges[e]
 
@@ -89,23 +189,19 @@ class _Execution:
         for node in plan.nodes:
             in_ids = [emap[e] for e in node.inputs]
             if node.kind == KIND_CODEC:
-                spec = get_codec(node.name)
-                if spec.min_version > self.ctx.format_version:
-                    raise ValueError(
-                        f"codec {node.name!r} requires format version"
-                        f" >= {spec.min_version}, compressing at"
-                        f" {self.ctx.format_version}"
-                    )
+                spec = _checked_codec(node.name, self.ctx.format_version)
                 ins = [self.consume(e) for e in in_ids]
-                outs, header = spec.run_encode(ins, node.param_dict())
+                outs, _header = spec.run_encode(ins, node.param_dict())
                 if len(outs) != node.n_out:
                     raise AssertionError(
                         f"codec {node.name}: declared n_out={node.n_out},"
                         f" produced {len(outs)}"
                     )
                 out_ids = [self.new_edge(o) for o in outs]
-                self.nodes.append(
-                    ResolvedNode(spec.codec_id, tuple(in_ids), len(outs), header)
+                self.steps.append(
+                    ResolvedStep(
+                        node.name, spec.codec_id, tuple(in_ids), node.n_out, node.params
+                    )
                 )
                 for k, oid in enumerate(out_ids):
                     emap[next_plan_edge + k] = oid
@@ -117,36 +213,486 @@ class _Execution:
                 self.run_plan(subplan, in_ids, depth + 1)
 
 
+def _checked_codec(name: str, format_version: int):
+    spec = get_codec(name)
+    if spec.min_version > format_version:
+        raise ValueError(
+            f"codec {name!r} requires format version"
+            f" >= {spec.min_version}, compressing at {format_version}"
+        )
+    return spec
+
+
+def _flatten(plan: Plan, ctx: CompressionCtx) -> Tuple[ResolvedStep, ...]:
+    """Selector-free plans resolve without touching any data."""
+    steps = []
+    for node in plan.nodes:
+        spec = _checked_codec(node.name, ctx.format_version)
+        steps.append(
+            ResolvedStep(node.name, spec.codec_id, node.inputs, node.n_out, node.params)
+        )
+    return tuple(steps)
+
+
+# The memo: (plan, input metas, level, format_version) -> ResolvedPlan.  LRU
+# so long-running services with many stream shapes stay bounded.
+_CACHE_MAX = 512
+_cache: "OrderedDict[tuple, ResolvedPlan]" = OrderedDict()
+_cache_lock = threading.Lock()
+_cache_stats = {"hits": 0, "misses": 0}
+
+
+def resolve_cache_info() -> dict:
+    with _cache_lock:
+        return {
+            "hits": _cache_stats["hits"],
+            "misses": _cache_stats["misses"],
+            "size": len(_cache),
+            "maxsize": _CACHE_MAX,
+        }
+
+
+def resolve_cache_clear() -> None:
+    with _cache_lock:
+        _cache.clear()
+        _cache_stats["hits"] = 0
+        _cache_stats["misses"] = 0
+
+
+def _as_streams(inputs) -> List[Stream]:
+    if isinstance(inputs, (bytes, bytearray, memoryview)):
+        return [serial(inputs)]
+    if isinstance(inputs, Stream):
+        return [inputs]
+    return [s for s in inputs]
+
+
+def resolve(
+    plan: Plan,
+    inputs: Union[Stream, bytes, Sequence[Stream], Sequence[StreamMeta]],
+    ctx: Optional[CompressionCtx] = None,
+    *,
+    use_cache: bool = True,
+) -> ResolvedPlan:
+    """Phase 1: expand selectors once -> a cached, inspectable ResolvedPlan.
+
+    ``inputs`` may be concrete streams or bare :class:`StreamMeta` values;
+    metas suffice only for selector-free plans (dynamic plans need real data
+    to run trial compressions on).
+    """
+    resolved, _was_hit = _resolve_impl(plan, inputs, ctx, use_cache=use_cache)
+    return resolved
+
+
+def _resolve_impl(
+    plan: Plan,
+    inputs,
+    ctx: Optional[CompressionCtx],
+    *,
+    use_cache: bool,
+) -> Tuple[ResolvedPlan, bool]:
+    """resolve() plus whether the result came from the cache (for fallback)."""
+    ctx = ctx or CompressionCtx()
+    check_compress_version(ctx.format_version)
+    items = _as_streams(inputs) if not _all_metas(inputs) else list(inputs)
+    metas_only = _all_metas(items)
+    if metas_only:
+        metas = tuple(items)
+    else:
+        items = [s.validate() for s in items]
+        metas = tuple(stream_meta(s) for s in items)
+    if len(metas) != plan.n_inputs:
+        raise ValueError(
+            f"plan {plan.name!r} wants {plan.n_inputs} inputs, got {len(metas)}"
+        )
+
+    key = (plan, metas, ctx.level, ctx.format_version)
+    if use_cache:
+        with _cache_lock:
+            hit = _cache.get(key)
+            if hit is not None:
+                _cache.move_to_end(key)
+                _cache_stats["hits"] += 1
+                return hit, True
+            _cache_stats["misses"] += 1
+
+    plan.validate()
+    if plan.is_resolved:
+        steps = _flatten(plan, ctx)
+    else:
+        if metas_only:
+            raise ValueError(
+                "resolving a plan with selectors requires concrete streams,"
+                " not StreamMeta"
+            )
+        r = _Resolver(ctx)
+        in_ids = [r.new_edge(s) for s in items]
+        r.run_plan(plan, in_ids)
+        steps = tuple(r.steps)
+    resolved = ResolvedPlan(
+        len(metas), steps, ctx.format_version, ctx.level, plan.name
+    )
+    if use_cache:
+        with _cache_lock:
+            _cache[key] = resolved
+            while len(_cache) > _CACHE_MAX:
+                _cache.popitem(last=False)
+    return resolved, False
+
+
+def _all_metas(inputs) -> bool:
+    return (
+        isinstance(inputs, (list, tuple))
+        and len(inputs) > 0
+        and all(isinstance(x, StreamMeta) for x in inputs)
+    )
+
+
+# ------------------------------------------------------------- fusion pass
+def fuse_resolved(resolved: ResolvedPlan) -> ResolvedPlan:
+    """Graph rewrite: adjacent ``delta`` -> ``bitpack`` chains become one
+    ``fused_delta_bitpack`` step (single-pass kernel on the device backend).
+
+    Static preconditions only — the data-dependent lossless precondition
+    (every wrapped u32 delta fits in the packing width) is checked per call by
+    the executor, which lowers the step back to its constituents when it
+    fails.  Gated on the fused codec's ``min_version`` (format v4).
+    """
+    from repro.codecs.numeric import FUSED_BITS_CHOICES  # lazy: avoids cycle
+
+    fused_spec = get_codec(FUSED_NAME)
+    if resolved.fused or resolved.format_version < fused_spec.min_version:
+        return resolved
+    steps = resolved.steps
+    # bitpack step index -> its delta producer index, for fusable pairs
+    producer_of: Dict[int, int] = {}
+    out_edge_of: Dict[int, int] = {}  # step idx -> first output edge id
+    e = resolved.n_inputs
+    for i, s in enumerate(steps):
+        out_edge_of[i] = e
+        e += s.n_out
+    delta_by_out = {
+        out_edge_of[i]: i
+        for i, s in enumerate(steps)
+        if s.name == "delta" and s.n_out == 1 and not s.params
+    }
+    for j, s in enumerate(steps):
+        if s.name != "bitpack" or len(s.inputs) != 1:
+            continue
+        bits = int(s.param_dict().get("bits", 0))
+        if bits and bits not in FUSED_BITS_CHOICES:
+            continue  # packing width the 32-bit-word kernel can't express
+        i = delta_by_out.get(s.inputs[0])
+        if i is not None:
+            producer_of[j] = i
+    if not producer_of:
+        return ResolvedPlan(
+            resolved.n_inputs, steps, resolved.format_version, resolved.level,
+            resolved.name, fused=True,
+        )
+
+    fused_deltas = set(producer_of.values())
+    emap: Dict[int, int] = {i: i for i in range(resolved.n_inputs)}
+    new_steps: List[ResolvedStep] = []
+    next_new = resolved.n_inputs
+    for i, s in enumerate(steps):
+        old_out0 = out_edge_of[i]
+        if i in fused_deltas:
+            continue  # its output edge is interior to the fused pair
+        if i in producer_of:
+            d = steps[producer_of[i]]
+            bits = int(s.param_dict().get("bits", 0))
+            params = (("bits", bits),) if bits else ()
+            new_steps.append(
+                ResolvedStep(
+                    FUSED_NAME,
+                    fused_spec.codec_id,
+                    tuple(emap[e] for e in d.inputs),
+                    1,
+                    params,
+                )
+            )
+        else:
+            new_steps.append(
+                ResolvedStep(
+                    s.name, s.codec_id, tuple(emap[e] for e in s.inputs),
+                    s.n_out, s.params,
+                )
+            )
+        for k in range(s.n_out):
+            emap[old_out0 + k] = next_new
+            next_new += 1
+    return ResolvedPlan(
+        resolved.n_inputs, tuple(new_steps), resolved.format_version,
+        resolved.level, resolved.name, fused=True,
+    )
+
+
+# ------------------------------------------------------------- execute phase
+class _Executor:
+    """Runs a ResolvedPlan over concrete streams with backend dispatch.
+
+    Maintains its own runtime edge numbering (``emap``: resolved edge id ->
+    runtime edge id) because a fused step may lower to two wire nodes with an
+    interior edge the resolved plan never saw.
+    """
+
+    def __init__(self, resolved: ResolvedPlan, streams: Sequence[Stream], backend: str):
+        self.resolved = resolved
+        self.backend = backend
+        self.edges: List[Stream] = []
+        self.consumed: List[bool] = []
+        self.nodes: List[ResolvedNode] = []
+        self.emap: Dict[int, int] = {}
+        for i, s in enumerate(streams):
+            self.edges.append(s)
+            self.consumed.append(False)
+            self.emap[i] = i
+
+    def _new_edge(self, s: Stream) -> int:
+        self.edges.append(s)
+        self.consumed.append(False)
+        return len(self.edges) - 1
+
+    def _consume(self, e: int) -> Stream:
+        if self.consumed[e]:
+            raise AssertionError(f"edge {e} consumed twice at runtime")
+        self.consumed[e] = True
+        return self.edges[e]
+
+    def _run_codec(self, name: str, params: dict, rt_ins: List[int]) -> List[int]:
+        spec = _checked_codec(name, self.resolved.format_version)
+        ins = [self._consume(e) for e in rt_ins]
+        outs, header = run_encode_via(spec, self.backend, ins, params)
+        out_ids = [self._new_edge(o) for o in outs]
+        self.nodes.append(ResolvedNode(spec.codec_id, tuple(rt_ins), len(outs), header))
+        return out_ids
+
+    def run(self) -> bytes:
+        next_resolved_edge = self.resolved.n_inputs
+        for step in self.resolved.steps:
+            rt_ins = [self.emap[e] for e in step.inputs]
+            if step.name == FUSED_NAME:
+                out_ids = self._run_fused(step, rt_ins)
+            else:
+                outs_expected = step.n_out
+                out_ids = self._run_codec(step.name, step.param_dict(), rt_ins)
+                if len(out_ids) != outs_expected:
+                    raise AssertionError(
+                        f"codec {step.name}: resolved n_out={outs_expected},"
+                        f" produced {len(out_ids)}"
+                    )
+            for k, oid in enumerate(out_ids):
+                self.emap[next_resolved_edge + k] = oid
+            next_resolved_edge += step.n_out
+        stored = [
+            (eid, self.edges[eid])
+            for eid in range(len(self.edges))
+            if not self.consumed[eid]
+        ]
+        return wire.write_frame(
+            self.resolved.format_version, self.resolved.n_inputs, self.nodes, stored
+        )
+
+    def _run_fused(self, step: ResolvedStep, rt_ins: List[int]) -> List[int]:
+        """Run the fused kernel when lossless, else lower to delta+bitpack.
+
+        The encoder itself validates the lossless precondition (one pass) and
+        raises a ValueError refusal when it fails — which is the lowering
+        signal.  The input edge is only consumed once the attempt succeeds.
+        """
+        spec = _checked_codec(FUSED_NAME, self.resolved.format_version)
+        params = step.param_dict()
+        s = self.edges[rt_ins[0]]  # peek: do not consume before we commit
+        try:
+            outs, header = run_encode_via(spec, self.backend, [s], params)
+        except ValueError:
+            explicit = int(params.get("bits", 0))
+            d_out = self._run_codec("delta", {}, rt_ins)
+            return self._run_codec(
+                "bitpack", {"bits": explicit} if explicit else {}, d_out
+            )
+        self._consume(rt_ins[0])
+        out_ids = [self._new_edge(o) for o in outs]
+        self.nodes.append(ResolvedNode(spec.codec_id, tuple(rt_ins), len(outs), header))
+        return out_ids
+
+
+def execute(
+    resolved: ResolvedPlan,
+    inputs: Union[Stream, bytes, Sequence[Stream]],
+    *,
+    backend: str = "host",
+    fuse: Optional[bool] = None,
+) -> bytes:
+    """Phase 2: run a resolved program over concrete streams -> wire frame.
+
+    ``fuse`` defaults to True on the device backend (where the fused kernel
+    lives); pass an explicit bool to override either way.
+    """
+    streams = [s.validate() for s in _as_streams(inputs)]
+    if len(streams) != resolved.n_inputs:
+        raise ValueError(
+            f"resolved plan wants {resolved.n_inputs} inputs, got {len(streams)}"
+        )
+    if backend not in available_backends():
+        raise ValueError(
+            f"unknown backend {backend!r}; available: {available_backends()}"
+        )
+    if fuse is None:
+        fuse = backend != "host"
+    if fuse:
+        resolved = fuse_resolved(resolved)
+    return _Executor(resolved, streams, backend).run()
+
+
+# ------------------------------------------------------------------ chunking
+def _split_chunks(s: Stream, chunk_bytes: int) -> List[Stream]:
+    """Element-aligned split; every chunk holds at least one element."""
+    if chunk_bytes < 1:
+        raise ValueError("chunk_bytes must be >= 1")
+    if s.stype == SType.STRING:
+        out: List[Stream] = []
+        lens = s.lengths if s.lengths is not None else np.zeros(0, np.uint32)
+        i, off = 0, 0
+        while i < lens.size:
+            j, nb = i, 0
+            while j < lens.size and (j == i or nb + int(lens[j]) <= chunk_bytes):
+                nb += int(lens[j])
+                j += 1
+            out.append(Stream(s.data[off : off + nb], SType.STRING, 1, lens[i:j]))
+            i, off = j, off + nb
+        return out or [s]
+    elt_bytes = s.width if s.stype in (SType.NUMERIC, SType.STRUCT) else 1
+    per = max(1, chunk_bytes // elt_bytes)
+    n = s.n_elts
+    if n <= per:
+        return [s]
+    datum_per_elt = s.width if s.stype == SType.STRUCT else 1
+    return [
+        Stream(s.data[i * datum_per_elt : (i + per) * datum_per_elt], s.stype, s.width)
+        for i in range(0, n, per)
+    ]
+
+
+def _concat_decoded(parts: List[Stream]) -> Stream:
+    s0 = parts[0]
+    if any(p.stype != s0.stype or p.width != s0.width for p in parts):
+        raise wire.FrameError("container chunks disagree on stream type")
+    if s0.stype == SType.STRING:
+        data = np.concatenate([p.data for p in parts])
+        lengths = np.concatenate(
+            [
+                p.lengths if p.lengths is not None else np.zeros(0, np.uint32)
+                for p in parts
+            ]
+        ).astype(np.uint32)
+        return Stream(data, SType.STRING, 1, lengths).validate()
+    arrays = [
+        p.as_unsigned().data if p.stype == SType.NUMERIC else p.data for p in parts
+    ]
+    return Stream(np.concatenate(arrays), s0.stype, s0.width).validate()
+
+
+def _default_workers(n_tasks: int) -> int:
+    return max(1, min(n_tasks, os.cpu_count() or 1))
+
+
+# ------------------------------------------------------------------ frontend
 def compress(
     plan: Plan,
     inputs: Union[Stream, bytes, Sequence[Stream]],
     *,
     ctx: Optional[CompressionCtx] = None,
+    backend: str = "host",
+    chunk_bytes: Optional[int] = None,
+    n_workers: Optional[int] = None,
+    use_resolve_cache: bool = True,
 ) -> bytes:
-    """Compress ``inputs`` with ``plan`` into a self-describing frame."""
+    """Compress ``inputs`` with ``plan`` into a self-describing frame.
+
+    ``chunk_bytes=N`` splits a (single) large input into independent chunks
+    compressed concurrently and stored in a multi-chunk container frame
+    (format v4+); the universal decoder reassembles them transparently.
+    ``chunk_bytes=0``/``None`` disables chunking.
+
+    ``use_resolve_cache=False`` forces fresh selector expansion for this
+    call.  The cache is keyed on stream *shape*, so cached choices can be
+    suboptimal (never wrong — a hard refusal triggers re-expansion) for new
+    values of a previously seen shape; measurement code that compares
+    selector choices across streams should bypass it.
+    """
     ctx = ctx or CompressionCtx()
     check_compress_version(ctx.format_version)
-    if isinstance(inputs, (bytes, bytearray, memoryview)):
-        inputs = [serial(inputs)]
-    elif isinstance(inputs, Stream):
-        inputs = [inputs]
-    inputs = [s.validate() for s in inputs]
-    plan.validate()
+    streams = [s.validate() for s in _as_streams(inputs)]
 
-    ex = _Execution(ctx)
-    in_ids = [ex.new_edge(s) for s in inputs]
-    ex.run_plan(plan, in_ids)
+    if chunk_bytes:
+        if len(streams) != 1:
+            raise ValueError("chunked compression supports exactly one input")
+        if ctx.format_version < CONTAINER_MIN_VERSION:
+            raise ValueError(
+                f"chunk_bytes requires format version >= {CONTAINER_MIN_VERSION}"
+                f" (compressing at {ctx.format_version})"
+            )
+        chunks = _split_chunks(streams[0], chunk_bytes)
+        if len(chunks) > 1:
+            resolved = resolve(plan, [chunks[0]], ctx, use_cache=use_resolve_cache)
 
-    stored = [
-        (eid, ex.edges[eid]) for eid in range(len(ex.edges)) if not ex.consumed[eid]
-    ]
-    return wire.write_frame(
-        ctx.format_version, len(inputs), ex.nodes, stored
-    )
+            def _one(ch: Stream) -> bytes:
+                try:
+                    return execute(resolved, [ch], backend=backend)
+                except Exception:
+                    # data-dependent refusal (e.g. a selector-picked codec
+                    # inapplicable to this chunk): re-resolve just this chunk
+                    fresh = resolve(plan, [ch], ctx, use_cache=False)
+                    return execute(fresh, [ch], backend=backend)
+
+            with ThreadPoolExecutor(
+                max_workers=n_workers or _default_workers(len(chunks))
+            ) as pool:
+                frames = list(pool.map(_one, chunks))
+            return wire.write_container(ctx.format_version, frames)
+
+    resolved, was_hit = _resolve_impl(plan, streams, ctx, use_cache=use_resolve_cache)
+    try:
+        return execute(resolved, streams, backend=backend)
+    except Exception:
+        # A cached resolution is keyed on stream *shape*, but a selector's
+        # choice can be inapplicable to new *values* of the same shape (e.g.
+        # range_pack over a >57-bit range).  Re-expand for this data; a
+        # failure on a fresh resolution is a genuine error.
+        if not was_hit or plan.is_resolved:
+            raise
+        fresh, _ = _resolve_impl(plan, streams, ctx, use_cache=False)
+        return execute(fresh, streams, backend=backend)
 
 
-def decompress(frame: bytes) -> List[Stream]:
-    """The universal decoder (paper §III-D): frame -> regenerated inputs."""
+def decompress(frame: bytes, *, n_workers: Optional[int] = None) -> List[Stream]:
+    """The universal decoder (paper §III-D): frame -> regenerated inputs.
+
+    Accepts both single frames and multi-chunk containers; container chunks
+    decode concurrently and concatenate back into the original stream.
+    """
+    if wire.is_container(frame):
+        version, sub_frames = wire.read_container(frame)
+        check_decode_version(version)
+        if not sub_frames:
+            raise wire.FrameError("empty container")
+        if len(sub_frames) > 1:
+            with ThreadPoolExecutor(
+                max_workers=n_workers or _default_workers(len(sub_frames))
+            ) as pool:
+                parts = list(pool.map(_decompress_single, sub_frames))
+        else:
+            parts = [_decompress_single(f) for f in sub_frames]
+        for p in parts:
+            if len(p) != 1:
+                raise wire.FrameError("container chunks must be single-input frames")
+        return [_concat_decoded([p[0] for p in parts])]
+    return _decompress_single(frame)
+
+
+def _decompress_single(frame: bytes) -> List[Stream]:
     version, n_inputs, nodes, stored = wire.read_frame(frame)
     check_decode_version(version)
 
@@ -202,15 +748,39 @@ class Compressor:
         format_version: int = CURRENT_FORMAT_VERSION,
         level: int = 5,
         name: str = "",
+        backend: str = "host",
+        chunk_bytes: Optional[int] = None,
     ):
         self.plan = plan.validate()
         self.format_version = check_compress_version(format_version)
         self.level = level
         self.name = name or plan.name
+        self.backend = backend
+        self.chunk_bytes = chunk_bytes
 
-    def compress(self, inputs) -> bytes:
-        ctx = CompressionCtx(self.format_version, self.level)
-        return compress(self.plan, inputs, ctx=ctx)
+    def _ctx(self) -> CompressionCtx:
+        return CompressionCtx(self.format_version, self.level)
+
+    def compress(
+        self,
+        inputs,
+        *,
+        backend: Optional[str] = None,
+        chunk_bytes: Optional[int] = None,
+    ) -> bytes:
+        """``chunk_bytes`` overrides the instance default; pass 0 to force an
+        unchunked frame from a chunking-enabled compressor."""
+        return compress(
+            self.plan,
+            inputs,
+            ctx=self._ctx(),
+            backend=backend or self.backend,
+            chunk_bytes=self.chunk_bytes if chunk_bytes is None else chunk_bytes,
+        )
+
+    def resolve(self, inputs) -> ResolvedPlan:
+        """Expose phase 1 for inspection/warm-up (cached like compress())."""
+        return resolve(self.plan, inputs, self._ctx())
 
     @staticmethod
     def decompress(frame: bytes) -> List[Stream]:
@@ -238,11 +808,21 @@ class Compressor:
     def serialize(self) -> bytes:
         from .serialize import serialize_plan
 
-        return serialize_plan(self.plan, name=self.name)
+        return serialize_plan(
+            self.plan,
+            name=self.name,
+            format_version=self.format_version,
+            level=self.level,
+        )
 
     @staticmethod
     def deserialize(blob: bytes) -> "Compressor":
         from .serialize import deserialize_plan
 
         plan, meta = deserialize_plan(blob)
-        return Compressor(plan, name=meta.get("name", ""))
+        return Compressor(
+            plan,
+            name=meta.get("name", ""),
+            format_version=meta.get("format_version", CURRENT_FORMAT_VERSION),
+            level=meta.get("level", 5),
+        )

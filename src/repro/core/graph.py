@@ -10,6 +10,11 @@ and whose edges are streams.  Edge ids are assigned topologically:
 Every edge has exactly one producer and at most one consumer (fan-out is an
 explicit ``dup`` codec, keeping decode purely procedural).  Edges nobody
 consumes are *terminal*: their streams are what the wire format stores.
+
+A Plan is the *configuration* of a compressor; turning it into an executable,
+selector-free program is the engine's resolve phase (``repro.core.engine``),
+which memoizes on the Plan value — Plans are frozen/hashable for exactly that
+reason.
 """
 from __future__ import annotations
 
@@ -99,6 +104,15 @@ class Plan:
     @property
     def is_resolved(self) -> bool:
         return all(n.kind == KIND_CODEC for n in self.nodes)
+
+    def require_resolved(self) -> "Plan":
+        """Raise unless the plan is selector-free (executable without data)."""
+        for i, n in enumerate(self.nodes):
+            if n.kind == KIND_SELECTOR:
+                raise ValueError(
+                    f"node {i} ({n.name!r}) is a selector; resolve the plan first"
+                )
+        return self
 
     @property
     def n_edges(self) -> int:

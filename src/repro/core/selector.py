@@ -10,6 +10,7 @@ can reference them.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Sequence
 
@@ -55,10 +56,14 @@ def all_selectors() -> Dict[str, SelectorSpec]:
 
 
 _loaded = False
+_load_lock = threading.RLock()
 
 
 def _ensure_loaded() -> None:
     global _loaded
     if not _loaded:
-        _loaded = True
-        from repro import codecs as _  # noqa: F401  (registers standard selectors)
+        with _load_lock:  # flag only set once the import completes (thread-safe)
+            if not _loaded:
+                from repro import codecs as _  # noqa: F401  (registers selectors)
+
+                _loaded = True

@@ -8,7 +8,7 @@ never need this module to decode.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import msgpack
 
@@ -19,8 +19,14 @@ SERIAL_VERSION = 1
 __all__ = ["serialize_plan", "deserialize_plan"]
 
 
-def plan_to_dict(plan: Plan, name: str = "") -> dict:
-    return {
+def plan_to_dict(
+    plan: Plan,
+    name: str = "",
+    *,
+    format_version: Optional[int] = None,
+    level: Optional[int] = None,
+) -> dict:
+    d = {
         "v": SERIAL_VERSION,
         "name": name or plan.name,
         "n_inputs": plan.n_inputs,
@@ -35,6 +41,14 @@ def plan_to_dict(plan: Plan, name: str = "") -> dict:
             for n in plan.nodes
         ],
     }
+    # deployment knobs ride along (additive keys: old readers ignore them, old
+    # blobs lack them) — without these a reloaded compressor silently reverted
+    # to default format_version/level
+    if format_version is not None:
+        d["format_version"] = int(format_version)
+    if level is not None:
+        d["level"] = int(level)
+    return d
 
 
 def plan_from_dict(d: dict) -> Tuple[Plan, dict]:
@@ -51,11 +65,25 @@ def plan_from_dict(d: dict) -> Tuple[Plan, dict]:
         for nd in d["nodes"]
     )
     plan = Plan(d["n_inputs"], nodes, d.get("name", "")).validate()
-    return plan, {"name": d.get("name", "")}
+    meta = {"name": d.get("name", "")}
+    if "format_version" in d:
+        meta["format_version"] = int(d["format_version"])
+    if "level" in d:
+        meta["level"] = int(d["level"])
+    return plan, meta
 
 
-def serialize_plan(plan: Plan, name: str = "") -> bytes:
-    return msgpack.packb(plan_to_dict(plan, name), use_bin_type=True)
+def serialize_plan(
+    plan: Plan,
+    name: str = "",
+    *,
+    format_version: Optional[int] = None,
+    level: Optional[int] = None,
+) -> bytes:
+    return msgpack.packb(
+        plan_to_dict(plan, name, format_version=format_version, level=level),
+        use_bin_type=True,
+    )
 
 
 def deserialize_plan(blob: bytes) -> Tuple[Plan, dict]:

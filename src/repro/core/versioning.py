@@ -12,7 +12,12 @@ MIN_FORMAT_VERSION = 1
 # v1: core transforms (store/delta/zigzag/transpose/bitpack/rle/constant/split)
 # v2: tokenize/string codecs, huffman, fse, lz, parsers
 # v3: float_split family, lane-parallel entropy variants, zlib backend
-CURRENT_FORMAT_VERSION = 3
+# v4: multi-chunk container frames (wire.py OZLC record) + fused_delta_bitpack
+CURRENT_FORMAT_VERSION = 4
+
+# First format version whose decoders understand the multi-chunk container
+# record; compress(chunk_bytes=...) refuses to emit one at older versions.
+CONTAINER_MIN_VERSION = 4
 
 
 class VersionError(ValueError):

@@ -22,6 +22,24 @@ Frame layout (all varints LEB128, little-endian payloads):
 
 The frame embeds the *resolved* graph, which is exactly the information the
 universal decoder needs — no out-of-band config, no version-locked decoder.
+
+Multi-chunk container record (format version >= 4)
+--------------------------------------------------
+Chunked compression (``compress(..., chunk_bytes=N)``) stores independently
+compressed chunks of one input in a *container* frame:
+
+    magic   b"OZLC"
+    u8      format_version            (>= 4)
+    varint  n_chunks
+    per chunk:
+        varint frame byte length
+        bytes  a complete single-input b"OZLJ" frame
+    u32     crc32 of everything above
+
+Each chunk is a self-describing frame in its own right (chunks may even have
+been produced by different execution backends); the universal decoder decodes
+every chunk and concatenates the regenerated streams.  Nesting containers is
+rejected — the record is one level deep by construction.
 """
 from __future__ import annotations
 
@@ -34,8 +52,18 @@ import numpy as np
 from .message import Stream, SType, from_wire
 
 MAGIC = b"OZLJ"
+CONTAINER_MAGIC = b"OZLC"
 
-__all__ = ["write_frame", "read_frame", "write_varint", "read_varint", "FrameError"]
+__all__ = [
+    "write_frame",
+    "read_frame",
+    "write_container",
+    "read_container",
+    "is_container",
+    "write_varint",
+    "read_varint",
+    "FrameError",
+]
 
 
 class FrameError(ValueError):
@@ -169,3 +197,63 @@ def read_frame(frame: bytes):
     if pos != len(body):
         raise FrameError("trailing garbage in frame")
     return version, n_inputs, nodes, stored
+
+
+# --------------------------------------------------------------- containers
+def is_container(blob: bytes) -> bool:
+    return bytes(blob[:4]) == CONTAINER_MAGIC
+
+
+def write_container(version: int, chunk_frames: Sequence[bytes]) -> bytes:
+    """Wrap independently compressed chunk frames into one container record."""
+    from .versioning import CONTAINER_MIN_VERSION
+
+    if version < CONTAINER_MIN_VERSION:
+        raise ValueError(
+            f"multi-chunk container requires format version"
+            f" >= {CONTAINER_MIN_VERSION}, got {version}"
+        )
+    out = bytearray()
+    out += CONTAINER_MAGIC
+    out.append(version & 0xFF)
+    write_varint(out, len(chunk_frames))
+    for frame in chunk_frames:
+        if bytes(frame[:4]) != MAGIC:
+            raise ValueError("container chunks must be single frames (no nesting)")
+        write_varint(out, len(frame))
+        out += frame
+    out += _struct.pack("<I", zlib.crc32(bytes(out)) & 0xFFFFFFFF)
+    return bytes(out)
+
+
+def read_container(blob: bytes):
+    """Parse a container -> (version, [chunk frame bytes])."""
+    from .versioning import CONTAINER_MIN_VERSION
+
+    if len(blob) < 10 or blob[:4] != CONTAINER_MAGIC:
+        raise FrameError("bad container magic")
+    body, crc_bytes = blob[:-4], blob[-4:]
+    (crc_expect,) = _struct.unpack("<I", crc_bytes)
+    if (zlib.crc32(body) & 0xFFFFFFFF) != crc_expect:
+        raise FrameError("container checksum mismatch")
+    pos = 4
+    version = blob[pos]
+    pos += 1
+    if version < CONTAINER_MIN_VERSION:
+        raise FrameError(f"container frame predates format v{CONTAINER_MIN_VERSION}")
+    n_chunks, pos = read_varint(blob, pos)
+    if n_chunks > 1_000_000:
+        raise FrameError("implausible chunk count")
+    frames: List[bytes] = []
+    for _ in range(n_chunks):
+        flen, pos = read_varint(blob, pos)
+        if pos + flen > len(body):
+            raise FrameError("truncated container chunk")
+        chunk = blob[pos : pos + flen]
+        pos += flen
+        if chunk[:4] == CONTAINER_MAGIC:
+            raise FrameError("nested container rejected")
+        frames.append(chunk)
+    if pos != len(body):
+        raise FrameError("trailing garbage in container")
+    return version, frames

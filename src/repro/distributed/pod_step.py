@@ -50,14 +50,28 @@ def make_pod_dp_train_step(cfg, optimizer: Optimizer, mesh: Mesh, method: str):
 
     rep = P()  # replicated over pod; data/model placement handled by auto
     batch_spec = {"tokens": P("pod"), "labels": P("pod")}
-    step = partial(
-        jax.shard_map,
-        mesh=mesh,
-        in_specs=(rep, rep, P("pod"), batch_spec),
-        out_specs=(rep, rep, P("pod"), rep),
-        axis_names={"pod"},
-        check_vma=False,
-    )(body)
+    in_specs = (rep, rep, P("pod"), batch_spec)
+    out_specs = (rep, rep, P("pod"), rep)
+    if hasattr(jax, "shard_map"):
+        step = partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            axis_names={"pod"},
+            check_vma=False,
+        )(body)
+    else:  # older jax: same partial-manual mapping via the experimental API
+        from jax.experimental.shard_map import shard_map
+
+        step = shard_map(
+            body,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_rep=False,
+            auto=frozenset(mesh.axis_names) - {"pod"},
+        )
     return step
 
 

@@ -208,6 +208,8 @@ def run_cell(
                 - mem_rec.get("alias_size_in_bytes", 0)
             )
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax returns a 1-list
+            cost = cost[0] if cost else {}
         cost_rec = {
             k: float(v)
             for k, v in cost.items()

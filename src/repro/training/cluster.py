@@ -47,7 +47,16 @@ def _size_of(streams: Sequence[Stream], level: int) -> int:
     s = _concat_streams(streams)
     sig = (int(s.stype), s.width)
     try:
-        return len(compress(_probe_plan(sig), [s], ctx=CompressionCtx(level=level)))
+        # bypass the resolve cache: probes compare selector choices across
+        # many same-shape streams, so each must expand on its own data
+        return len(
+            compress(
+                _probe_plan(sig),
+                [s],
+                ctx=CompressionCtx(level=level),
+                use_resolve_cache=False,
+            )
+        )
     except Exception:
         return s.nbytes + 64
 

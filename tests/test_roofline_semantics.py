@@ -20,6 +20,10 @@ def run4(body: str) -> str:
     script = (
         "import os\n"
         'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"\n'
+        # newer jax returns cost_analysis() as a dict, older as a 1-list of dicts
+        "def _cost(compiled):\n"
+        "    ca = compiled.cost_analysis()\n"
+        "    return ca[0] if isinstance(ca, (list, tuple)) else ca\n"
         + textwrap.dedent(body)
     )
     env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
@@ -44,7 +48,7 @@ def test_cost_and_memory_are_per_device():
             compiled = jax.jit(lambda a, b: a @ b, in_shardings=(sh_a, sh_b)).lower(
                 jax.ShapeDtypeStruct((M, K), jnp.float32),
                 jax.ShapeDtypeStruct((K, N), jnp.float32)).compile()
-        flops = compiled.cost_analysis()["flops"]
+        flops = _cost(compiled)["flops"]
         # global 2*M*N*K = 2.147e9; per-device = /4
         assert abs(flops - 2 * M * N * K / 4) < 1e6, flops
         m = compiled.memory_analysis()
@@ -72,8 +76,8 @@ def test_scan_bodies_counted_once():
                 x = jnp.tanh(x @ w)
             return x
         sds = jax.ShapeDtypeStruct((256, 256), jnp.float32)
-        fl_loop = jax.jit(f).lower(sds, sds).compile().cost_analysis()["flops"]
-        fl_unrl = jax.jit(f_unrolled).lower(sds, sds).compile().cost_analysis()["flops"]
+        fl_loop = _cost(jax.jit(f).lower(sds, sds).compile())["flops"]
+        fl_unrl = _cost(jax.jit(f_unrolled).lower(sds, sds).compile())["flops"]
         ratio = fl_unrl / fl_loop
         assert 4 <= ratio <= N_STEPS * 1.5, (fl_loop, fl_unrl)
         print("SCAN_UNDERCOUNT_OK", ratio)

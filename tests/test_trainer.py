@@ -4,7 +4,7 @@ import random
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or skip-at-call-time stubs
 
 from repro.core import Compressor, numeric, serial
 from repro.core.message import SType, Stream

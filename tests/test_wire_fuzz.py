@@ -11,7 +11,7 @@ Invariants:
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or skip-at-call-time stubs
 
 from repro.core import compress, decompress, numeric, pipeline
 from repro.core.wire import FrameError
@@ -92,6 +92,53 @@ def test_absurd_counts_rejected_fast():
 
     body = bytearray(b"OZLJ\x03\x01")
     body += b"\xff\xff\xff\xff\xff\xff\xff\xff\x7f"  # varint n_nodes ~ 2^62
+    blob = bytes(body) + struct.pack("<I", zlib.crc32(bytes(body)) & 0xFFFFFFFF)
+    with pytest.raises(CONTROLLED):
+        decompress(blob)
+
+
+# ----------------------------------------------------------- container frames
+def _a_container() -> bytes:
+    return compress(
+        pipeline("delta", "range_pack"),
+        numeric(np.arange(5000, dtype=np.uint32)),
+        chunk_bytes=4096,
+    )
+
+
+def test_container_single_byte_corruption_fails_closed():
+    base = _a_container()
+    for pos in range(0, len(base), max(len(base) // 63, 1)):
+        frame = bytearray(base)
+        frame[pos] ^= 0xFF
+        try:
+            (s,) = decompress(bytes(frame))
+        except CONTROLLED:
+            continue
+        assert s.content_bytes() == np.arange(5000, dtype=np.uint32).tobytes()
+
+
+def test_container_absurd_chunk_count_rejected_fast():
+    import struct
+    import zlib
+
+    body = bytearray(b"OZLC\x04")
+    body += b"\xff\xff\xff\xff\xff\xff\xff\xff\x7f"  # varint n_chunks ~ 2^62
+    blob = bytes(body) + struct.pack("<I", zlib.crc32(bytes(body)) & 0xFFFFFFFF)
+    with pytest.raises(CONTROLLED):
+        decompress(blob)
+
+
+def test_nested_container_rejected():
+    import struct
+    import zlib
+    from repro.core.wire import read_varint, write_varint
+
+    inner = _a_container()
+    body = bytearray(b"OZLC\x04")
+    write_varint(body, 1)
+    write_varint(body, len(inner))
+    body += inner
     blob = bytes(body) + struct.pack("<I", zlib.crc32(bytes(body)) & 0xFFFFFFFF)
     with pytest.raises(CONTROLLED):
         decompress(blob)
