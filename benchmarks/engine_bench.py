@@ -1,5 +1,5 @@
 """Engine-phase benchmarks: resolve-cache hit rate, host vs device backend,
-and chunked-parallel throughput.
+chunked-parallel throughput — and the codec hot-path section.
 
 Rows (CSV, appended to benchmarks/run.py output):
     engine/resolve_cache      — selector profile compressed repeatedly;
@@ -10,14 +10,21 @@ Rows (CSV, appended to benchmarks/run.py output):
                                 derived shows the speedup vs host_single
                                 (acceptance floor: >= 1.5x on >= 32 MiB)
 
-The input is a >= 32 MiB synthetic numeric stream (delta-friendly cumsum) and
-the plan is delta -> transpose -> zlib, whose heavy stages release the GIL —
-which is exactly what chunked compression exploits.
+``--codecs`` additionally benchmarks the lz77/huffman/fse hot paths on two
+canonical corpora — "text" (zipfian prose, 2^17-word vocabulary, exponent
+1.05: natural-language-like statistics) and "log" (structured log lines,
+OpenZL's home turf) — at 1 MiB and 16 MiB, encode and decode.  ``--json``
+writes the results to ``results/BENCH_codecs.json``; when
+``results/BENCH_codecs_baseline.json`` (the pre-vectorization measurements,
+same generators, same host) is present, per-row speedups are recorded so the
+perf trajectory of the serial-hot-path work stays on the record.
 """
 from __future__ import annotations
 
+import json
 import os
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -34,6 +41,127 @@ from repro.core import (
 MIB = 1 << 20
 TOTAL_BYTES = int(os.environ.get("REPRO_ENGINE_BENCH_MIB", "32")) * MIB
 CHUNK_BYTES = 4 * MIB
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "results"
+
+
+# ------------------------------------------------------ canonical corpora
+def synth_text(nbytes: int, seed: int = 0) -> bytes:
+    """Zipfian prose: 2^17-word vocabulary, exponent 1.05 (Zipf's law for
+    natural language), word lengths 2-11.  Fully vectorized assembly."""
+    vocab_size = 1 << 17
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(2, 12, vocab_size).astype(np.int64)
+    letters = rng.integers(97, 123, int(lens.sum())).astype(np.uint8)
+    bounds = np.concatenate([[0], np.cumsum(lens)])
+    w = 1.0 / np.arange(1, vocab_size + 1) ** 1.05
+    w /= w.sum()
+    idx = rng.choice(vocab_size, size=nbytes // 4 + 16, p=w)
+    wl = lens[idx]
+    ends = np.cumsum(wl + 1)
+    starts = ends - 1 - wl
+    out = np.full(int(ends[-1]), 32, np.uint8)
+    intra = np.arange(int(wl.sum()), dtype=np.int64) - np.repeat(
+        np.cumsum(wl) - wl, wl
+    )
+    out[np.repeat(starts, wl) + intra] = letters[np.repeat(bounds[idx], wl) + intra]
+    return out[:nbytes].tobytes().ljust(nbytes, b" ")
+
+
+def synth_log(nbytes: int, seed: int = 0) -> bytes:
+    """Structured log lines: timestamps, hex ids, k=v fields — the
+    structured-data shape the paper's graph model targets."""
+    rng = np.random.default_rng(seed)
+    levels = [b"INFO", b"WARN", b"DEBUG", b"ERROR"]
+    services = [b"auth", b"billing", b"ingest", b"frontend", b"search", b"cache"]
+    verbs = [b"handled", b"rejected", b"queued", b"retried", b"flushed"]
+    lines = []
+    total = 0
+    t = 1753862400.0
+    while total < nbytes + 256:
+        t += float(rng.exponential(0.05))
+        line = (
+            b"2026-07-30T%02d:%02d:%06.3fZ %s %s req=%016x user=%08d %s in"
+            b" %dus path=/api/v2/%s/%d\n"
+            % (
+                int(t // 3600) % 24,
+                int(t // 60) % 60,
+                t % 60,
+                levels[int(rng.choice(4, p=[0.7, 0.15, 0.1, 0.05]))],
+                services[int(rng.integers(6))],
+                int(rng.integers(0, 1 << 63)),
+                int(rng.integers(0, 10**8)),
+                verbs[int(rng.integers(5))],
+                int(rng.integers(10, 99999)),
+                services[int(rng.integers(6))],
+                int(rng.integers(0, 9999)),
+            )
+        )
+        lines.append(line)
+        total += len(line)
+    return b"".join(lines)[:nbytes]
+
+
+def run_codecs(sizes_mib=(1, 16), emit_json=False, print_rows=True):
+    """Benchmark the lz77/huffman/fse hot paths; optionally write JSON."""
+    from repro.codecs.coder_cache import coder_cache_clear
+    from repro.core.codec import get_codec
+    from repro.core.message import serial
+
+    baseline = {}
+    baseline_path = RESULTS_DIR / "BENCH_codecs_baseline.json"
+    if baseline_path.exists():
+        baseline = json.loads(baseline_path.read_text()).get("rows", {})
+
+    results = {}
+    rows = []
+    for flavor, gen in [("text", synth_text), ("log", synth_log)]:
+        for mib in sizes_mib:
+            data = gen(int(mib * MIB))
+            s = serial(data)
+            for codec in ("lz77", "huffman", "fse"):
+                spec = get_codec(codec)
+                reps = 3 if mib <= 1 else 1
+                te, td = [], []
+                for _ in range(reps):
+                    coder_cache_clear()
+                    t0 = time.perf_counter()
+                    outs, header = spec.run_encode([s], {})
+                    te.append(time.perf_counter() - t0)
+                    coder_cache_clear()  # decode rows measure cold-start
+                    t0 = time.perf_counter()
+                    back = spec.run_decode(outs, header)
+                    td.append(time.perf_counter() - t0)
+                assert back[0].content_bytes() == data, f"{codec} roundtrip"
+                key = f"{codec}/{flavor}/{mib}MiB"
+                entry = {
+                    "encode_mib_s": round(mib / min(te), 3),
+                    "decode_mib_s": round(mib / min(td), 3),
+                }
+                base = baseline.get(key)
+                if base:
+                    entry["encode_speedup"] = round(
+                        entry["encode_mib_s"] / base["encode_mib_s"], 2
+                    )
+                    entry["decode_speedup"] = round(
+                        entry["decode_mib_s"] / base["decode_mib_s"], 2
+                    )
+                results[key] = entry
+                derived = ";".join(f"{k}={v}" for k, v in entry.items())
+                rows.append(f"codecs/{key},{min(te)*1e6:.1f},{derived}")
+    if emit_json:
+        payload = {
+            "schema": "BENCH_codecs/v1",
+            "host_cpus": os.cpu_count(),
+            "sizes_mib": list(sizes_mib),
+            "baseline": str(baseline_path.name) if baseline else None,
+            "rows": results,
+        }
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        (RESULTS_DIR / "BENCH_codecs.json").write_text(json.dumps(payload, indent=2))
+    if print_rows:
+        for r in rows:
+            print(r)
+    return rows, results
 
 
 def _big_input():
@@ -110,5 +238,28 @@ def run(print_rows: bool = True):
 
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--codecs", action="store_true", help="run the codec section")
+    ap.add_argument(
+        "--codecs-only", action="store_true", help="skip the engine section"
+    )
+    ap.add_argument(
+        "--json", action="store_true", help="write results/BENCH_codecs.json"
+    )
+    ap.add_argument(
+        "--sizes",
+        default="1,16",
+        help="comma-separated codec benchmark sizes in MiB (floats ok)",
+    )
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    run()
+    if not args.codecs_only:
+        run()
+    if args.codecs or args.codecs_only or args.json:
+        sizes = tuple(
+            int(x) if float(x) == int(float(x)) else float(x)
+            for x in args.sizes.split(",")
+        )
+        run_codecs(sizes_mib=sizes, emit_json=args.json)

@@ -10,6 +10,7 @@ Codec id map (never reuse):
   20 csv_split   21 string_split 22 transpose_split 23 interpret_numeric
   24 lzma_backend  25 bz2_backend 26 fused_delta_bitpack (v4)
 """
+from . import coder_cache  # noqa: F401
 from . import basic  # noqa: F401
 from . import numeric  # noqa: F401
 from . import convert  # noqa: F401
@@ -20,6 +21,10 @@ from . import parse  # noqa: F401
 from . import selectors  # noqa: F401
 from . import profiles  # noqa: F401
 
+from .coder_cache import (  # noqa: F401
+    coder_cache_clear,
+    coder_cache_info,
+)
 from .profiles import (  # noqa: F401
     bfloat16_profile,
     csv_profile,

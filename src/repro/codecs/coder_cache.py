@@ -1,0 +1,140 @@
+"""LRU caches for entropy-coder tables (huffman LUTs, tANS/FSE tables).
+
+Building a tANS table is ``O(2^table_log)`` and a Huffman decode LUT is
+``O(2^15)`` — both strictly larger than the per-block decode work for small
+chunks, so rebuilding them per call dominated chunked and repeated
+compression before this cache existed.  Tables are pure functions of small
+wire-visible descriptors (nibble-packed code lengths / normalized counts +
+table_log), which makes them perfectly cacheable:
+
+  * huffman encode:  key = code-length bytes        -> canonical codes
+  * huffman decode:  key = code-length bytes        -> (codes, LUT sym, LUT len)
+  * fse enc+dec:     key = (norm bytes, table_log)  -> (dec_sym, dec_nb,
+                                                        dec_base, enc_table, ...)
+
+Thread safety: every cache is guarded by a lock; values are immutable numpy
+arrays (writeable=False) shared read-only across the engine's ``chunk_bytes``
+thread pool.  The engine threads a per-``execute()`` scope through
+:func:`scoped` (see ``core/engine.py``) so one compression call — including
+all of its parallel chunks — shares a single table namespace; with no scope
+active, a process-wide default cache is used.
+
+``coder_cache_info()`` / ``coder_cache_clear()`` mirror the engine's
+``resolve_cache_info()`` counters.  ``coder_cache_disabled()`` is a test hook
+proving frames are bit-identical with caching on or off.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import threading
+from collections import OrderedDict
+from typing import Callable, Dict, Tuple
+
+__all__ = [
+    "CoderCache",
+    "active_cache",
+    "scoped",
+    "coder_cache_info",
+    "coder_cache_clear",
+    "coder_cache_disabled",
+]
+
+
+class CoderCache:
+    """A small thread-safe LRU mapping table descriptors to built tables.
+
+    One instance holds *all* coder-table families, namespaced by a string tag
+    in the key, so a single object can be shared across the chunk pool.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = maxsize
+        self._lock = threading.Lock()
+        self._data: "OrderedDict[tuple, object]" = OrderedDict()
+        self._hits = 0
+        self._misses = 0
+        self._enabled = True
+
+    def get_or_build(self, key: tuple, builder: Callable[[], object]):
+        """Return the cached value for ``key``, building (and caching) on miss.
+
+        The builder runs outside the lock: table construction is the expensive
+        part, and two threads racing on the same key simply both build —
+        last-write-wins is harmless because tables are value-deterministic.
+        """
+        if not self._enabled:
+            return builder()
+        with self._lock:
+            hit = self._data.get(key)
+            if hit is not None:
+                self._data.move_to_end(key)
+                self._hits += 1
+                return hit
+            self._misses += 1
+        value = builder()
+        with self._lock:
+            self._data[key] = value
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+        return value
+
+    def info(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "hits": self._hits,
+                "misses": self._misses,
+                "size": len(self._data),
+                "maxsize": self.maxsize,
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self._hits = 0
+            self._misses = 0
+
+
+_GLOBAL = CoderCache()
+
+# Per-execute() override, set by the engine so one compression call (and all
+# of its chunk-pool threads) shares a scope.  A contextvar — not a bare
+# thread-local — so nested scopes unwind correctly.
+_ACTIVE: "contextvars.ContextVar[CoderCache | None]" = contextvars.ContextVar(
+    "repro_coder_cache", default=None
+)
+
+
+def active_cache() -> CoderCache:
+    """The cache coder implementations should consult right now."""
+    return _ACTIVE.get() or _GLOBAL
+
+
+@contextlib.contextmanager
+def scoped(cache: CoderCache):
+    """Make ``cache`` the active table cache for the enclosed block."""
+    token = _ACTIVE.set(cache)
+    try:
+        yield cache
+    finally:
+        _ACTIVE.reset(token)
+
+
+@contextlib.contextmanager
+def coder_cache_disabled():
+    """Disable the *global* cache (scoped caches are unaffected) — test hook."""
+    prev = _GLOBAL._enabled
+    _GLOBAL._enabled = False
+    try:
+        yield
+    finally:
+        _GLOBAL._enabled = prev
+
+
+def coder_cache_info() -> Dict[str, int]:
+    """Hit/miss counters of the process-wide default cache."""
+    return _GLOBAL.info()
+
+
+def coder_cache_clear() -> None:
+    _GLOBAL.clear()

@@ -10,7 +10,30 @@ CPU host they map onto numpy vectors.  The block-offset stream is itself a
 numeric stream, so a graph can delta+bitpack it — metadata is just more data
 for the graph to compress (very much in the paper's spirit).
 
-Wire layout per codec:
+Lane-refill scheme
+------------------
+Every lane keeps a bit cursor into its block's bitstream.  One decode step
+refills all lanes' 64-bit windows with a *single* gather — an 8-byte
+``sliding_window_view`` row per lane, viewed as one little-endian ``uint64``
+— instead of the historical 8-iteration per-byte loop.  A refilled window
+holds >= 57 valid bits after cursor alignment, so Huffman decode consumes up
+to three symbols (3 x 15-bit max codes = 45 bits) per refill.  Tail lanes
+are handled mask-free: every lane is full except the last, so the hot loop
+runs unmasked and the final partial lane is trimmed at concatenation (the
+bitstream buffer is padded so overrunning lanes read zeros, never OOB).
+``repro.kernels.ops.lane_refill`` is the device-backend twin of the gather.
+
+Coder-table cache
+-----------------
+Decode LUTs (2^15 entries) and tANS spread/state tables (2^table_log) are
+pure functions of wire-visible descriptors (code lengths / normalized
+counts), so they are memoized in ``repro.codecs.coder_cache`` — repeated
+chunks and the engine's ``chunk_bytes=N`` thread pool stop rebuilding
+identical tables per chunk.  All table construction is vectorized; no
+``O(2^table_log)`` Python loops remain on any per-call path.
+
+Wire layout per codec (unchanged — frames are bit-identical to the
+pre-vectorization implementation):
   huffman: outputs = [bitstream SERIAL, block_bit_offsets NUMERIC u64]
            header  = n_symbols, block_size_log, 256 nibble-packed code lengths
   fse:     outputs = [bitstream SERIAL, block_meta NUMERIC u32 (offset, state)]
@@ -27,9 +50,14 @@ from repro.core.codec import CodecSpec, register_codec
 from repro.core.message import Stream, SType
 
 from ._util import HeaderReader, HeaderWriter, numeric_stream
+from .coder_cache import active_cache
 
 BLOCK_LOG = 12  # 4096 symbols per lane-block
 MAX_CODE_LEN = 15
+
+_U64_1 = np.uint64(1)
+_U64_7 = np.uint64(7)
+_U64_3 = np.uint64(3)
 
 
 def _as_u8(s: Stream, op: str) -> np.ndarray:
@@ -45,6 +73,13 @@ def _rebuild(stype_tag: int, result: np.ndarray) -> Stream:
     from repro.core.message import from_wire
 
     return from_wire(SType(stype_tag), 1, result.tobytes(), None)
+
+
+def _freeze(*arrays: np.ndarray) -> Tuple[np.ndarray, ...]:
+    """Mark cached tables read-only: they are shared across pool threads."""
+    for a in arrays:
+        a.setflags(write=False)
+    return arrays
 
 
 # =====================================================================
@@ -86,19 +121,82 @@ def _huffman_code_lengths(counts: np.ndarray) -> np.ndarray:
     raise AssertionError("huffman length cap failed to converge")
 
 
+def _canonical_order(lens: np.ndarray) -> np.ndarray:
+    """Present symbols sorted by (code length, symbol) — canonical order."""
+    order = np.lexsort((np.arange(256), lens))
+    return order[np.count_nonzero(lens == 0) :]
+
+
 def _canonical_codes(lens: np.ndarray) -> np.ndarray:
     """Assign canonical codes; returned bit-reversed for LSB-first packing."""
     codes = np.zeros(256, dtype=np.uint32)
-    code = 0
-    for length in range(1, MAX_CODE_LEN + 1):
-        for s in range(256):
-            if lens[s] == length:
-                # bit-reverse `code` over `length` bits
-                rev = int(f"{code:0{length}b}"[::-1], 2)
-                codes[s] = rev
-                code += 1
-        code <<= 1
+    order = _canonical_order(lens)
+    if order.size == 0:
+        return codes
+    ol = lens[order].astype(np.int64)
+    # canonical recurrence code(k) = (code(k-1) + 1) << (L_k - L_{k-1}) in
+    # closed form via MSB start positions: start_k = sum over earlier symbols
+    # of 2^(15 - L_j), code_k = start_k >> (15 - L_k) — exact because
+    # canonical codes tile [0, 2^15) contiguously in canonical order
+    widths = (np.int64(1) << (MAX_CODE_LEN - ol)).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(widths)[:-1]])
+    code = (starts >> (MAX_CODE_LEN - ol)).astype(np.int64)
+    # bit-reverse each code over its own length: reverse over 15 bits, then
+    # shift out the (15 - L) low zeros
+    rev = np.zeros_like(code)
+    c = code.copy()
+    for _ in range(MAX_CODE_LEN):
+        rev = (rev << 1) | (c & 1)
+        c >>= 1
+    codes[order] = (rev >> (MAX_CODE_LEN - ol)).astype(np.uint32)
     return codes
+
+
+def _rev15_table() -> np.ndarray:
+    """idx -> its 15-bit reversal; built once, module-cached."""
+    global _REV15
+    try:
+        return _REV15
+    except NameError:
+        pass
+    x = np.arange(1 << MAX_CODE_LEN, dtype=np.int32)
+    r = np.zeros_like(x)
+    for _ in range(MAX_CODE_LEN):
+        r = (r << 1) | (x & 1)
+        x >>= 1
+    _REV15 = r
+    return _REV15
+
+
+def _huffman_codes_cached(lens: np.ndarray) -> np.ndarray:
+    return active_cache().get_or_build(
+        ("huff_enc", lens.tobytes()),
+        lambda: _freeze(_canonical_codes(lens))[0],
+    )
+
+
+def _huffman_decode_lut(lens: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(lut_sym u8, lut_len u64): LSB-first 15-bit decode LUT, vectorized.
+
+    Canonical codes tile the MSB-first index space contiguously in canonical
+    order, so the MSB-first LUT is a single ``np.repeat``; the LSB-first LUT
+    (what the lane decoder indexes with its low window bits) is that table
+    permuted by 15-bit reversal.
+    """
+    order = _canonical_order(lens)
+    lut_sym = np.zeros(1 << MAX_CODE_LEN, dtype=np.uint8)
+    lut_len = np.zeros(1 << MAX_CODE_LEN, dtype=np.uint64)
+    if order.size:
+        widths = (np.int64(1) << (MAX_CODE_LEN - lens[order].astype(np.int64)))
+        total = int(widths.sum())
+        msb_sym = np.zeros(1 << MAX_CODE_LEN, dtype=np.uint8)
+        msb_len = np.zeros(1 << MAX_CODE_LEN, dtype=np.uint8)
+        msb_sym[:total] = np.repeat(order.astype(np.uint8), widths)
+        msb_len[:total] = np.repeat(lens[order], widths)
+        rev = _rev15_table()
+        lut_sym = msb_sym[rev]
+        lut_len = msb_len[rev].astype(np.uint64)
+    return _freeze(lut_sym, lut_len)
 
 
 def _write_bits_blocked(
@@ -106,28 +204,23 @@ def _write_bits_blocked(
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Pack (value, nbits) pairs LSB-first; returns (bytes, per-symbol bit offs).
 
-    Vectorized: global bit offsets by cumsum; each value ORs into <=3 bytes...
-    values here are <= 2^15 wide so <= 3 byte-touches after alignment.
+    Bit-matrix writer: global bit offsets by cumsum, then one masked scatter
+    per bit plane (<= MAX_CODE_LEN planes, each target bit index unique) and
+    a single ``np.packbits(bitorder="little")``.  Replaces the historical
+    4-round ``bitwise_or.at`` packer, whose buffered ufunc scatter was the
+    encode bottleneck at tens of MiB — output bytes are identical.
     """
     n = values.size
     offs = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(nbits, out=offs[1:])
     total = int(offs[-1])
-    out = np.zeros((total + 7) // 8 + 8, dtype=np.uint8)
-    v = values.astype(np.uint64)
+    bits = np.zeros((total + 7) // 8 * 8, dtype=np.uint8)
     start = offs[:-1]
-    for b in range(4):
-        byte_idx = (start >> 3) + b
-        shift = (np.int64(b) << 3) - (start & 7)
-        pos = shift >= 0
-        contrib = np.where(
-            pos,
-            v >> np.where(pos, shift, 0).clip(max=63).astype(np.uint64),
-            v << np.where(~pos, -shift, 0).astype(np.uint64),
-        )
-        contrib = np.where(shift >= 64, 0, contrib)
-        np.bitwise_or.at(out, byte_idx, (contrib & 0xFF).astype(np.uint8))
-    return out[: (total + 7) // 8], offs
+    max_nb = int(nbits.max()) if n else 0
+    for b in range(max_nb):
+        m = nbits > b
+        bits[start[m] + b] = (values[m] >> b) & 1
+    return np.packbits(bits, bitorder="little"), offs
 
 
 def _huffman_enc(streams, params):
@@ -135,7 +228,7 @@ def _huffman_enc(streams, params):
     n = x.size
     counts = np.bincount(x, minlength=256)
     lens = _huffman_code_lengths(counts)
-    codes = _canonical_codes(lens)
+    codes = _huffman_codes_cached(lens)
     nbits = lens[x].astype(np.int64)
     packed, offs = _write_bits_blocked(codes[x], nbits, 1 << BLOCK_LOG)
     block = 1 << BLOCK_LOG
@@ -155,51 +248,67 @@ def _huffman_dec(outs, header):
     n = r.varint()
     block_log = r.u8()
     stype_tag = r.u8()
-    nib = np.frombuffer(r.bytes_(), dtype=np.uint8)
+    nib_raw = r.bytes_()
     r.expect_end()
+    nib = np.frombuffer(nib_raw, dtype=np.uint8)
     lens = np.zeros(256, dtype=np.uint8)
     lens[0::2] = nib & 0xF
     lens[1::2] = nib >> 4
-    codes = _canonical_codes(lens)
-
-    # build the 2^15 LSB-first decode LUT: lookup[low15] = (symbol, length)
-    lut_sym = np.zeros(1 << MAX_CODE_LEN, dtype=np.uint8)
-    lut_len = np.zeros(1 << MAX_CODE_LEN, dtype=np.uint8)
-    for s in range(256):
-        L = int(lens[s])
-        if L == 0:
-            continue
-        base = int(codes[s])
-        step = 1 << L
-        idx = np.arange(base, 1 << MAX_CODE_LEN, step)
-        lut_sym[idx] = s
-        lut_len[idx] = L
+    lut_sym, lut_len = active_cache().get_or_build(
+        ("huff_dec", nib_raw if isinstance(nib_raw, bytes) else bytes(nib_raw)),
+        lambda: _huffman_decode_lut(lens),
+    )
 
     block = 1 << block_log
     n_blocks = (n + block - 1) // block
-    buf = np.zeros(bitstream.data.size + 16, dtype=np.uint8)
-    buf[: bitstream.data.size] = bitstream.data
-    pos = block_offs_s.data.astype(np.int64).copy()
+    pos = block_offs_s.data.astype(np.uint64).copy()
     if pos.size != n_blocks:
         raise ValueError("huffman: block offset count mismatch")
-    out = np.zeros(n_blocks * block, dtype=np.uint8)
     rem = np.minimum(n - np.arange(n_blocks, dtype=np.int64) * block, block)
-    for i in range(block):
-        active = rem > i
-        if not active.any():
-            break
-        byte0 = pos >> 3
-        window = np.zeros(n_blocks, dtype=np.uint64)
-        for b in range(8):
-            window |= buf[byte0 + b].astype(np.uint64) << np.uint64(8 * b)
-        low = ((window >> (pos & 7).astype(np.uint64)) & np.uint64((1 << MAX_CODE_LEN) - 1)).astype(np.int64)
-        sym = lut_sym[low]
-        ln = lut_len[low].astype(np.int64)
-        out[np.arange(n_blocks) * block + i] = np.where(active, sym, 0)
-        pos += np.where(active, ln, 0)
-    result = np.concatenate(
-        [out[k * block : k * block + int(rem[k])] for k in range(n_blocks)]
-    ) if n_blocks else np.zeros(0, np.uint8)
+    max_rem = int(rem.max()) if n_blocks else 0
+    # mask-free loop: exhausted lanes keep decoding zero bits from the pad
+    # region (never OOB; the pad absorbs <= 15 bits/symbol of overrun) and
+    # their surplus columns are trimmed at concatenation.
+    pad = 16 + ((MAX_CODE_LEN * max_rem + 7) >> 3)
+    buf = np.zeros(bitstream.data.size + pad, dtype=np.uint8)
+    buf[: bitstream.data.size] = bitstream.data
+    sliding = np.lib.stride_tricks.sliding_window_view(buf, 8)
+    out = np.empty((block, n_blocks), dtype=np.uint8)  # row-major hot stores
+    low_mask = np.uint64((1 << MAX_CODE_LEN) - 1)
+    i = 0
+    while i < max_rem:
+        # one gather refills >= 57 valid bits -> up to 3 symbols per refill
+        w = sliding[(pos >> _U64_3)].view(np.uint64)[:, 0]
+        w >>= pos & _U64_7
+        low = w & low_mask
+        ln = lut_len[low]
+        out[i] = lut_sym[low]
+        if i + 1 < max_rem:
+            w >>= ln
+            low = w & low_mask
+            l2 = lut_len[low]
+            out[i + 1] = lut_sym[low]
+            ln += l2
+            if i + 2 < max_rem:
+                w >>= l2
+                low = w & low_mask
+                out[i + 2] = lut_sym[low]
+                ln += lut_len[low]
+                pos += ln
+                i += 3
+                continue
+            pos += ln
+            i += 2
+            continue
+        pos += ln
+        i += 1
+    if n_blocks:
+        lanes = out.T  # (n_blocks, block); full lanes except possibly the last
+        result = np.concatenate(
+            [np.ascontiguousarray(lanes[:-1]).reshape(-1), lanes[-1, : rem[-1]]]
+        )
+    else:
+        result = np.zeros(0, np.uint8)
     return [_rebuild(stype_tag, result)]
 
 
@@ -247,44 +356,69 @@ def _normalize_counts(counts: np.ndarray, table_log: int) -> np.ndarray:
     return norm
 
 
+def _bit_length(x: np.ndarray) -> np.ndarray:
+    """Vectorized int bit_length for small non-negative ints (exact)."""
+    return np.ceil(np.log2(x.astype(np.float64) + 1.0)).astype(np.int64)
+
+
 def _spread_symbols(norm: np.ndarray, table_log: int) -> np.ndarray:
+    """tANS symbol spread — vectorized: occurrence k lands at (k*step) & mask."""
     total = 1 << table_log
     step = (total >> 1) + (total >> 3) + 3
+    positions = (np.arange(total, dtype=np.int64) * step) & (total - 1)
     spread = np.zeros(total, dtype=np.int64)
-    position = 0
-    for s in range(norm.size):
-        for _ in range(int(norm[s])):
-            spread[position] = s
-            position = (position + step) & (total - 1)
-    assert position == 0
+    spread[positions] = np.repeat(np.arange(norm.size, dtype=np.int64), norm)
     return spread
 
 
 def _build_tables(norm: np.ndarray, table_log: int):
-    """Build tANS encode/decode tables from normalized counts."""
+    """Build tANS encode/decode tables from normalized counts (vectorized).
+
+    Slot-order occurrence ranks come from a stable argsort of the spread:
+    slots grouped by symbol, slot order preserved inside each group — which
+    is exactly the x' = norm[s]+k numbering of the serial construction.
+    """
     total = 1 << table_log
     spread = _spread_symbols(norm, table_log)
-    # decode table: state j -> (symbol, nbits, new_state_base)
-    occ = norm.copy()  # next x' per symbol starts at norm[s]
+    order = np.argsort(spread, kind="stable")
+    sym_sorted = spread[order]
+    group_start = np.concatenate([[0], np.cumsum(norm)[:-1]])
+    rank = np.arange(total, dtype=np.int64) - group_start[sym_sorted]
+    x = norm[sym_sorted] + rank  # x' in [norm[s], 2*norm[s])
+    nb_sorted = table_log - (_bit_length(x) - 1)
     dec_sym = spread.astype(np.uint8)
-    dec_nb = np.zeros(total, dtype=np.int64)
-    dec_base = np.zeros(total, dtype=np.int64)
-    # encode: k-th (in slot order) occurrence of s maps x' = norm[s]+k -> slot
-    enc_slot = {}
-    counters = np.zeros(norm.size, dtype=np.int64)
-    for j in range(total):
-        s = spread[j]
-        x = norm[s] + counters[s]
-        counters[s] += 1
-        nb = table_log - (int(x).bit_length() - 1)
-        dec_nb[j] = nb
-        dec_base[j] = (int(x) << nb) - total
-        enc_slot[(int(s), int(x))] = j
-    # per-symbol encode arrays: for x' in [norm[s], 2 norm[s]) -> slot id
-    enc_table = np.zeros((norm.size, int(norm.max()) if norm.max() else 1), dtype=np.int64)
-    for (s, x), j in enc_slot.items():
-        enc_table[s, x - norm[s]] = j
+    # int32 throughout: slot ids / bases / bit counts all fit, and table
+    # memory is what bounds the coder cache's footprint
+    dec_nb = np.zeros(total, dtype=np.int32)
+    dec_base = np.zeros(total, dtype=np.int32)
+    dec_nb[order] = nb_sorted
+    dec_base[order] = (x << nb_sorted) - total
+    width = int(norm.max()) if norm.max() else 1
+    enc_table = np.zeros((norm.size, width), dtype=np.int32)
+    enc_table[sym_sorted, rank] = order
     return dec_sym, dec_nb, dec_base, enc_table
+
+
+def _fse_tables_cached(norm: np.ndarray, table_log: int):
+    """All FSE tables for (norm, table_log), memoized in the active cache.
+
+    Returns (dec_sym, dec_nb, dec_base, enc_table, nb0, thr, st0): the last
+    three are the per-symbol encode helpers — nb0/thr give the emitted bit
+    count as ``nb0 - (X < thr)`` without any per-position bit-length loop,
+    st0 is the lane-start state.
+    """
+
+    def build():
+        dec_sym, dec_nb, dec_base, enc_table = _build_tables(norm, table_log)
+        bl = _bit_length(norm)
+        nb0 = (table_log + 1) - bl
+        thr = norm << np.maximum(nb0, 0)
+        st0 = enc_table[:, 0].copy()
+        return _freeze(dec_sym, dec_nb, dec_base, enc_table, nb0, thr, st0)
+
+    return active_cache().get_or_build(
+        ("fse", norm.tobytes(), table_log), build
+    )
 
 
 def _fse_enc(streams, params):
@@ -300,65 +434,72 @@ def _fse_enc(streams, params):
         return [Stream(np.zeros(0, np.uint8), SType.SERIAL, 1), numeric_stream(np.zeros(0, np.uint32))], h
     counts = np.bincount(x, minlength=256)
     norm = _normalize_counts(counts, table_log)
-    dec_sym, dec_nb, dec_base, enc_table = _build_tables(norm, table_log)
+    _dec_sym, _dec_nb, _dec_base, enc_table, nb0t, thrt, st0t = _fse_tables_cached(
+        norm, table_log
+    )
     total = 1 << table_log
 
     block = 1 << FSE_BLOCK_LOG
     n_blocks = (n + block - 1) // block
     padded = np.zeros(n_blocks * block, dtype=np.uint8)
     padded[:n] = x
-    lanes = padded.reshape(n_blocks, block)
+    # transposed lanes: the hot loop reads one *contiguous* row per position
+    lanesT = np.ascontiguousarray(padded.reshape(n_blocks, block).T)
     rem = np.minimum(n - np.arange(n_blocks, dtype=np.int64) * block, block)
+    max_rem = int(rem.max())
 
-    norm_l = norm.astype(np.int64)
-    # vectorized across blocks; loop positions in reverse (tANS encodes backward)
-    state = np.zeros(n_blocks, dtype=np.int64)  # slot ids in [0, total)
-    first = True
+    # tANS encodes backward; every lane is full except the last, so the
+    # closed-form masks below replace the historical started/newly state:
+    # a lane of length r initializes at position r-1 and emits for i < r-1.
+    width = enc_table.shape[1]
+    enc_flat = enc_table.reshape(-1)
+    state = np.zeros(n_blocks, dtype=np.int64)
     max_bits_per_sym = table_log + 1
-    cap_bytes = (block * max_bits_per_sym + 7) // 8 + 8
-    bitbuf = np.zeros((n_blocks, cap_bytes), dtype=np.uint8)
-    bitpos = np.zeros(n_blocks, dtype=np.int64)
-    lane_idx = np.arange(n_blocks)
-    for i in range(block - 1, -1, -1):
-        s = lanes[:, i].astype(np.int64)
-        active = rem > i
-        f = norm_l[s]
-        if first:
-            # initial state: x' = f + (something deterministic); use slot of x'=f
-            st = enc_table[s, 0]
-            state = np.where(active, st, state)
-            started = active.copy()
-            first = False
-            continue
+    max_flush_bytes = (7 + max_bits_per_sym) // 8
+    cap = (block * max_bits_per_sym + 7) // 8 + 8
+    bitbuf = np.zeros((n_blocks, cap), dtype=np.uint8)
+    flat = bitbuf.reshape(-1)
+    lane_base = np.arange(n_blocks, dtype=np.int64) * cap
+    acc = np.zeros(n_blocks, dtype=np.uint64)  # pending bits, LSB = oldest
+    cnt = np.zeros(n_blocks, dtype=np.int64)  # live bits in acc (< 8 + tl+1)
+    bytepos = np.zeros(n_blocks, dtype=np.int64)
+    for i in range(max_rem - 1, -1, -1):
+        s = lanesT[i].astype(np.int64)
+        emit = rem > i + 1
         X = state + total  # representative value in [total, 2*total)
-        # nb such that (X >> nb) in [f, 2f): since bit_length(X) == tl+1 exactly,
-        # nb0 = tl+1-bit_length(f) gives x0 with bit_length(f) bits; correct -1
-        # when x0 < f (see tANS construction; property-tested in tests/).
-        bl = np.zeros_like(f)
-        ftmp = f.copy()
-        while (ftmp > 0).any():
-            bl += (ftmp > 0).astype(np.int64)
-            ftmp >>= 1
-        nb = (table_log + 1) - bl
-        nb = np.where((X >> np.maximum(nb, 0)) < f, nb - 1, nb)
-        nb = np.maximum(nb, 0)
-        newly = active & ~started
-        # lanes that start mid-stream (shorter tail lanes): initialize instead
-        st_init = enc_table[s, 0]
-        sub2 = X >> nb.astype(np.int64)
-        emit_mask = active & started
-        # emit nb low bits of X for emitting lanes
-        val = (X & ((np.int64(1) << nb) - 1)).astype(np.uint64)
-        nbe = np.where(emit_mask, nb, 0).astype(np.int64)
-        _scatter_bits(bitbuf, bitpos, val, nbe, lane_idx)
-        bitpos += nbe
-        xprime = np.clip(sub2 - f, 0, enc_table.shape[1] - 1)
-        new_state = enc_table[s, xprime]
-        state = np.where(emit_mask, new_state, np.where(newly, st_init, state))
-        started |= active
+        nb = nb0t[s] - (X < thrt[s])
+        nbe = np.where(emit, nb, 0)
+        nbe_u = nbe.astype(np.uint64)
+        val = X.astype(np.uint64) & ((_U64_1 << nbe_u) - _U64_1)
+        acc |= val << cnt.astype(np.uint64)
+        cnt += nbe
+        nfl = cnt >> 3
+        m = nfl > 0
+        if m.any():
+            # cnt < 8 + (table_log+1), so a step flushes up to
+            # (8 + table_log) // 8 whole bytes — loop the slots, not just two
+            for slot in range(max_flush_bytes):
+                if slot and not (nfl > slot).any():
+                    break
+                ms = m if slot == 0 else nfl > slot
+                flat[lane_base[ms] + bytepos[ms] + slot] = (
+                    (acc[ms] >> np.uint64(8 * slot)) & np.uint64(0xFF)
+                ).astype(np.uint8)
+            acc >>= (nfl << 3).astype(np.uint64)
+            bytepos += nfl
+            cnt -= nfl << 3
+        # state transition (masked: emitting lanes step, new lanes initialize)
+        xprime = np.clip((X >> nb) - norm[s], 0, width - 1)
+        new_state = enc_flat[s * width + xprime]
+        state = np.where(emit, new_state, np.where(rem == i + 1, st0t[s], state))
+    # final partial byte per lane (zero-padded high bits, as the OR-writer did)
+    mfin = cnt > 0
+    if mfin.any():
+        flat[lane_base[mfin] + bytepos[mfin]] = acc[mfin].astype(np.uint8)
+    bitpos = (bytepos << 3) + cnt
 
     # concatenate lane bitstreams
-    nbytes = ((bitpos + 7) // 8).astype(np.int64)
+    nbytes = bytepos + (cnt > 0)
     offsets = np.zeros(n_blocks + 1, dtype=np.int64)
     np.cumsum(nbytes, out=offsets[1:])
     stream_out = np.zeros(int(offsets[-1]), dtype=np.uint8)
@@ -380,25 +521,6 @@ def _fse_enc(streams, params):
     return [Stream(stream_out, SType.SERIAL, 1), numeric_stream(meta)], h.done()
 
 
-def _scatter_bits(bitbuf, bitpos, val, nbits, lane_idx):
-    """OR `val` (LSB-first, nbits wide) at per-lane bit cursor `bitpos`."""
-    active = nbits > 0
-    if not active.any():
-        return
-    for b in range(4):
-        byte_idx = (bitpos >> 3) + b
-        shift = (np.int64(b) << 3) - (bitpos & 7)
-        pos = shift >= 0
-        contrib = np.where(
-            pos,
-            val >> np.where(pos, shift, 0).clip(max=63).astype(np.uint64),
-            val << np.where(~pos, -shift, 0).astype(np.uint64),
-        )
-        contrib = (contrib & 0xFF).astype(np.uint8)
-        contrib = np.where(active & (shift < 64), contrib, 0)
-        np.bitwise_or.at(bitbuf, (lane_idx, byte_idx), contrib)
-
-
 def _fse_dec(outs, header):
     bitstream, meta_s = outs
     r = HeaderReader(header)
@@ -414,7 +536,9 @@ def _fse_dec(outs, header):
     for _ in range(tbl.varint()):
         s = tbl.varint()
         norm[s] = tbl.varint()
-    dec_sym, dec_nb, dec_base, _enc = _build_tables(norm, table_log)
+    dec_sym, dec_nb, dec_base, _enc, _nb0, _thr, _st0 = _fse_tables_cached(
+        norm, table_log
+    )
 
     block = 1 << block_log
     n_blocks = (n + block - 1) // block
@@ -429,29 +553,30 @@ def _fse_dec(outs, header):
     bitbuf = np.zeros((n_blocks, cap), dtype=np.uint8)
     for k in range(n_blocks):
         bitbuf[k, : nbytes[k]] = bitstream.data[offsets[k] : offsets[k + 1]]
+    flat = bitbuf.reshape(-1)
+    sliding = np.lib.stride_tricks.sliding_window_view(flat, 8)
+    lane_base = np.arange(n_blocks, dtype=np.int64) * cap
     cursor = bitlen.copy()  # read backward from the end
     rem = np.minimum(n - np.arange(n_blocks, dtype=np.int64) * block, block)
-    out = np.zeros((n_blocks, block), dtype=np.uint8)
-    lane = np.arange(n_blocks)
-    for i in range(block):
-        active = rem > i
-        if not active.any():
-            break
-        sym = dec_sym[state]
-        out[:, i] = np.where(active, sym, 0)
-        nb = np.where(active, dec_nb[state], 0)
+    max_rem = int(rem.max())
+    out = np.empty((block, n_blocks), dtype=np.uint8)
+    # mask-free: exhausted lanes walk garbage states over the zero pad —
+    # always in-table (base+bits stays in [0, total)), trimmed at the end.
+    for i in range(max_rem):
+        out[i] = dec_sym[state]
+        nb = dec_nb[state]
         base = dec_base[state]
-        cursor2 = cursor - nb
-        byte0 = (cursor2 >> 3).clip(min=0)
-        window = np.zeros(n_blocks, dtype=np.uint64)
-        for b in range(8):
-            window |= bitbuf[lane, byte0 + b].astype(np.uint64) << np.uint64(8 * b)
-        bits = (window >> (cursor2 & 7).astype(np.uint64)) & (
-            (np.uint64(1) << nb.astype(np.uint64)) - np.uint64(1)
+        cursor -= nb
+        byte0 = np.maximum(cursor >> 3, 0)
+        w = sliding[lane_base + byte0].view(np.uint64)[:, 0]
+        bits = (w >> (cursor & 7).astype(np.uint64)) & (
+            (_U64_1 << nb.astype(np.uint64)) - _U64_1
         )
-        state = np.where(active, base + bits.astype(np.int64), state)
-        cursor = np.where(active, cursor2, cursor)
-    result = np.concatenate([out[k, : rem[k]] for k in range(n_blocks)])
+        state = base + bits.astype(np.int64)
+    lanes = out.T
+    result = np.concatenate(
+        [np.ascontiguousarray(lanes[:-1]).reshape(-1), lanes[-1, : rem[-1]]]
+    )
     return [_rebuild(stype_tag, result)]
 
 

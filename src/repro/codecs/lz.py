@@ -1,11 +1,35 @@
 """LZ-family reductive codecs (paper §II-C/D).
 
-``lz77``  — a from-scratch greedy hash-match LZ parser.  Match finding is
-vectorized (rolling 4-gram hash + previous-occurrence-by-sort); token
-selection is the classic left-to-right greedy walk.  Output follows the
-Zstd factoring the paper cites: separate literal / literal-length /
-match-length / offset streams — so each stream can take its own backend
-(entropy) codec downstream, exactly the graph-model story.
+``lz77``  — a from-scratch greedy LZ parser, fully vectorized.
+
+Match finding is a rolling-hash + hash-chain scheme: 16-bit Knuth
+multiplicative hashes of every 4-gram (unaligned little-endian ``uint32``
+views, no per-byte assembly), chained by a stable counting sort into a
+``prev[]`` array — for each position, the most recent earlier position with
+the same hash.  The chain depth is fixed at 1 so the greedy parse (and
+therefore every emitted frame) stays **bit-identical** to the historical
+scalar implementation; the chain arrays support deeper probing if a future
+format revision wants stronger matches.
+
+The greedy walk itself is the serial bottleneck classic LZ coders take
+byte-by-byte.  Here it runs as a *segment-parallel lockstep walk*: the input
+is cut into a few hundred segments and one speculative greedy walk starts at
+every segment boundary, all walks advancing one token per step as plain
+numpy vector ops (candidate lookup via a precomputed next-match array, match
+lengths via batched 8-byte-word compare probing with doubling chunks).
+Greedy parses are memoryless — the token sequence from any position is a
+fixed function of that position — so the true parse is recovered by splicing
+speculative chains end-to-end: follow chain 0, and wherever the parse lands,
+a position index says which chain (and step) continues it.  The rare gaps
+between chains are walked scalar with exact bytes-compare extension; a
+mismatch only costs time, never changes the parse.  Decode is a batched
+copy loop: literals land in one vectorized masked scatter, matches replay
+through memcpy-speed ``bytearray`` slices with the overlapping case
+(``dist < length``) replicating its period.
+
+Output follows the Zstd factoring the paper cites: separate literal /
+literal-length / match-length / offset streams — so each stream can take its
+own backend (entropy) codec downstream, exactly the graph-model story.
 
 ``zlib_backend`` — stdlib DEFLATE as a leaf codec.  OpenZL similarly embeds
 battle-tested C kernels for the generic LZ stage; in this offline container
@@ -14,7 +38,7 @@ zlib stands in for those (DESIGN.md §6).
 from __future__ import annotations
 
 import zlib
-from typing import List
+from typing import List, Tuple
 
 import numpy as np
 
@@ -26,27 +50,325 @@ from ._util import HeaderReader, HeaderWriter, numeric_stream
 MIN_MATCH = 4
 MAX_MATCH = 1 << 16
 
+_HASH_MUL = np.uint32(2654435761)  # Knuth multiplicative hash -> 16 bits
+_EXT_CHUNK_MAX = 4096  # doubling cap for batched extension gathers
+
+
+def _grams(data: np.ndarray) -> np.ndarray:
+    """Little-endian uint32 4-grams at every position i <= n-4.
+
+    Four phase-shifted unaligned ``uint32`` views replace the historical
+    shift-and-or assembly (x86/TPU hosts are little-endian; numpy handles
+    the unaligned access).
+    """
+    n = data.size
+    ng = n - 3
+    pad = np.zeros(n + 8, dtype=np.uint8)
+    pad[:n] = data
+    g = np.empty(ng, dtype=np.uint32)
+    for k in range(4):
+        cnt = g[k::4].size
+        g[k::4] = pad[k : k + 4 * cnt].view("<u4")[:cnt]
+    return g
+
+
+def _chain_half(h: np.ndarray, prev: np.ndarray, lo: int, hi: int):
+    """Stable-sort positions [lo, hi) by hash and link each to its most
+    recent same-hash predecessor *within the half* (disjoint ``prev`` writes,
+    so two halves can run on a thread pool).  Returns the sorted-order and
+    sorted-hash arrays for cross-half stitching."""
+    o = np.argsort(h[lo:hi], kind="stable").astype(np.int32)  # radix, 16-bit
+    if lo:
+        o += np.int32(lo)
+    sh = h[o]
+    same = np.empty(hi - lo, dtype=bool)
+    same[0] = False
+    same[1:] = sh[1:] == sh[:-1]
+    shifted = np.empty(hi - lo, dtype=np.int32)
+    shifted[0] = 0
+    shifted[1:] = o[:-1]
+    prev[o] = np.where(same, shifted, -1)
+    return o, sh, same
+
+
+def _build_prev(h: np.ndarray, n: int, ng: int) -> np.ndarray:
+    """prev[i] = most recent j < i with h[j] == h[i] (else -1), int32.
+
+    Large inputs sort two halves concurrently (argsort and the gathers
+    release the GIL); a 2^16-entry last-occurrence table re-links the second
+    half's bucket-first positions to the first half — semantics identical to
+    one global stable sort.
+    """
+    prev = np.empty(n, dtype=np.int32)
+    prev[ng:] = -1
+    if ng < (1 << 18):
+        _chain_half(h, prev, 0, ng)
+        return prev
+    from concurrent.futures import ThreadPoolExecutor
+
+    mid = ng >> 1
+    with ThreadPoolExecutor(2) as pool:
+        fa = pool.submit(_chain_half, h, prev, 0, mid)
+        fb = pool.submit(_chain_half, h, prev, mid, ng)
+        oA, shA, _ = fa.result()
+        oB, _, sameB = fb.result()
+    lastA = np.full(1 << 16, -1, dtype=np.int32)
+    endA = np.empty(shA.size, dtype=bool)
+    endA[-1] = True
+    endA[:-1] = shA[1:] != shA[:-1]
+    lastA[shA[endA]] = oA[endA]  # unique hashes: guaranteed scatter
+    fpos = oB[~sameB]  # second-half positions with no in-half predecessor
+    prev[fpos] = lastA[h[fpos]]
+    return prev
+
 
 def _prev_occurrence(data: np.ndarray) -> np.ndarray:
     """For each position i, the most recent j<i with the same 4-gram hash."""
     n = data.size
     if n < MIN_MATCH:
-        return np.full(n, -1, dtype=np.int64)
-    g = (
-        data[:-3].astype(np.uint32)
-        | (data[1:-2].astype(np.uint32) << 8)
-        | (data[2:-1].astype(np.uint32) << 16)
-        | (data[3:].astype(np.uint32) << 24)
-    )
-    h = (g * np.uint32(2654435761)) >> np.uint32(16)  # Knuth hash -> 16 bits
-    order = np.argsort(h, kind="stable")
-    prev = np.full(n, -1, dtype=np.int64)
-    sh = h[order]
-    same = np.zeros(order.size, dtype=bool)
-    same[1:] = sh[1:] == sh[:-1]
-    prev_sorted = np.where(same, np.concatenate([[0], order[:-1]]), -1)
-    prev[order] = prev_sorted
-    return prev
+        return np.full(n, -1, dtype=np.int32)
+    g = _grams(data)
+    h = ((g * _HASH_MUL) >> np.uint32(16)).astype(np.uint16)
+    return _build_prev(h, n, n - 3)
+
+
+def _first_diff_byte(x: np.ndarray) -> np.ndarray:
+    """Index of the lowest differing byte in each nonzero LE uint64 word."""
+    low = x & (np.uint64(0) - x)
+    return np.log2(low.astype(np.float64)).astype(np.int64) >> 3
+
+
+_U64_ONE = np.uint64(1)
+_U64_63 = np.uint64(63)
+
+
+def _gather_u64(U: np.ndarray, off: np.ndarray) -> np.ndarray:
+    """Unaligned LE uint64 loads at byte offsets ``off`` from ``U`` (the
+    aligned u64 view of the padded data): two contiguous-array gathers plus
+    branchless shift stitching — far faster than per-byte window gathers."""
+    q = off >> 3
+    r = ((off & 7) << 3).astype(np.uint64)
+    # (hi << 1) << (63 - r) == hi << (64 - r), well-defined at r == 0
+    return (U[q] >> r) | ((U[q + 1] << _U64_ONE) << (_U64_63 - r))
+
+
+def _batch_extend(
+    pad: np.ndarray,
+    U: np.ndarray,
+    iv: np.ndarray,
+    jv: np.ndarray,
+    limit: np.ndarray,
+) -> np.ndarray:
+    """Vectorized longest-common-extension: first mismatch of pad[iv+t] vs
+    pad[jv+t], per element, capped at ``limit``.
+
+    Chunks of doubling size are gathered as 64-bit words; mismatch offsets
+    come from the lowest differing byte of the first differing word.  Reads
+    may run into the zero pad past the real data — spurious pad-vs-pad
+    matches are cut off by the ``limit`` cap, so results stay exact.  The
+    first round (one 8-byte word, which resolves the vast majority of
+    matches) uses stitched unaligned u64 loads from the aligned view ``U``.
+    """
+    na = iv.size
+    L = np.zeros(na, dtype=np.int64)
+    if not na:
+        return L
+    x = _gather_u64(U, jv) ^ _gather_u64(U, iv)
+    miss = x != 0
+    L[:] = 8
+    if miss.any():
+        L[miss] = _first_diff_byte(x[miss])
+    np.minimum(L, limit, out=L)
+    act = np.nonzero(~miss & (limit > 8))[0]
+    if act.size:  # second round specialized: two stitched words, no views
+        bj = jv[act] + 8
+        bi = iv[act] + 8
+        x1 = _gather_u64(U, bj) ^ _gather_u64(U, bi)
+        x2 = _gather_u64(U, bj + 8) ^ _gather_u64(U, bi + 8)
+        m1 = x1 != 0
+        m2 = x2 != 0
+        done = m1 | m2
+        off = np.where(
+            m1,
+            _first_diff_byte(np.where(m1, x1, 1)),
+            np.int64(8) + _first_diff_byte(np.where(m2, x2, 1)),
+        )
+        new_l = np.minimum(np.where(done, 8 + off, 24), limit[act])
+        L[act] = new_l
+        act = act[~done & (new_l < limit[act])]
+    chunk = 32
+    while act.size:
+        sw = np.lib.stride_tricks.sliding_window_view(pad, chunk)
+        A = sw[jv[act] + L[act]].view(np.uint64)
+        B = sw[iv[act] + L[act]].view(np.uint64)
+        x = A ^ B
+        neq = x != 0
+        done = neq.any(axis=1)
+        if done.any():
+            d_rows = np.nonzero(done)[0]
+            wi = np.argmax(neq[d_rows], axis=1)
+            xw = x[d_rows, wi]
+            fin = act[d_rows]
+            L[fin] = np.minimum(
+                L[fin] + (wi.astype(np.int64) << 3) + _first_diff_byte(xw),
+                limit[fin],
+            )
+            act = act[~done]
+        L[act] += chunk
+        over = L[act] >= limit[act]
+        if over.any():
+            capped = act[over]
+            L[capped] = limit[capped]
+            act = act[~over]
+        chunk = min(chunk * 2, _EXT_CHUNK_MAX)
+    return L
+
+
+def _extend_scalar(buf: bytes, j: int, i: int, n: int) -> int:
+    """Exact scalar extension (bytes memcmp with doubling + bisect)."""
+    limit = min(n - i, MAX_MATCH)
+    L = 0
+    step = 32
+    while L < limit:
+        c = min(step, limit - L)
+        if buf[j + L : j + L + c] == buf[i + L : i + L + c]:
+            L += c
+            step = min(step * 2, 1 << 14)
+        else:
+            while c > 1:
+                half = c >> 1
+                if buf[j + L : j + L + half] == buf[i + L : i + L + half]:
+                    L += half
+                    c -= half
+                else:
+                    c = half
+            return L
+    return L
+
+
+def _find_tokens(data: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The greedy parse: (match_starts, match_lens, offsets), int64, in order.
+
+    Exactly reproduces the scalar walk ``i += L on match else i += 1`` with
+    chain-depth-1 candidates — see the module docstring for the lockstep
+    segment scheme.
+    """
+    n = data.size
+    ng = n - 3
+    empty = (np.zeros(0, np.int64),) * 3
+    if ng <= 0:
+        return empty
+    g = _grams(data)
+    h = ((g * _HASH_MUL) >> np.uint32(16)).astype(np.uint16)
+    prev = _build_prev(h, n, ng)
+    # candidate positions: the chained position repeats this 4-gram exactly
+    BIG = np.int32(np.iinfo(np.int32).max)
+    cand = np.empty(ng, dtype=np.int32)
+
+    def _cand_slice(lo: int, hi: int) -> None:
+        pv = prev[lo:hi]
+        ok = (pv >= 0) & (g[pv] == g[lo:hi])  # negative pv wraps: masked out
+        cand[lo:hi] = np.where(ok, np.arange(lo, hi, dtype=np.int32), BIG)
+
+    if ng >= (1 << 18):
+        from concurrent.futures import ThreadPoolExecutor
+
+        mid = ng >> 1
+        with ThreadPoolExecutor(2) as pool:
+            f = pool.submit(_cand_slice, 0, mid)
+            _cand_slice(mid, ng)
+            f.result()
+    else:
+        _cand_slice(0, ng)
+    nxt = np.empty(n + 1, dtype=np.int32)
+    nxt[ng:] = BIG
+    nxt[:ng] = np.minimum.accumulate(cand[::-1])[::-1]
+    if int(nxt[0]) == int(BIG):
+        return empty  # no matches anywhere: all-literal stream
+
+    # --- lockstep speculative walks, one per segment ---------------------
+    # Full-width and mask-free: a lane whose walk passes its segment end
+    # parks itself at p = n (where nxt is the sentinel), after which every
+    # per-step op degenerates to a no-op for it (extension limit 0, state
+    # writes gated by `has`).  No per-step lane compression.
+    S = int(np.clip(n // 1024, 1, 2048))
+    seg = -(-n // S)
+    pad = np.zeros((n + _EXT_CHUNK_MAX + 23) & ~7, dtype=np.uint8)
+    pad[:n] = data
+    U = pad.view(np.uint64)
+    steps = np.zeros(S, dtype=np.int64)
+    cap = max(64, seg // 5)
+    chain_m = np.zeros((cap, S), dtype=np.int32)
+    chain_l = np.zeros((cap, S), dtype=np.int32)
+    # ceil(n/S) segments can overshoot n for the last lanes when S does not
+    # divide n: clamp their start to n — they begin parked (nxt[n] sentinel)
+    p = np.minimum(np.arange(S, dtype=np.int64) * seg, n)
+    lend = np.minimum(p + seg, n)
+    n_i = np.int64(n)
+    t = 0
+    while True:
+        ma = nxt[p].astype(np.int64)
+        has = ma < ng
+        if not has.any():
+            break
+        if t == cap:
+            grow = np.zeros((cap, S), dtype=np.int32)
+            chain_m = np.concatenate([chain_m, grow])
+            chain_l = np.concatenate([chain_l, grow])
+            cap *= 2
+        np.minimum(ma, ng - 1, out=ma)  # clip parked/tail lanes for gathers
+        ja = prev[ma].astype(np.int64)
+        limit = np.where(has, np.minimum(n_i - ma, MAX_MATCH) - MIN_MATCH, 0)
+        L = MIN_MATCH + _batch_extend(
+            pad, U, ma + MIN_MATCH, ja + MIN_MATCH, limit
+        )
+        chain_m[t] = ma
+        chain_l[t] = L
+        steps = np.where(has, t + 1, steps)
+        np.copyto(p, ma + L, where=has)
+        np.copyto(p, n_i, where=p >= lend)  # park finished lanes
+        t += 1
+    # a lane still short of its segment end ran out of matches entirely
+    tail = p < lend
+
+    # --- splice chains into the true parse -------------------------------
+    # Indexed by *match start*, not walk position: every position in a
+    # literal gap funnels to the same next match (nxt is a step function),
+    # so entering any chain token by its match start resyncs immediately.
+    m2idx = np.full(ng, -1, dtype=np.int32)
+    tt, ss = np.nonzero(np.arange(t)[:, None] < steps[None, :])
+    m2idx[chain_m[tt, ss]] = (tt * S + ss).astype(np.int32)
+    buf = data.tobytes()
+    parts_m: List[np.ndarray] = []
+    parts_l: List[np.ndarray] = []
+    pos = 0
+    while True:
+        m = int(nxt[pos])
+        if m >= ng:
+            break
+        k = int(m2idx[m])
+        if k >= 0:
+            t0, s = divmod(k, S)
+            t1 = int(steps[s])
+            parts_m.append(chain_m[t0:t1, s])
+            parts_l.append(chain_l[t0:t1, s])
+            if tail[s]:
+                break
+            pos = int(chain_m[t1 - 1, s]) + int(chain_l[t1 - 1, s])
+            continue
+        # match start no speculative chain visited: exact scalar token (rare)
+        j = int(prev[m])
+        L = MIN_MATCH + _extend_scalar(buf, j + MIN_MATCH, m + MIN_MATCH, n)
+        L = min(L, MAX_MATCH)
+        parts_m.append(np.array([m], dtype=np.int32))
+        parts_l.append(np.array([L], dtype=np.int32))
+        pos = m + L
+    if not parts_m:
+        return empty
+    M = np.concatenate(parts_m).astype(np.int64)
+    L = np.concatenate(parts_l).astype(np.int64)
+    D = M - prev[M].astype(np.int64)
+    return M, L, D
 
 
 def _lz77_enc(streams, params):
@@ -55,59 +377,33 @@ def _lz77_enc(streams, params):
         raise ValueError("lz77: fixed-width streams only (string_split first)")
     data = np.frombuffer(s.content_bytes(), dtype=np.uint8)
     n = data.size
-    prev = _prev_occurrence(data)
-    buf = data.tobytes()
+    M, L, offsets = _find_tokens(data)
 
-    lit_runs: List[int] = []
-    match_lens: List[int] = []
-    offsets: List[int] = []
-    literals = bytearray()
-    i = 0
-    lit_start = 0
-    while i + MIN_MATCH <= n:
-        j = prev[i]
-        if j >= 0 and j < i and buf[j : j + MIN_MATCH] == buf[i : i + MIN_MATCH]:
-            L = _extend(data, j, i, n)
-            lit_runs.append(i - lit_start)
-            literals += buf[lit_start:i]
-            match_lens.append(L)
-            offsets.append(i - j)
-            i += L
-            lit_start = i
-        else:
-            i += 1
-    lit_runs.append(n - lit_start)
-    literals += buf[lit_start:n]
+    if M.size:
+        ends = M + L
+        lit_runs = np.empty(M.size + 1, dtype=np.int64)
+        lit_runs[0] = M[0]
+        lit_runs[1:-1] = M[1:] - ends[:-1]
+        lit_runs[-1] = n - ends[-1]
+        # gather literal bytes by ragged ranges: O(total literals), not O(n)
+        gap_starts = np.concatenate([[0], ends])
+        total_lit = int(lit_runs.sum())
+        intra = np.arange(total_lit, dtype=np.int64) - np.repeat(
+            np.cumsum(lit_runs) - lit_runs, lit_runs
+        )
+        literals = data[np.repeat(gap_starts, lit_runs) + intra]
+    else:
+        offsets = np.zeros(0, np.int64)
+        lit_runs = np.array([n], dtype=np.int64)
+        literals = data
 
     h = HeaderWriter().u8(int(s.stype)).varint(s.width).varint(n).done()
     return [
-        Stream(np.frombuffer(bytes(literals), dtype=np.uint8), SType.SERIAL, 1),
-        numeric_stream(np.asarray(lit_runs, dtype=np.uint32)),
-        numeric_stream(np.asarray(match_lens, dtype=np.uint32)),
-        numeric_stream(np.asarray(offsets, dtype=np.uint32)),
+        Stream(np.ascontiguousarray(literals), SType.SERIAL, 1),
+        numeric_stream(lit_runs.astype(np.uint32)),
+        numeric_stream(L.astype(np.uint32)),
+        numeric_stream(offsets.astype(np.uint32)),
     ], h
-
-
-def _extend(data: np.ndarray, j: int, i: int, n: int) -> int:
-    """Longest common extension of data[i:] vs data[j:] (j < i).
-
-    Overlapping matches (dist < L) are legal in LZ77: the copy source keeps
-    reading bytes the copy itself just produced, which for the *extension
-    check* is equivalent to comparing data[j+L] vs data[i+L] directly —
-    data[] already holds the final bytes on the encode side.  So plain
-    chunked comparison is correct regardless of overlap.
-    """
-    L = 0
-    limit = min(n - i, MAX_MATCH)
-    while L < limit:
-        chunk = min(256, limit - L)
-        a = data[j + L : j + L + chunk]
-        b = data[i + L : i + L + chunk]
-        neq = np.nonzero(a != b)[0]
-        if neq.size:
-            return L + int(neq[0])
-        L += chunk
-    return L
 
 
 def _lz77_dec(outs, header):
@@ -117,35 +413,52 @@ def _lz77_dec(outs, header):
     width = r.varint()
     n = r.varint()
     r.expect_end()
-    out = np.empty(n, dtype=np.uint8)
     lit = literals.data
     runs = lit_runs.data.astype(np.int64)
     mls = match_lens.data.astype(np.int64)
     offs = offsets.data.astype(np.int64)
-    pos = 0
-    lpos = 0
-    for k in range(runs.size):
-        rl = int(runs[k])
-        if rl:
-            out[pos : pos + rl] = lit[lpos : lpos + rl]
-            pos += rl
-            lpos += rl
-        if k < mls.size:
-            L = int(mls[k])
-            d = int(offs[k])
-            src = pos - d
-            if d >= L:
-                out[pos : pos + L] = out[src : src + L]
-            else:  # overlapping copy: replicate the period
-                reps = -(-L // d)
-                pattern = out[src:pos]
-                out[pos : pos + L] = np.tile(pattern, reps)[:L]
-            pos += L
-    if pos != n:
+    K = min(runs.size, mls.size)  # matches follow all but the final run
+    cum_runs = np.zeros(runs.size + 1, dtype=np.int64)
+    np.cumsum(runs, out=cum_runs[1:])
+    cum_mls = np.zeros(K + 1, dtype=np.int64)
+    np.cumsum(mls[:K], out=cum_mls[1:])
+    if cum_runs[-1] + cum_mls[-1] != n or cum_runs[-1] != lit.size:
         raise ValueError("lz77: corrupt token streams")
+    # literal destinations: run k starts after k runs and min(k, K) matches
+    lstart = cum_runs[:-1] + cum_mls[np.minimum(np.arange(runs.size), K)]
+    out = np.empty(n, dtype=np.uint8)
+    if n:
+        cover = np.zeros(n + 1, dtype=np.int8)
+        nz = runs > 0
+        np.add.at(cover, lstart[nz], 1)
+        np.add.at(cover, (lstart + runs)[nz], -1)
+        inlit = np.cumsum(cover[:n]).astype(bool)
+        if int(inlit.sum()) != lit.size:
+            raise ValueError("lz77: corrupt token streams")
+        out[inlit] = lit
+    # match destinations, replayed in order at memcpy speed
+    mstart = (cum_runs[1 : K + 1] + cum_mls[:-1]).tolist()
+    if K and (offs[:K] <= 0).any():
+        raise ValueError("lz77: corrupt token streams")
+    ba = bytearray(out)
+    ml = mls[:K].tolist()
+    ol = offs[:K].tolist()
+    for k in range(K):
+        mp = mstart[k]
+        length = ml[k]
+        d = ol[k]
+        src = mp - d
+        if src < 0:
+            raise ValueError("lz77: corrupt token streams")
+        if d >= length:
+            ba[mp : mp + length] = ba[src : src + length]
+        else:  # overlapping copy: replicate the period
+            pattern = ba[src:mp]
+            reps = -(-length // d)
+            ba[mp : mp + length] = (pattern * reps)[:length]
     from repro.core.message import from_wire
 
-    return [from_wire(stype, width, out.tobytes(), None)]
+    return [from_wire(stype, width, bytes(ba), None)]
 
 
 register_codec(

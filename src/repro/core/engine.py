@@ -56,6 +56,7 @@ from .versioning import (
 
 __all__ = [
     "CompressionCtx",
+    "ExecScratch",
     "ResolvedNode",
     "ResolvedStep",
     "ResolvedPlan",
@@ -82,6 +83,33 @@ class CompressionCtx:
     format_version: int = CURRENT_FORMAT_VERSION
     level: int = 5  # 1 (fastest) .. 9 (smallest); selectors may consult this
     extras: dict = field(default_factory=dict)
+
+
+class ExecScratch:
+    """Per-``execute()`` scratch state threaded through codec invocations.
+
+    Today it scopes the entropy coder-table cache (``repro.codecs
+    .coder_cache``): one compression call — including every chunk the
+    ``chunk_bytes=N`` thread pool fans out — shares a single read-only table
+    namespace, so identical Huffman/FSE tables are built once, not once per
+    chunk.  Chunk workers receive the *same* ``ExecScratch``; the cache it
+    wraps is lock-guarded and its values immutable, which is what makes the
+    sharing thread-safe.
+    """
+
+    def __init__(self, table_cache_size: int = 256):
+        from repro.codecs.coder_cache import CoderCache  # lazy: no core cycle
+
+        self.coder_cache = CoderCache(maxsize=table_cache_size)
+
+    def activate(self):
+        """Context manager making this scratch current for codec calls."""
+        from repro.codecs.coder_cache import scoped
+
+        return scoped(self.coder_cache)
+
+    def table_cache_info(self) -> dict:
+        return self.coder_cache.info()
 
 
 @dataclass(frozen=True)
@@ -524,11 +552,14 @@ def execute(
     *,
     backend: str = "host",
     fuse: Optional[bool] = None,
+    scratch: Optional[ExecScratch] = None,
 ) -> bytes:
     """Phase 2: run a resolved program over concrete streams -> wire frame.
 
     ``fuse`` defaults to True on the device backend (where the fused kernel
-    lives); pass an explicit bool to override either way.
+    lives); pass an explicit bool to override either way.  ``scratch`` scopes
+    per-call coder-table caching; the chunked ``compress()`` path passes one
+    shared scratch to every pool worker so read-only tables are built once.
     """
     streams = [s.validate() for s in _as_streams(inputs)]
     if len(streams) != resolved.n_inputs:
@@ -543,7 +574,10 @@ def execute(
         fuse = backend != "host"
     if fuse:
         resolved = fuse_resolved(resolved)
-    return _Executor(resolved, streams, backend).run()
+    if scratch is None:
+        return _Executor(resolved, streams, backend).run()
+    with scratch.activate():
+        return _Executor(resolved, streams, backend).run()
 
 
 # ------------------------------------------------------------------ chunking
@@ -637,15 +671,16 @@ def compress(
         chunks = _split_chunks(streams[0], chunk_bytes)
         if len(chunks) > 1:
             resolved = resolve(plan, [chunks[0]], ctx, use_cache=use_resolve_cache)
+            scratch = ExecScratch()  # one table namespace for the whole call
 
             def _one(ch: Stream) -> bytes:
                 try:
-                    return execute(resolved, [ch], backend=backend)
+                    return execute(resolved, [ch], backend=backend, scratch=scratch)
                 except Exception:
                     # data-dependent refusal (e.g. a selector-picked codec
                     # inapplicable to this chunk): re-resolve just this chunk
                     fresh = resolve(plan, [ch], ctx, use_cache=False)
-                    return execute(fresh, [ch], backend=backend)
+                    return execute(fresh, [ch], backend=backend, scratch=scratch)
 
             with ThreadPoolExecutor(
                 max_workers=n_workers or _default_workers(len(chunks))
@@ -679,10 +714,16 @@ def decompress(frame: bytes, *, n_workers: Optional[int] = None) -> List[Stream]
         if not sub_frames:
             raise wire.FrameError("empty container")
         if len(sub_frames) > 1:
+            scratch = ExecScratch()  # chunks share decode tables too
+
+            def _one(f: bytes) -> List[Stream]:
+                with scratch.activate():
+                    return _decompress_single(f)
+
             with ThreadPoolExecutor(
                 max_workers=n_workers or _default_workers(len(sub_frames))
             ) as pool:
-                parts = list(pool.map(_decompress_single, sub_frames))
+                parts = list(pool.map(_one, sub_frames))
         else:
             parts = [_decompress_single(f) for f in sub_frames]
         for p in parts:

@@ -203,3 +203,26 @@ def fused_delta_bitpack_decode(w: jax.Array, bits: int, n: int, *, use_pallas: b
         _pad_to(w, BLOCK_WORDS), bits, interpret=_interpret()
     )
     return out[:n]
+
+
+# --------------------------------------------------------------- lane refill
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def lane_refill(buf: jax.Array, bitpos: jax.Array, *, use_pallas: bool = True):
+    """Entropy-lane window refill: next 32 bits per lane bit-cursor, u32.
+
+    The device-side building block of the entropy decoders' gather refill
+    (``repro.codecs.entropy`` lane-refill scheme).  ``buf`` must be padded
+    so every cursor has >= 5 readable bytes; lanes are padded to the kernel
+    block internally.  Bit-exact with the numpy host path (tests).
+    """
+    from .lane_refill import BLOCK as REFILL_BLOCK, lane_refill_pallas
+
+    n = bitpos.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    buf = buf.astype(jnp.uint8)
+    if not use_pallas:
+        return ref.lane_refill(buf, bitpos)
+    pos = _pad_to(bitpos.astype(jnp.int32), REFILL_BLOCK)
+    out = lane_refill_pallas(buf, pos, interpret=_interpret())
+    return out[:n]

@@ -90,3 +90,20 @@ def fused_delta_bitpack_encode(x: jax.Array, bits: int) -> jax.Array:
 def fused_delta_bitpack_decode(w: jax.Array, bits: int) -> jax.Array:
     # NOTE: only lossless when all deltas fit in `bits` (checked by caller)
     return delta_decode(bitpack_decode(w, bits))
+
+
+# --------------------------------------------------------------- lane refill
+def lane_refill(buf: jax.Array, bitpos: jax.Array) -> jax.Array:
+    """Entropy-lane window refill: next 32 bits at each lane's bit cursor.
+
+    ``buf`` is the (padded) bitstream as uint8; the result is the LSB-first
+    32-bit window a lane decoder consumes next.  Device twin of the numpy
+    sliding-window gather in ``repro.codecs.entropy`` (32-bit because TPU
+    lanes have no native 64-bit ints).
+    """
+    w32 = buf.astype(jnp.uint32)
+    byte0 = bitpos.astype(jnp.int32) >> 3
+    r = (bitpos.astype(jnp.int32) & 7).astype(jnp.uint32)
+    b = [jnp.take(w32, byte0 + k) for k in range(5)]
+    lo = b[0] | (b[1] << 8) | (b[2] << 16) | (b[3] << 24)
+    return (lo >> r) | ((b[4] << 1) << (jnp.uint32(31) - r))

@@ -142,3 +142,42 @@ def test_fused_equals_unfused_composition():
     d = ops.delta_encode(jnp.asarray(x))
     unfused = np.asarray(ops.bitpack(d, bits))
     np.testing.assert_array_equal(fused, unfused)
+
+
+# --------------------------------------------------------------- lane refill
+@pytest.mark.parametrize("n_lanes", [0, 1, 7, 256, 300])
+def test_lane_refill_matches_ref_and_host(n_lanes):
+    """Pallas refill == jnp oracle == the numpy sliding-window gather that
+    the entropy lane decoders use (truncated to the device's 32-bit window)."""
+    buf = rng.integers(0, 256, 4096, dtype=np.int64).astype(np.uint8)
+    bufp = np.concatenate([buf, np.zeros(8, np.uint8)])
+    pos = rng.integers(0, buf.size * 8 - 40, size=n_lanes).astype(np.int32)
+    got_pl = np.asarray(ops.lane_refill(jnp.asarray(bufp), jnp.asarray(pos)))
+    got_ref = np.asarray(
+        ops.lane_refill(jnp.asarray(bufp), jnp.asarray(pos), use_pallas=False)
+    )
+    sw = np.lib.stride_tricks.sliding_window_view(bufp, 8)
+    w64 = sw[pos >> 3].copy().view("<u8")[:, 0] >> (pos & 7).astype(np.uint64)
+    want = (w64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    np.testing.assert_array_equal(got_ref, want)
+    np.testing.assert_array_equal(got_pl, want)
+
+
+def test_lane_refill_feeds_huffman_window():
+    """The refilled window's low 15 bits are exactly the Huffman LUT index
+    the host decoder derives for the same cursor."""
+    from repro.core.codec import get_codec
+    from repro.core.message import serial
+
+    data = bytes(rng.integers(97, 123, 20000, dtype=np.int64).astype(np.uint8))
+    outs, header = get_codec("huffman").run_encode([serial(data)], {})
+    bitstream = outs[0].data
+    offs = outs[1].data.astype(np.int64)
+    bufp = np.concatenate([bitstream, np.zeros(16, np.uint8)])
+    pos = offs.astype(np.int32)
+    win = np.asarray(ops.lane_refill(jnp.asarray(bufp), jnp.asarray(pos)))
+    sw = np.lib.stride_tricks.sliding_window_view(bufp, 8)
+    w64 = sw[pos >> 3].copy().view("<u8")[:, 0] >> (pos & 7).astype(np.uint64)
+    np.testing.assert_array_equal(
+        win & np.uint32(0x7FFF), (w64 & np.uint64(0x7FFF)).astype(np.uint32)
+    )

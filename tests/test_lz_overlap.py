@@ -1,0 +1,100 @@
+"""Adversarial tests for the lz77 decode overlapping-copy path.
+
+When a match's distance is smaller than its length the copy source includes
+bytes the copy itself produces — the decoder must replicate the period, and
+must do so for *every* small distance (the batched decode rewrite replays
+matches through bytearray slices, where this is the easy path to get wrong).
+"""
+import numpy as np
+import pytest
+
+from repro.codecs import lz
+from repro.core.codec import get_codec
+from repro.core.message import Stream, SType, serial
+from repro.codecs._util import numeric_stream
+
+
+def _roundtrip(data: bytes) -> None:
+    spec = get_codec("lz77")
+    outs, header = spec.run_encode([serial(data)], {})
+    (back,) = spec.run_decode(outs, header)
+    assert back.content_bytes() == data
+
+
+@pytest.mark.parametrize("dist", range(1, 9))
+def test_self_referencing_runs_every_distance(dist):
+    """A period-`dist` run long enough to force dist < L overlapping copies."""
+    seed = bytes(range(65, 65 + dist))
+    data = seed * (4000 // dist)
+    # verify the encoder actually produced an overlapping match
+    outs, header = get_codec("lz77").run_encode([serial(data)], {})
+    mls = outs[2].data.astype(np.int64)
+    offs = outs[3].data.astype(np.int64)
+    assert ((offs < mls) & (offs == dist)).any(), "no overlapping match emitted"
+    _roundtrip(data)
+
+
+@pytest.mark.parametrize("dist", range(1, 9))
+def test_self_referencing_with_prefix_and_tail(dist):
+    prefix = b"QXZW-unique-prefix-" + bytes([200 + dist])
+    data = prefix + bytes(range(dist)) * 700 + b"#tail-bytes"
+    _roundtrip(data)
+
+
+def test_overlap_lengths_non_multiple_of_period():
+    """Copy lengths that are not multiples of the period exercise the
+    truncated final repetition."""
+    for dist in range(1, 9):
+        for extra in range(dist):
+            data = b"HDR!" + bytes(range(dist)) * 300 + bytes(range(dist))[:extra]
+            _roundtrip(data)
+
+
+def test_handcrafted_overlap_tokens_decode():
+    """Drive _lz77_dec directly with tokens forcing dist < L at every
+    distance 1..8 (independent of what the encoder chooses to emit)."""
+    for dist in range(1, 9):
+        literals = bytes(range(100, 100 + dist))
+        L = 57  # deliberately not a multiple of any dist <= 8
+        n = dist + L
+        header = (
+            lz.HeaderWriter().u8(int(SType.SERIAL)).varint(1).varint(n).done()
+        )
+        outs = [
+            Stream(np.frombuffer(literals, np.uint8), SType.SERIAL, 1),
+            numeric_stream(np.array([dist, 0], np.uint32)),  # lit runs
+            numeric_stream(np.array([L], np.uint32)),  # match lens
+            numeric_stream(np.array([dist], np.uint32)),  # offsets
+        ]
+        (back,) = lz._lz77_dec(outs, header)
+        expect = (literals * (L // dist + 2))[:n]
+        assert back.content_bytes() == expect, f"dist={dist}"
+
+
+def test_corrupt_tokens_raise():
+    header = lz.HeaderWriter().u8(int(SType.SERIAL)).varint(1).varint(10).done()
+
+    def mk(lits, runs, mls, offs):
+        return [
+            Stream(np.frombuffer(lits, np.uint8), SType.SERIAL, 1),
+            numeric_stream(np.asarray(runs, np.uint32)),
+            numeric_stream(np.asarray(mls, np.uint32)),
+            numeric_stream(np.asarray(offs, np.uint32)),
+        ]
+
+    with pytest.raises(ValueError):  # totals don't reach n
+        lz._lz77_dec(mk(b"ab", [2, 0], [4], [1]), header)
+    with pytest.raises(ValueError):  # offset reaches before the start
+        lz._lz77_dec(mk(b"ab", [2, 0], [8], [5]), header)
+    with pytest.raises(ValueError):  # zero offset
+        lz._lz77_dec(mk(b"ab", [2, 0], [8], [0]), header)
+
+
+def test_max_match_cap_roundtrip():
+    """Runs longer than MAX_MATCH split into capped tokens and still decode."""
+    data = b"\xaa" * (lz.MAX_MATCH * 2 + 12345)
+    outs, header = get_codec("lz77").run_encode([serial(data)], {})
+    mls = outs[2].data.astype(np.int64)
+    assert mls.max() <= lz.MAX_MATCH
+    (back,) = get_codec("lz77").run_decode(outs, header)
+    assert back.content_bytes() == data

@@ -1,0 +1,172 @@
+"""Cross-checks pinning the vectorized LZ/Huffman/FSE hot paths against the
+pre-existing scalar behavior (tests/_scalar_ref.py, the seed implementations).
+
+THE invariant of this PR: for every input, the vectorized encoders emit
+bit-identical output streams AND headers — so every frame any older build
+produced still decodes, and every new frame is byte-for-byte what the old
+build would have written.  Property-tested over random, constant, periodic,
+and already-compressed inputs (hypothesis, guarded via tests/_hyp.py), plus
+deterministic adversarial cases.
+"""
+import zlib
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+import _scalar_ref as sr
+from repro.codecs import entropy as vec_entropy
+from repro.codecs import lz as vec_lz
+from repro.core.message import serial
+
+
+def _assert_bitwise_equal(codec, data):
+    pairs = {
+        "lz77": (sr._lz77_enc, vec_lz._lz77_enc, sr._lz77_dec, vec_lz._lz77_dec),
+        "huffman": (
+            sr._huffman_enc,
+            vec_entropy._huffman_enc,
+            sr._huffman_dec,
+            vec_entropy._huffman_dec,
+        ),
+        "fse": (sr._fse_enc, vec_entropy._fse_enc, sr._fse_dec, vec_entropy._fse_dec),
+    }
+    ref_enc, new_enc, ref_dec, new_dec = pairs[codec]
+    s = serial(data)
+    ref_outs, ref_h = ref_enc([s], {})
+    new_outs, new_h = new_enc([s], {})
+    assert ref_h == new_h, f"{codec}: header diverged on {len(data)}-byte input"
+    assert len(ref_outs) == len(new_outs)
+    for i, (a, b) in enumerate(zip(ref_outs, new_outs)):
+        assert a.stype == b.stype and a.width == b.width
+        assert a.data.tobytes() == b.data.tobytes(), f"{codec}: stream {i} diverged"
+    # old decoder reads new frames; new decoder reads (identical) old frames
+    assert ref_dec(new_outs, new_h)[0].content_bytes() == data
+    assert new_dec(ref_outs, ref_h)[0].content_bytes() == data
+
+
+CODECS = ["lz77", "huffman", "fse"]
+
+
+def _check_all(data: bytes) -> None:
+    for codec in CODECS:
+        _assert_bitwise_equal(codec, data)
+
+
+@given(st.binary(min_size=0, max_size=8192))
+@settings(max_examples=25, deadline=None)
+def test_equiv_random(b):
+    _check_all(b)
+
+
+@given(st.integers(0, 255), st.integers(0, 12000))
+@settings(max_examples=15, deadline=None)
+def test_equiv_constant(byte, n):
+    _check_all(bytes([byte]) * n)
+
+
+@given(st.binary(min_size=1, max_size=16), st.integers(1, 2000))
+@settings(max_examples=20, deadline=None)
+def test_equiv_periodic(period, reps):
+    _check_all(period * reps)
+
+
+@given(st.binary(min_size=0, max_size=4096))
+@settings(max_examples=15, deadline=None)
+def test_equiv_already_compressed(b):
+    _check_all(zlib.compress(b, 9))
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_equiv_deterministic_corpus(codec):
+    rng = np.random.default_rng(1234)
+    cases = [
+        b"",
+        b"a",
+        b"abc",
+        b"abcd",
+        b"abcdabcd",
+        b"the quick brown fox jumps over the lazy dog " * 250,
+        bytes(rng.integers(0, 256, 70000).astype(np.uint8)),
+        bytes(rng.integers(0, 4, 70000).astype(np.uint8)),
+        np.cumsum(rng.integers(0, 3, 50000)).astype(np.uint8).tobytes(),
+        b"\x00" * 70000,  # match length beyond MAX_MATCH
+        (b"xy" + bytes(rng.integers(0, 256, 30000).astype(np.uint8))) * 2,
+    ]
+    for data in cases:
+        _assert_bitwise_equal(codec, data)
+
+
+def test_equiv_lane_block_boundaries():
+    """Sizes straddling the entropy lane-block and LZ segment boundaries."""
+    rng = np.random.default_rng(5)
+    for n in [1023, 1024, 1025, 4095, 4096, 4097, 8192, 12289, 65536 + 17]:
+        data = bytes(rng.choice(16, n).astype(np.uint8) + 97)
+        for codec in CODECS:
+            _assert_bitwise_equal(codec, data)
+
+
+def test_prev_occurrence_matches_scalar():
+    """The threaded half-sort hash chain equals the seed's global argsort."""
+    rng = np.random.default_rng(9)
+    for n in [0, 1, 3, 4, 100, 5000, (1 << 18) + 7, (1 << 18) + 4096]:
+        data = rng.integers(0, 8, n).astype(np.uint8)
+        got = vec_lz._prev_occurrence(data)
+        want = sr._prev_occurrence(data)
+        assert np.array_equal(got.astype(np.int64), want.astype(np.int64)), n
+
+
+def test_trained_plans_still_roundtrip():
+    """Wire compatibility: every shipped trained plan still encodes/decodes
+    (and its frames hit the rewritten lz/entropy leaves)."""
+    import json
+    from pathlib import Path
+
+    from repro.core import Compressor
+    from repro.core.serialize import deserialize_plan
+
+    cache = Path(__file__).resolve().parents[1] / "results" / "trained"
+    blobs = sorted(cache.glob("*.ozp"))
+    assert blobs, "trained plan cache missing"
+    rng = np.random.default_rng(3)
+    payload = bytes(rng.choice(32, 20000).astype(np.uint8) + 48)
+    checked = 0
+    for blob in blobs[:12]:
+        plan, _meta = deserialize_plan(blob.read_bytes())
+        if plan.n_inputs != 1:
+            continue
+        try:
+            ok = Compressor(plan).roundtrip_check(payload)
+        except ValueError:
+            continue  # plan requires a typed/structured input shape
+        assert ok, blob.name
+        checked += 1
+    assert checked >= 1
+
+
+def test_lz77_segment_overshoot_sizes():
+    """Regression: lane start positions arange(S)*ceil(n/S) can exceed n for
+    sizes where ceil overshoots (e.g. 1200*1024 + 1) — must clamp, not crash,
+    and stay bit-identical to the scalar parse."""
+    rng = np.random.default_rng(21)
+    for n in [1200 * 1024 + 1, 1536 * 1024 + 7]:
+        data = bytes(rng.choice(8, n).astype(np.uint8) + 97)
+        _assert_bitwise_equal("lz77", data)
+
+
+def test_fse_large_table_log_flush():
+    """Regression: at table_log >= 17 a single step can flush 3 whole bytes;
+    the accumulator writer must not drop the third (bit-identical to the
+    scalar 4-byte OR-writer, and roundtrip-exact)."""
+    from repro.core.message import serial as mk_serial
+
+    data = b"a" * 200_000 + bytes(range(98, 130))
+    for table_log in (16, 17, 18):
+        s = mk_serial(data)
+        ref_outs, ref_h = sr._fse_enc([s], {"table_log": table_log})
+        new_outs, new_h = vec_entropy._fse_enc([s], {"table_log": table_log})
+        assert ref_h == new_h
+        for a, b in zip(ref_outs, new_outs):
+            assert a.data.tobytes() == b.data.tobytes(), table_log
+        back = vec_entropy._fse_dec(new_outs, new_h)[0].content_bytes()
+        assert back == data, table_log
