@@ -18,11 +18,22 @@ writes the results to ``results/BENCH_codecs.json``; when
 ``results/BENCH_codecs_baseline.json`` (the pre-vectorization measurements,
 same generators, same host) is present, per-row speedups are recorded so the
 perf trajectory of the serial-hot-path work stays on the record.
+
+``--stream`` benchmarks the session/streaming file path against the one-shot
+in-memory path on a log corpus (``REPRO_STREAM_BENCH_MIB``, default 64):
+each measurement runs in a subprocess so ``ru_maxrss`` isolates peak memory,
+reported as a delta over a no-op import baseline.  The streaming rows should
+show peak memory ~ window × chunk (not input size) at one-shot-or-better
+warm-session throughput.  With ``--json`` the results land in
+``results/BENCH_stream.json``.
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
+import tempfile
 import time
 from pathlib import Path
 
@@ -164,6 +175,166 @@ def run_codecs(sizes_mib=(1, 16), emit_json=False, print_rows=True):
     return rows, results
 
 
+# ------------------------------------------------------ streaming sessions
+STREAM_MIB = int(os.environ.get("REPRO_STREAM_BENCH_MIB", "64"))
+STREAM_CHUNK_MIB = 4
+STREAM_WINDOW = 4
+
+
+def _stream_worker(mode: str, src: str, dst: str, chunk_mib: int, window: int):
+    """Subprocess body for one --stream measurement; prints one JSON line.
+
+    Each mode does a warm-up rep, then times a second rep — the streaming
+    rows thus measure a *warm session* (persistent pool, cached resolve,
+    built tables), the one-shot rows a warm process but per-call setup.
+    """
+    from repro.codecs import text_profile
+    from repro.core import CompressorSession, DecompressorSession, stream_io
+
+    chunk_bytes = chunk_mib * MIB
+    plan = text_profile()
+    result = {"mode": mode, "bytes_in": 0, "bytes_out": 0, "seconds": 0.0}
+    if mode == "noop":
+        pass
+    elif mode == "enc-oneshot":
+        from repro.core import compress, serial
+
+        data = Path(src).read_bytes()
+        times = []
+        for rep in range(3):
+            t0 = time.perf_counter()
+            frame = compress(plan, serial(data), chunk_bytes=chunk_bytes)
+            times.append(time.perf_counter() - t0)
+        result["seconds"] = min(times[1:])
+        Path(dst).write_bytes(frame)
+        result["bytes_in"], result["bytes_out"] = len(data), len(frame)
+    elif mode == "enc-stream":
+        with CompressorSession(plan, chunk_bytes=chunk_bytes, window=window) as sess:
+            times = []
+            for rep in range(3):
+                t0 = time.perf_counter()
+                stats = stream_io.compress_file(
+                    src, dst, plan, chunk_bytes=chunk_bytes, session=sess
+                )
+                times.append(time.perf_counter() - t0)
+            result["seconds"] = min(times[1:])
+        result["bytes_in"], result["bytes_out"] = stats["bytes_in"], stats["bytes_out"]
+        result["max_inflight"] = sess.stats["max_inflight"]
+    elif mode == "dec-oneshot":
+        from repro.core import decompress
+
+        frame = Path(src).read_bytes()
+        times = []
+        for rep in range(3):
+            t0 = time.perf_counter()
+            (out,) = decompress(frame)
+            times.append(time.perf_counter() - t0)
+        result["seconds"] = min(times[1:])
+        payload = out.content_bytes()
+        Path(dst).write_bytes(payload)
+        result["bytes_in"], result["bytes_out"] = len(frame), len(payload)
+    elif mode == "dec-stream":
+        with DecompressorSession(window=window) as sess:
+            times = []
+            for rep in range(3):
+                t0 = time.perf_counter()
+                stats = stream_io.decompress_file(src, dst, session=sess)
+                times.append(time.perf_counter() - t0)
+            result["seconds"] = min(times[1:])
+        result["bytes_in"], result["bytes_out"] = stats["bytes_in"], stats["bytes_out"]
+        result["max_inflight"] = sess.stats["max_inflight"]
+    else:
+        raise SystemExit(f"unknown stream worker mode {mode!r}")
+    print(json.dumps(result))
+
+
+def _spawn_measured(mode: str, src: str, dst: str) -> dict:
+    """Run one worker in a subprocess -> its JSON result + peak RSS (MiB)."""
+    cmd = [
+        sys.executable, "-m", "benchmarks.engine_bench",
+        "--stream-worker", mode, "--stream-src", src, "--stream-dst", dst,
+        "--stream-chunk-mib", str(STREAM_CHUNK_MIB),
+        "--stream-window", str(STREAM_WINDOW),
+    ]
+    p = subprocess.Popen(cmd, stdout=subprocess.PIPE, cwd=RESULTS_DIR.parent)
+    out = p.stdout.read()
+    _pid, status, ru = os.wait4(p.pid, 0)
+    p.returncode = os.waitstatus_to_exitcode(status)
+    if p.returncode != 0:
+        raise RuntimeError(f"stream worker {mode} failed ({p.returncode})")
+    result = json.loads(out.decode().strip().splitlines()[-1])
+    # ru_maxrss is KiB on Linux, bytes on macOS
+    scale = 1024 if sys.platform != "darwin" else 1
+    result["peak_rss_mib"] = round(ru.ru_maxrss * scale / MIB, 1)
+    return result
+
+
+def run_stream(emit_json: bool = False, print_rows: bool = True):
+    """Streaming vs one-shot: MiB/s and peak RSS, one subprocess per row."""
+    rows = []
+    with tempfile.TemporaryDirectory(prefix="ozl_stream_bench_") as tmp:
+        src = os.path.join(tmp, "corpus.log")
+        with open(src, "wb") as f:  # write in 8 MiB pieces: parent stays small
+            remaining = STREAM_MIB
+            seed = 0
+            while remaining > 0:
+                piece = min(remaining, 8)
+                f.write(synth_log(piece * MIB, seed=seed))
+                remaining -= piece
+                seed += 1
+        baseline = _spawn_measured("noop", src, os.path.join(tmp, "x"))
+        results = {"baseline_rss_mib": baseline["peak_rss_mib"]}
+        frame_path = os.path.join(tmp, "corpus.ozl")
+        for mode, s, d in [
+            ("enc-oneshot", src, os.path.join(tmp, "oneshot.ozl")),
+            ("enc-stream", src, frame_path),
+            ("dec-oneshot", frame_path, os.path.join(tmp, "dec1.bin")),
+            ("dec-stream", frame_path, os.path.join(tmp, "dec2.bin")),
+        ]:
+            r = _spawn_measured(mode, s, d)
+            raw = max(r["bytes_in"], r["bytes_out"])  # raw side of the copy
+            entry = {
+                "mib_s": round(raw / MIB / max(r["seconds"], 1e-9), 2),
+                "seconds": round(r["seconds"], 4),
+                "peak_rss_mib": r["peak_rss_mib"],
+                "rss_delta_mib": round(
+                    r["peak_rss_mib"] - baseline["peak_rss_mib"], 1
+                ),
+            }
+            if "max_inflight" in r:
+                entry["max_inflight"] = r["max_inflight"]
+            results[mode] = entry
+            rows.append(
+                f"stream/{mode},{r['seconds']*1e6:.1f},"
+                + ";".join(f"{k}={v}" for k, v in entry.items())
+            )
+        # sanity: streaming output must decode to the original corpus
+        if Path(os.path.join(tmp, "dec2.bin")).read_bytes() != Path(src).read_bytes():
+            raise AssertionError("streaming roundtrip mismatch")
+        for side in ("enc", "dec"):
+            one, strm = results[f"{side}-oneshot"], results[f"{side}-stream"]
+            results[f"{side}_speedup"] = round(strm["mib_s"] / one["mib_s"], 2)
+            results[f"{side}_rss_ratio"] = round(
+                strm["rss_delta_mib"] / max(one["rss_delta_mib"], 0.1), 3
+            )
+    if emit_json:
+        payload = {
+            "schema": "BENCH_stream/v1",
+            "host_cpus": os.cpu_count(),
+            "corpus_mib": STREAM_MIB,
+            "chunk_mib": STREAM_CHUNK_MIB,
+            "window": STREAM_WINDOW,
+            "profile": "text",
+            "rows": results,
+        }
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        (RESULTS_DIR / "BENCH_stream.json").write_text(json.dumps(payload, indent=2))
+    if print_rows:
+        for r in rows:
+            print(r)
+    return rows, results
+
+
 def _big_input():
     rng = np.random.default_rng(0)
     n = TOTAL_BYTES // 4
@@ -253,13 +424,38 @@ if __name__ == "__main__":
         default="1,16",
         help="comma-separated codec benchmark sizes in MiB (floats ok)",
     )
+    ap.add_argument(
+        "--stream", action="store_true",
+        help="run the streaming-session section (results/BENCH_stream.json"
+        " with --json)",
+    )
+    ap.add_argument(
+        "--stream-only", action="store_true", help="skip the engine section"
+    )
+    ap.add_argument("--stream-worker", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--stream-src", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--stream-dst", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--stream-chunk-mib", type=int, default=STREAM_CHUNK_MIB,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--stream-window", type=int, default=STREAM_WINDOW,
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args.stream_worker:
+        _stream_worker(
+            args.stream_worker, args.stream_src, args.stream_dst,
+            args.stream_chunk_mib, args.stream_window,
+        )
+        raise SystemExit(0)
     print("name,us_per_call,derived")
-    if not args.codecs_only:
+    if not (args.codecs_only or args.stream_only):
         run()
-    if args.codecs or args.codecs_only or args.json:
+    if args.codecs or args.codecs_only or (
+        args.json and not (args.stream or args.stream_only)
+    ):
         sizes = tuple(
             int(x) if float(x) == int(float(x)) else float(x)
             for x in args.sizes.split(",")
         )
         run_codecs(sizes_mib=sizes, emit_json=args.json)
+    if args.stream or args.stream_only:
+        run_stream(emit_json=args.json)

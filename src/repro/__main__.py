@@ -1,0 +1,7 @@
+"""``python -m repro`` — the universal compression CLI (see repro.cli)."""
+import sys
+
+from repro.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

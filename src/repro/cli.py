@@ -1,0 +1,288 @@
+"""The universal command-line interface: ``python -m repro``.
+
+The shell-facing twin of OpenZL's ``zli`` tool: any named profile or
+serialized trained plan compresses any file into the self-describing wire
+format, and *every* frame — whoever produced it, whatever graph it embeds —
+decompresses and inspects with the same two subcommands, no out-of-band
+configuration.
+
+    python -m repro compress  corpus.bin -o corpus.ozl --profile text
+    python -m repro inspect   corpus.ozl
+    python -m repro decompress corpus.ozl -o corpus.out
+    python -m repro profiles
+
+Compression streams through a :class:`~repro.core.engine.CompressorSession`
+(bounded in-flight window; the file is never fully loaded), so arbitrarily
+large inputs run in ~``window × chunk_bytes`` memory.  ``inspect`` parses the
+embedded graph and stored streams structurally without decoding any payload.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import Callable, Dict, Optional, Tuple
+
+from repro import codecs as _codecs  # noqa: F401  (registers the codec suite)
+from repro.core import Compressor, CompressionCtx, stream_io, wire
+from repro.core.codec import get_codec_by_id
+from repro.core.graph import Plan
+from repro.core.message import SType
+from repro.core.versioning import CURRENT_FORMAT_VERSION
+
+__all__ = ["main", "named_profiles"]
+
+
+# ------------------------------------------------------------------ profiles
+def named_profiles() -> Dict[str, Tuple[Callable[[], Plan], str]]:
+    """Parameterless named profiles: name -> (factory, one-line description)."""
+    from repro.codecs import profiles as P
+
+    out: Dict[str, Tuple[Callable[[], Plan], str]] = {}
+    for name, fn, desc in [
+        ("generic", P.generic_profile, "auto selector over any byte stream"),
+        ("numeric", P.numeric_profile, "auto selector tuned for integer arrays"),
+        ("text", P.text_profile, "LZ-style text graph (zlib backend)"),
+        ("float32", P.float32_profile, "float_split fp32 checkpoint graph"),
+        ("bfloat16", P.bfloat16_profile, "float_split bf16 embedding graph"),
+        ("float64", P.float64_profile, "float_split fp64 graph"),
+        ("sao", P.sao_profile, "the paper's SAO star-catalog graph (§IV)"),
+    ]:
+        doc = (fn.__doc__ or "").strip().splitlines()
+        out[name] = (fn, doc[0] if doc and doc[0] else desc)
+    return out
+
+
+def _profile_plan(spec: str) -> Plan:
+    """Resolve ``--profile``: a named profile, ``struct:W1,W2,..`` or ``csv:N``."""
+    from repro.codecs import profiles as P
+
+    if spec.startswith("struct:"):
+        widths = [int(w) for w in spec[len("struct:") :].split(",") if w]
+        if not widths:
+            raise SystemExit(f"--profile {spec!r}: no field widths")
+        return P.struct_profile(widths)
+    if spec.startswith("csv:"):
+        return P.csv_profile(int(spec[len("csv:") :]))
+    reg = named_profiles()
+    if spec not in reg:
+        raise SystemExit(
+            f"unknown profile {spec!r}; known: {', '.join(sorted(reg))},"
+            f" struct:W1,W2,.., csv:N"
+        )
+    return reg[spec][0]()
+
+
+def _parse_size(text: str) -> int:
+    t = text.strip()
+    mult = 1
+    for suffix, m in (
+        ("KIB", 1 << 10), ("MIB", 1 << 20), ("GIB", 1 << 30),
+        ("KB", 10 ** 3), ("MB", 10 ** 6), ("GB", 10 ** 9),
+        ("K", 1 << 10), ("M", 1 << 20), ("G", 1 << 30),
+    ):
+        if t.upper().endswith(suffix):
+            mult = m
+            t = t[: -len(suffix)]
+            break
+    try:
+        return int(float(t) * mult)
+    except ValueError:
+        raise SystemExit(f"bad size {text!r} (try 1048576, 4MiB, 64K, ...)") from None
+
+
+def _load_compressor(args) -> Compressor:
+    if args.plan:
+        blob = Path(args.plan).read_bytes()
+        comp = Compressor.deserialize(blob)
+    else:
+        comp = Compressor(_profile_plan(args.profile))
+    if args.level is not None:
+        comp.level = args.level
+    if args.format_version is not None:
+        comp.format_version = args.format_version
+    return comp
+
+
+# --------------------------------------------------------------- subcommands
+def _cmd_compress(args) -> int:
+    src = Path(args.input)
+    dst = Path(args.output) if args.output else src.with_name(src.name + ".ozl")
+    comp = _load_compressor(args)
+    ctx = CompressionCtx(comp.format_version, comp.level)
+    stats = stream_io.compress_file(
+        src,
+        dst,
+        comp.plan,
+        ctx=ctx,
+        backend=args.backend,
+        chunk_bytes=_parse_size(args.chunk_bytes),
+        n_workers=args.workers,
+        window=args.window,
+    )
+    ratio = stats["bytes_in"] / max(stats["bytes_out"], 1)
+    kind = "container" if stats["container"] else "frame"
+    print(
+        f"{src} -> {dst}: {stats['bytes_in']} -> {stats['bytes_out']} bytes"
+        f" (x{ratio:.2f}), {stats['chunks']} chunk(s), {kind},"
+        f" plan={comp.name or comp.plan.name or 'anonymous'}"
+    )
+    return 0
+
+
+def _cmd_decompress(args) -> int:
+    src = Path(args.input)
+    if args.output:
+        dst = Path(args.output)
+    elif src.suffix == ".ozl":
+        dst = src.with_suffix("")
+    else:
+        dst = src.with_name(src.name + ".out")
+    stats = stream_io.decompress_file(
+        src, dst, n_workers=args.workers, window=args.window
+    )
+    print(
+        f"{src} -> {dst}: {stats['bytes_in']} -> {stats['bytes_out']} bytes,"
+        f" {stats['chunks']} chunk(s)"
+    )
+    return 0
+
+
+_STYPE_NAMES = {t: t.name for t in SType}
+
+
+def _codec_name(codec_id: int) -> str:
+    try:
+        return get_codec_by_id(codec_id).name
+    except KeyError:
+        return f"codec#{codec_id}"
+
+
+def _print_frame(frame: bytes, indent: str = "") -> None:
+    """Pretty-print one frame's embedded graph — payloads are never decoded."""
+    version, n_inputs, nodes, stored = wire.read_frame(frame)
+    print(
+        f"{indent}frame v{version}: {len(frame)} bytes, {n_inputs} input(s),"
+        f" {len(nodes)} codec node(s), {len(stored)} stored stream(s)"
+    )
+    for i, node in enumerate(nodes):
+        ins = ",".join(map(str, node.inputs))
+        print(
+            f"{indent}  node {i:3d}  {_codec_name(node.codec_id):<20}"
+            f" in=[{ins}] out={node.n_out} header={len(node.header)}B"
+        )
+    payload_total = 0
+    for eid in sorted(stored):
+        s = stored[eid]
+        payload = s.data.nbytes
+        payload_total += payload
+        extra = f" strings={s.n_elts}" if s.stype == SType.STRING else ""
+        print(
+            f"{indent}  edge {eid:4d}  {_STYPE_NAMES[s.stype]:<8} w={s.width}"
+            f" n={s.n_elts} payload={payload}B{extra}"
+        )
+    print(f"{indent}  stored payload total: {payload_total}B")
+
+
+def _cmd_inspect(args) -> int:
+    path = Path(args.input)
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        f.seek(0)
+        if magic == wire.CONTAINER_MAGIC:
+            sizes = []
+            shown = 0
+            for i, chunk in enumerate(wire.iter_container_frames(f)):
+                sizes.append(len(chunk))
+                if shown < args.chunks:
+                    print(f"chunk {i}:")
+                    _print_frame(chunk, indent="  ")
+                    shown += 1
+            total = path.stat().st_size
+            print(
+                f"container: {len(sizes)} chunk(s), {total} bytes total,"
+                f" chunk frames min/median/max ="
+                f" {min(sizes)}/{sorted(sizes)[len(sizes)//2]}/{max(sizes)}B"
+            )
+            if shown < len(sizes):
+                print(f"(graphs shown for first {shown}; --chunks N for more)")
+        elif magic == wire.MAGIC:
+            _print_frame(f.read())
+        else:
+            print(f"{path}: not an OZLJ frame or OZLC container", file=sys.stderr)
+            return 2
+    return 0
+
+
+def _cmd_profiles(_args) -> int:
+    for name, (_fn, doc) in sorted(named_profiles().items()):
+        print(f"{name:<12} {doc}")
+    print("struct:W1,..  Generic record format: field_split + per-field auto backend.")
+    print("csv:N         CSV frontend + per-column parse_numeric + auto backends.")
+    return 0
+
+
+# -------------------------------------------------------------------- parser
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="OpenZL-style graph compression: universal compress /"
+        " decompress / inspect over the self-describing wire format.",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    c = sub.add_parser("compress", help="compress a file with a profile or plan")
+    c.add_argument("input")
+    c.add_argument("-o", "--output", default=None, help="default: INPUT.ozl")
+    g = c.add_mutually_exclusive_group()
+    g.add_argument("--profile", default="generic", help="named profile (see"
+                   " `profiles`), struct:W1,W2,.. or csv:N")
+    g.add_argument("--plan", default=None, help="serialized trained plan (.ozp)")
+    c.add_argument("--chunk-bytes", default="4MiB", help="chunk size for the"
+                   " streaming container; 0 = single frame (default 4MiB)")
+    c.add_argument("--backend", default="host", help="execution backend"
+                   " (host/device)")
+    c.add_argument("--level", type=int, default=None, help="effort 1-9")
+    c.add_argument("--format-version", type=int, default=None,
+                   help=f"wire format version (default {CURRENT_FORMAT_VERSION})")
+    c.add_argument("--workers", type=int, default=None, help="encode threads")
+    c.add_argument("--window", type=int, default=None,
+                   help="max in-flight chunks (bounds peak memory)")
+    c.set_defaults(fn=_cmd_compress)
+
+    d = sub.add_parser("decompress", help="universal decode of any frame")
+    d.add_argument("input")
+    d.add_argument("-o", "--output", default=None,
+                   help="default: strip .ozl, else INPUT.out")
+    d.add_argument("--workers", type=int, default=None, help="decode threads")
+    d.add_argument("--window", type=int, default=None,
+                   help="max in-flight chunks (bounds peak memory)")
+    d.set_defaults(fn=_cmd_decompress)
+
+    i = sub.add_parser(
+        "inspect", help="print a frame's embedded graph without decompressing"
+    )
+    i.add_argument("input")
+    i.add_argument("--chunks", type=int, default=1,
+                   help="container chunks to print graphs for (default 1)")
+    i.set_defaults(fn=_cmd_inspect)
+
+    p = sub.add_parser("profiles", help="list named profiles")
+    p.set_defaults(fn=_cmd_profiles)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return args.fn(args)
+    except SystemExit:
+        raise
+    except Exception as err:  # fail with a message, not a traceback
+        kind = type(err).__name__ if not isinstance(err, wire.FrameError) else "frame"
+        print(f"error ({kind}): {err}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

@@ -25,6 +25,8 @@ from .selector import SelectorSpec, register_selector, get_selector  # noqa: F40
 from .engine import (  # noqa: F401
     CompressionCtx,
     Compressor,
+    CompressorSession,
+    DecompressorSession,
     ExecScratch,
     ResolvedPlan,
     ResolvedStep,

@@ -21,6 +21,18 @@ Compression is split into:
 pool (numpy/zlib/JAX release the GIL) and stored in a multi-chunk container
 frame (``wire.py``, format v4+).
 
+Sessions (streaming engine)
+---------------------------
+:class:`CompressorSession` / :class:`DecompressorSession` are the long-lived
+form of those one-shot calls: a session owns the resolved plan, the coder-table
+scratch, the backend choice, and a persistent thread pool, so a service pays
+for spin-up once, not per request.  The chunked path pipelines *split →
+parallel encode → in-order incremental write* behind a bounded in-flight
+window (peak memory ≈ window × chunk_bytes — never the input size — when fed
+from a lazy chunk source such as ``repro.core.stream_io``).  The module-level
+``compress()``/``decompress()`` are thin wrappers over a throwaway session;
+their wire output is unchanged, byte for byte.
+
 Decompression is purely procedural and backend-free: parse the frame, run
 codec decoders in reverse topological order.  No parameters, no selectors, no
 user code — any frame any graph ever produced decodes with this one function,
@@ -28,12 +40,24 @@ including both single- and multi-chunk frames.
 """
 from __future__ import annotations
 
+import io
 import os
 import threading
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import (
+    BinaryIO,
+    Callable,
+    Dict,
+    Iterable,
+    Iterator,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
 
 import numpy as np
 
@@ -71,6 +95,8 @@ __all__ = [
     "decompress",
     "decompress_bytes",
     "Compressor",
+    "CompressorSession",
+    "DecompressorSession",
 ]
 
 FUSED_NAME = "fused_delta_bitpack"
@@ -582,21 +608,32 @@ def execute(
 
 # ------------------------------------------------------------------ chunking
 def _split_chunks(s: Stream, chunk_bytes: int) -> List[Stream]:
-    """Element-aligned split; every chunk holds at least one element."""
+    """Element-aligned split; every chunk holds at least one element.
+
+    STRING streams pack greedily: a chunk takes whole strings while its byte
+    total stays <= ``chunk_bytes`` (the first string is always taken, however
+    large).  The boundaries come from one int64 cumsum over ``lengths`` plus a
+    binary search per emitted chunk — O(n + chunks·log n), replacing the
+    per-string Python loop.
+    """
     if chunk_bytes < 1:
         raise ValueError("chunk_bytes must be >= 1")
     if s.stype == SType.STRING:
-        out: List[Stream] = []
         lens = s.lengths if s.lengths is not None else np.zeros(0, np.uint32)
-        i, off = 0, 0
+        if lens.size == 0:
+            return [s]
+        pre = np.zeros(lens.size + 1, np.int64)  # exclusive byte offsets
+        np.cumsum(lens, dtype=np.int64, out=pre[1:])
+        out: List[Stream] = []
+        i = 0
         while i < lens.size:
-            j, nb = i, 0
-            while j < lens.size and (j == i or nb + int(lens[j]) <= chunk_bytes):
-                nb += int(lens[j])
-                j += 1
-            out.append(Stream(s.data[off : off + nb], SType.STRING, 1, lens[i:j]))
-            i, off = j, off + nb
-        return out or [s]
+            j = int(np.searchsorted(pre, pre[i] + chunk_bytes, side="right")) - 1
+            j = max(j, i + 1)
+            out.append(
+                Stream(s.data[int(pre[i]) : int(pre[j])], SType.STRING, 1, lens[i:j])
+            )
+            i = j
+        return out
     elt_bytes = s.width if s.stype in (SType.NUMERIC, SType.STRUCT) else 1
     per = max(1, chunk_bytes // elt_bytes)
     n = s.n_elts
@@ -628,8 +665,400 @@ def _concat_decoded(parts: List[Stream]) -> Stream:
     return Stream(np.concatenate(arrays), s0.stype, s0.width).validate()
 
 
-def _default_workers(n_tasks: int) -> int:
-    return max(1, min(n_tasks, os.cpu_count() or 1))
+# ------------------------------------------------------------------ sessions
+class _SessionBase:
+    """Shared pool/scratch plumbing for the two session classes."""
+
+    def __init__(
+        self,
+        n_workers: Optional[int],
+        window: Optional[int],
+        table_cache_size: int,
+        pool_name: str,
+    ):
+        self.n_workers = n_workers
+        self.scratch = ExecScratch(table_cache_size)
+        self._window = window
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool_lock = threading.Lock()
+        self._pool_name = pool_name
+        self._stats_lock = threading.Lock()
+        self.stats: Dict[str, int] = {
+            "calls": 0,
+            "chunks": 0,
+            "bytes_in": 0,
+            "bytes_out": 0,
+            "max_inflight": 0,
+        }
+
+    def _bump(self, **deltas: int) -> None:
+        """Lock-guarded counter updates (sessions may be shared by threads)."""
+        with self._stats_lock:
+            for k, v in deltas.items():
+                self.stats[k] += v
+
+    def _pool_get(self) -> ThreadPoolExecutor:
+        """The persistent executor, created on first chunked call."""
+        with self._pool_lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.n_workers or (os.cpu_count() or 1),
+                    thread_name_prefix=self._pool_name,
+                )
+            return self._pool
+
+    @property
+    def window(self) -> int:
+        """Max chunks in flight: bounds peak memory at ~window × chunk size."""
+        if self._window:
+            return max(1, self._window)
+        return 2 * (self.n_workers or (os.cpu_count() or 1))
+
+    def _window_map(
+        self, fn: Callable, items: Iterable, head: Optional[list] = None
+    ) -> Iterator:
+        """Map ``fn`` over ``items`` on the pool, yielding results *in order*
+        while keeping at most ``self.window`` tasks (and their inputs/outputs)
+        alive.  ``head`` prepends already-drawn items without re-consuming the
+        iterator."""
+        pool = self._pool_get()
+        window = self.window
+        it = iter(items)
+        pending: "deque" = deque(pool.submit(fn, x) for x in (head or []))
+        exhausted = False
+        try:
+            while pending or not exhausted:
+                while not exhausted and len(pending) < window:
+                    try:
+                        item = next(it)
+                    except StopIteration:
+                        exhausted = True
+                        break
+                    pending.append(pool.submit(fn, item))
+                if not pending:
+                    break
+                with self._stats_lock:
+                    if len(pending) > self.stats["max_inflight"]:
+                        self.stats["max_inflight"] = len(pending)
+                yield pending.popleft().result()
+        finally:
+            for fut in pending:
+                fut.cancel()
+
+    def close(self) -> None:
+        """Release the pool.  The session object stays usable (a new pool is
+        created on demand), so throwaway wrapper usage is cheap and idempotent."""
+        with self._pool_lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def __del__(self):  # pragma: no cover - GC safety net
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+class CompressorSession(_SessionBase):
+    """A reusable, streaming compression session (one plan, many inputs).
+
+    Owns everything a ``compress()`` call would otherwise rebuild: the
+    resolve-cache handle for its plan, a coder-table :class:`ExecScratch`
+    shared by every chunk it ever encodes, the backend choice, and a
+    persistent thread pool.  The chunked path pipelines *split → parallel
+    encode → in-order incremental write* behind a bounded in-flight window, so
+    feeding it a lazy chunk iterator (``repro.core.stream_io``) compresses
+    arbitrarily large inputs with peak memory ≈ ``window × chunk_bytes``.
+
+    Output is byte-identical to the module-level ``compress()`` with the same
+    arguments — sessions change *when* work happens, never the wire format.
+    Thread-safe for concurrent ``compress()`` calls (the scratch cache and
+    resolve cache are lock-guarded and value-immutable).
+    """
+
+    def __init__(
+        self,
+        plan: Plan,
+        *,
+        ctx: Optional[CompressionCtx] = None,
+        backend: str = "host",
+        chunk_bytes: Optional[int] = None,
+        n_workers: Optional[int] = None,
+        window: Optional[int] = None,
+        use_resolve_cache: bool = True,
+        table_cache_size: int = 256,
+    ):
+        super().__init__(n_workers, window, table_cache_size, "ozl-enc")
+        self.plan = plan.validate()
+        self.ctx = ctx or CompressionCtx()
+        check_compress_version(self.ctx.format_version)
+        if backend not in available_backends():
+            raise ValueError(
+                f"unknown backend {backend!r}; available: {available_backends()}"
+            )
+        self.backend = backend
+        self.chunk_bytes = chunk_bytes
+        self.use_resolve_cache = use_resolve_cache
+
+    # ------------------------------------------------------------ one-shot
+    def compress(
+        self,
+        inputs: Union[Stream, bytes, Sequence[Stream]],
+        *,
+        chunk_bytes: Optional[int] = None,
+        backend: Optional[str] = None,
+    ) -> bytes:
+        """Compress to an in-memory frame (chunked -> container record).
+
+        ``chunk_bytes`` overrides the session default; pass 0 to force an
+        unchunked frame from a chunking-enabled session.
+        """
+        cb = self.chunk_bytes if chunk_bytes is None else chunk_bytes
+        streams = [s.validate() for s in _as_streams(inputs)]
+        self._bump(calls=1, bytes_in=sum(s.nbytes for s in streams))
+        if cb:
+            if len(streams) != 1:
+                raise ValueError("chunked compression supports exactly one input")
+            if self.ctx.format_version < CONTAINER_MIN_VERSION:
+                raise ValueError(
+                    f"chunk_bytes requires format version >= {CONTAINER_MIN_VERSION}"
+                    f" (compressing at {self.ctx.format_version})"
+                )
+            chunks = _split_chunks(streams[0], cb)
+            if len(chunks) > 1:
+                buf = io.BytesIO()
+                self.compress_chunks(chunks, buf, n_chunks=len(chunks), backend=backend)
+                frame = buf.getvalue()
+                self._bump(bytes_out=len(frame))
+                return frame
+        frame = self._compress_single(streams, backend or self.backend)
+        self._bump(bytes_out=len(frame))
+        return frame
+
+    def _compress_single(self, streams: List[Stream], backend: str) -> bytes:
+        resolved, was_hit = _resolve_impl(
+            self.plan, streams, self.ctx, use_cache=self.use_resolve_cache
+        )
+        try:
+            return execute(resolved, streams, backend=backend, scratch=self.scratch)
+        except Exception:
+            # A cached resolution is keyed on stream *shape*, but a selector's
+            # choice can be inapplicable to new *values* of the same shape
+            # (e.g. range_pack over a >57-bit range).  Re-expand for this
+            # data; a failure on a fresh resolution is a genuine error.
+            if not was_hit or self.plan.is_resolved:
+                raise
+            fresh, _ = _resolve_impl(self.plan, streams, self.ctx, use_cache=False)
+            return execute(fresh, streams, backend=backend, scratch=self.scratch)
+
+    # ----------------------------------------------------------- streaming
+    def compress_chunks(
+        self,
+        chunks: Iterable[Stream],
+        out: BinaryIO,
+        *,
+        n_chunks: Optional[int] = None,
+        backend: Optional[str] = None,
+    ) -> int:
+        """Pipelined core: parallel encode, in-order incremental container
+        write.  Returns bytes written.  With ``n_chunks`` known the output is
+        byte-identical to ``write_container`` over the same frames; without
+        it, ``out`` must be seekable (see :class:`wire.ContainerWriter`).
+
+        At most :attr:`window` chunks (plus their encoded frames) are held in
+        memory at once — the input may be an unbounded lazy iterator.
+        """
+        backend = backend or self.backend
+        if self.ctx.format_version < CONTAINER_MIN_VERSION:
+            raise ValueError(
+                f"chunked compression requires format version"
+                f" >= {CONTAINER_MIN_VERSION} (at {self.ctx.format_version})"
+            )
+        it = iter(chunks)
+        try:
+            first = next(it)
+        except StopIteration:
+            raise ValueError("compress_chunks needs at least one chunk") from None
+        # resolve once on the first chunk; workers fall back per chunk on a
+        # data-dependent refusal, exactly like the one-shot chunked path
+        resolved = resolve(
+            self.plan, [first], self.ctx, use_cache=self.use_resolve_cache
+        )
+
+        def _one(ch: Stream) -> bytes:
+            try:
+                return execute(resolved, [ch], backend=backend, scratch=self.scratch)
+            except Exception:
+                fresh = resolve(self.plan, [ch], self.ctx, use_cache=False)
+                return execute(fresh, [ch], backend=backend, scratch=self.scratch)
+
+        writer = wire.ContainerWriter(out, self.ctx.format_version, n_chunks)
+        for frame in self._window_map(_one, it, head=[first]):
+            writer.write_chunk(frame)
+            self._bump(chunks=1)
+        return writer.close()
+
+    def compress_to(
+        self, inputs: Union[Stream, bytes, Sequence[Stream]], out: BinaryIO
+    ) -> int:
+        """Compress straight into a binary sink (single frame or container).
+
+        Mirrors :meth:`compress` — same bytes, same errors — but never
+        materializes the whole container: a multi-chunk input streams through
+        :meth:`compress_chunks`.
+        """
+        cb = self.chunk_bytes
+        streams = [s.validate() for s in _as_streams(inputs)]
+        if cb:
+            if len(streams) != 1:
+                raise ValueError("chunked compression supports exactly one input")
+            if self.ctx.format_version < CONTAINER_MIN_VERSION:
+                raise ValueError(
+                    f"chunk_bytes requires format version >= {CONTAINER_MIN_VERSION}"
+                    f" (compressing at {self.ctx.format_version})"
+                )
+        chunks = _split_chunks(streams[0], cb) if cb else []
+        if len(chunks) > 1:
+            self._bump(calls=1, bytes_in=streams[0].nbytes)
+            n = self.compress_chunks(chunks, out, n_chunks=len(chunks))
+            self._bump(bytes_out=n)
+            return n
+        frame = self.compress(streams, chunk_bytes=0)
+        out.write(frame)
+        return len(frame)
+
+    # ---------------------------------------------------------- inspection
+    def resolved(self, inputs) -> ResolvedPlan:
+        """Phase-1 artifact for these inputs (cached like compress())."""
+        return resolve(self.plan, inputs, self.ctx, use_cache=self.use_resolve_cache)
+
+
+class DecompressorSession(_SessionBase):
+    """The universal decoder as a long-lived session.
+
+    Plan-free by construction (frames are self-describing); what persists is
+    the decode-side coder-table scratch and the thread pool that fans
+    container chunks out.  ``decompress()`` matches the module-level function;
+    :meth:`iter_frames` / :meth:`decompress_from` add the bounded-memory
+    streaming path over ``wire.iter_container_frames``.
+    """
+
+    def __init__(
+        self,
+        *,
+        n_workers: Optional[int] = None,
+        window: Optional[int] = None,
+        table_cache_size: int = 256,
+    ):
+        super().__init__(n_workers, window, table_cache_size, "ozl-dec")
+
+    def _one(self, frame: bytes) -> List[Stream]:
+        with self.scratch.activate():
+            return _decompress_single(frame)
+
+    def decompress(self, frame: bytes) -> List[Stream]:
+        """Frame or container -> regenerated input streams."""
+        self._bump(calls=1, bytes_in=len(frame))
+        if wire.is_container(frame):
+            version, sub_frames = wire.read_container(frame)
+            check_decode_version(version)
+            if not sub_frames:
+                raise wire.FrameError("empty container")
+            if len(sub_frames) > 1:
+                parts = list(self._window_map(self._one, sub_frames))
+            else:
+                parts = [self._one(sub_frames[0])]
+            for p in parts:
+                if len(p) != 1:
+                    raise wire.FrameError(
+                        "container chunks must be single-input frames"
+                    )
+            self._bump(chunks=len(parts))
+            out = [_concat_decoded([p[0] for p in parts])]
+        else:
+            out = self._one(frame)
+            self._bump(chunks=1)
+        self._bump(bytes_out=sum(s.nbytes for s in out))
+        return out
+
+    # ----------------------------------------------------------- streaming
+    def iter_frames(self, reader: BinaryIO) -> Iterator[Stream]:
+        """Yield each container chunk's regenerated stream, in order, decoding
+        up to :attr:`window` chunks concurrently with bounded memory.  A bare
+        (non-container) frame yields its single stream.
+
+        Chunk type consistency is enforced across the container; the trailing
+        container CRC is verified by the underlying frame iterator before the
+        final chunk is processed, and every chunk frame's own CRC is verified
+        as it is decoded (fail closed, no silent partial output).
+        """
+        head = reader.read(4)
+        rest = _Prefixed(head, reader)
+        if head == wire.CONTAINER_MAGIC:
+            # keep only (stype, width) of the first chunk, not its data —
+            # holding the Stream would pin a whole extra chunk in memory
+            ref_meta: Optional[Tuple[SType, int]] = None
+            for part in self._window_map(
+                self._one, wire.iter_container_frames(rest)
+            ):
+                if len(part) != 1:
+                    raise wire.FrameError(
+                        "container chunks must be single-input frames"
+                    )
+                (s,) = part
+                if ref_meta is None:
+                    ref_meta = (s.stype, s.width)
+                elif (s.stype, s.width) != ref_meta:
+                    raise wire.FrameError(
+                        "container chunks disagree on stream type"
+                    )
+                self._bump(chunks=1)
+                yield s
+        else:
+            blob = rest.read()
+            for s in self.decompress(blob):
+                yield s
+
+    def decompress_from(self, reader: BinaryIO) -> List[Stream]:
+        """Streaming read + decode, then concatenate (one materialized copy).
+
+        A bare (non-container) frame decodes as-is — its streams are distinct
+        graph inputs, never concatenated."""
+        head = reader.read(4)
+        rest = _Prefixed(head, reader)
+        if head != wire.CONTAINER_MAGIC:
+            return self.decompress(rest.read())
+        parts = list(self.iter_frames(rest))
+        if not parts:
+            raise wire.FrameError("empty container")
+        self.stats["calls"] += 1
+        return [_concat_decoded(parts)]
+
+
+class _Prefixed:
+    """A tiny reader that replays already-consumed prefix bytes."""
+
+    def __init__(self, prefix: bytes, reader: BinaryIO):
+        self._prefix = prefix
+        self._reader = reader
+
+    def read(self, n: int = -1) -> bytes:
+        if not self._prefix:
+            return self._reader.read(n)
+        if n is None or n < 0:
+            out, self._prefix = self._prefix + self._reader.read(), b""
+            return out
+        take, self._prefix = self._prefix[:n], self._prefix[n:]
+        if len(take) < n:
+            take += self._reader.read(n - len(take))
+        return take
 
 
 # ------------------------------------------------------------------ frontend
@@ -645,6 +1074,10 @@ def compress(
 ) -> bytes:
     """Compress ``inputs`` with ``plan`` into a self-describing frame.
 
+    A thin wrapper over a throwaway :class:`CompressorSession` — long-running
+    callers should hold a session instead and skip the per-call pool and
+    scratch construction.
+
     ``chunk_bytes=N`` splits a (single) large input into independent chunks
     compressed concurrently and stored in a multi-chunk container frame
     (format v4+); the universal decoder reassembles them transparently.
@@ -656,81 +1089,26 @@ def compress(
     values of a previously seen shape; measurement code that compares
     selector choices across streams should bypass it.
     """
-    ctx = ctx or CompressionCtx()
-    check_compress_version(ctx.format_version)
-    streams = [s.validate() for s in _as_streams(inputs)]
-
-    if chunk_bytes:
-        if len(streams) != 1:
-            raise ValueError("chunked compression supports exactly one input")
-        if ctx.format_version < CONTAINER_MIN_VERSION:
-            raise ValueError(
-                f"chunk_bytes requires format version >= {CONTAINER_MIN_VERSION}"
-                f" (compressing at {ctx.format_version})"
-            )
-        chunks = _split_chunks(streams[0], chunk_bytes)
-        if len(chunks) > 1:
-            resolved = resolve(plan, [chunks[0]], ctx, use_cache=use_resolve_cache)
-            scratch = ExecScratch()  # one table namespace for the whole call
-
-            def _one(ch: Stream) -> bytes:
-                try:
-                    return execute(resolved, [ch], backend=backend, scratch=scratch)
-                except Exception:
-                    # data-dependent refusal (e.g. a selector-picked codec
-                    # inapplicable to this chunk): re-resolve just this chunk
-                    fresh = resolve(plan, [ch], ctx, use_cache=False)
-                    return execute(fresh, [ch], backend=backend, scratch=scratch)
-
-            with ThreadPoolExecutor(
-                max_workers=n_workers or _default_workers(len(chunks))
-            ) as pool:
-                frames = list(pool.map(_one, chunks))
-            return wire.write_container(ctx.format_version, frames)
-
-    resolved, was_hit = _resolve_impl(plan, streams, ctx, use_cache=use_resolve_cache)
-    try:
-        return execute(resolved, streams, backend=backend)
-    except Exception:
-        # A cached resolution is keyed on stream *shape*, but a selector's
-        # choice can be inapplicable to new *values* of the same shape (e.g.
-        # range_pack over a >57-bit range).  Re-expand for this data; a
-        # failure on a fresh resolution is a genuine error.
-        if not was_hit or plan.is_resolved:
-            raise
-        fresh, _ = _resolve_impl(plan, streams, ctx, use_cache=False)
-        return execute(fresh, streams, backend=backend)
+    with CompressorSession(
+        plan,
+        ctx=ctx,
+        backend=backend,
+        chunk_bytes=chunk_bytes,
+        n_workers=n_workers,
+        use_resolve_cache=use_resolve_cache,
+    ) as session:
+        return session.compress(inputs)
 
 
 def decompress(frame: bytes, *, n_workers: Optional[int] = None) -> List[Stream]:
     """The universal decoder (paper §III-D): frame -> regenerated inputs.
 
     Accepts both single frames and multi-chunk containers; container chunks
-    decode concurrently and concatenate back into the original stream.
+    decode concurrently and concatenate back into the original stream.  A thin
+    wrapper over a throwaway :class:`DecompressorSession`.
     """
-    if wire.is_container(frame):
-        version, sub_frames = wire.read_container(frame)
-        check_decode_version(version)
-        if not sub_frames:
-            raise wire.FrameError("empty container")
-        if len(sub_frames) > 1:
-            scratch = ExecScratch()  # chunks share decode tables too
-
-            def _one(f: bytes) -> List[Stream]:
-                with scratch.activate():
-                    return _decompress_single(f)
-
-            with ThreadPoolExecutor(
-                max_workers=n_workers or _default_workers(len(sub_frames))
-            ) as pool:
-                parts = list(pool.map(_one, sub_frames))
-        else:
-            parts = [_decompress_single(f) for f in sub_frames]
-        for p in parts:
-            if len(p) != 1:
-                raise wire.FrameError("container chunks must be single-input frames")
-        return [_concat_decoded([p[0] for p in parts])]
-    return _decompress_single(frame)
+    with DecompressorSession(n_workers=n_workers) as session:
+        return session.decompress(frame)
 
 
 def _decompress_single(frame: bytes) -> List[Stream]:
@@ -822,6 +1200,18 @@ class Compressor:
     def resolve(self, inputs) -> ResolvedPlan:
         """Expose phase 1 for inspection/warm-up (cached like compress())."""
         return resolve(self.plan, inputs, self._ctx())
+
+    def session(self, **overrides) -> "CompressorSession":
+        """A long-lived streaming session with this compressor's settings.
+
+        Keyword overrides (``backend=``, ``chunk_bytes=``, ``n_workers=``,
+        ``window=``, ...) are passed through to :class:`CompressorSession`.
+        """
+        kw = dict(
+            ctx=self._ctx(), backend=self.backend, chunk_bytes=self.chunk_bytes
+        )
+        kw.update(overrides)
+        return CompressorSession(self.plan, **kw)
 
     @staticmethod
     def decompress(frame: bytes) -> List[Stream]:

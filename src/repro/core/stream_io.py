@@ -1,0 +1,245 @@
+"""File and iterator sources/sinks for the streaming sessions.
+
+This is the layer that lets the engine compress data it never fully loads:
+``iter_file_chunks`` lazily reads element-aligned chunks from a file-like
+object, ``compress_file``/``decompress_file`` wire those chunks through a
+:class:`~repro.core.engine.CompressorSession` /
+:class:`~repro.core.engine.DecompressorSession` into/out of the container
+record, with peak memory bounded by the session's in-flight window — not the
+file size.  The CLI (``python -m repro``) and the serving/checkpoint paths sit
+on top of these helpers.
+
+Wire compatibility: ``compress_file(src, dst, plan, chunk_bytes=N)`` produces
+byte-for-byte the same frame as ``compress(plan, serial(src_bytes),
+chunk_bytes=N)`` — files small enough for a single chunk get a bare frame, not
+a container, exactly like the in-memory path.
+"""
+from __future__ import annotations
+
+import io
+import os
+from contextlib import contextmanager
+from pathlib import Path
+from typing import BinaryIO, Iterator, Optional, Union
+
+import numpy as np
+
+from . import wire
+from .engine import (
+    CompressionCtx,
+    CompressorSession,
+    DecompressorSession,
+    _split_chunks,
+)
+from .graph import Plan
+from .message import Stream, SType, serial
+
+__all__ = [
+    "iter_file_chunks",
+    "iter_stream_chunks",
+    "compress_file",
+    "decompress_file",
+]
+
+DEFAULT_CHUNK_BYTES = 4 << 20
+
+PathOrFile = Union[str, "os.PathLike[str]", BinaryIO]
+
+
+@contextmanager
+def _open(src: PathOrFile, mode: str):
+    if isinstance(src, (str, os.PathLike)):
+        with open(src, mode) as f:
+            yield f
+    else:
+        yield src  # caller-owned file object: not closed here
+
+
+def _input_size(f: BinaryIO) -> Optional[int]:
+    """Remaining byte count, when the source can tell us (regular files)."""
+    try:
+        if not f.seekable():
+            return None
+        pos = f.tell()
+        end = f.seek(0, os.SEEK_END)
+        f.seek(pos)
+        return end - pos
+    except (OSError, ValueError):
+        return None
+
+
+def iter_file_chunks(
+    f: BinaryIO, chunk_bytes: int = DEFAULT_CHUNK_BYTES
+) -> Iterator[Stream]:
+    """Lazily read a binary source as SERIAL chunk streams of ``chunk_bytes``.
+
+    The chunk boundaries match ``engine._split_chunks`` on the whole file, so
+    frames compressed from this iterator are byte-identical to the in-memory
+    chunked path.  Holds one chunk at a time.
+    """
+    if chunk_bytes < 1:
+        raise ValueError("chunk_bytes must be >= 1")
+    while True:
+        block = f.read(chunk_bytes)
+        if not block:
+            return
+        yield serial(block)
+
+
+def iter_stream_chunks(s: Stream, chunk_bytes: int) -> Iterator[Stream]:
+    """Element-aligned chunk views over an in-memory stream (no copies)."""
+    yield from _split_chunks(s, chunk_bytes)
+
+
+def compress_file(
+    src: PathOrFile,
+    dst: PathOrFile,
+    plan: Plan,
+    *,
+    ctx: Optional[CompressionCtx] = None,
+    backend: str = "host",
+    chunk_bytes: Optional[int] = DEFAULT_CHUNK_BYTES,
+    n_workers: Optional[int] = None,
+    window: Optional[int] = None,
+    session: Optional[CompressorSession] = None,
+) -> dict:
+    """Compress a file without ever loading it whole -> stats dict.
+
+    ``src``/``dst`` are paths or binary file objects.  With ``chunk_bytes``
+    set (the default), the input streams through the session's bounded window;
+    an input that fits one chunk becomes a bare frame.  ``chunk_bytes=0``/
+    ``None`` forces the (fully in-memory) single-frame path for any size.
+    Pass ``session`` to reuse a long-lived session; its plan must match.
+    Returns ``{"bytes_in", "bytes_out", "chunks", "container"}``.
+    """
+    own_session = session is None
+    if session is None:
+        session = CompressorSession(
+            plan,
+            ctx=ctx,
+            backend=backend,
+            chunk_bytes=chunk_bytes,
+            n_workers=n_workers,
+            window=window,
+        )
+    elif session.plan != plan:
+        raise ValueError(
+            f"session plan {session.plan.name!r} does not match the requested"
+            f" plan {plan.name!r}; reuse one session per plan"
+        )
+    try:
+        # "w+b": the unknown-length container path backpatches its chunk
+        # count and re-reads the body for the CRC trailer
+        with _open(src, "rb") as fin, _open(dst, "w+b") as fout:
+            if not chunk_bytes:
+                data = fin.read()
+                frame = session.compress(serial(data), chunk_bytes=0)
+                fout.write(frame)
+                return {
+                    "bytes_in": len(data),
+                    "bytes_out": len(frame),
+                    "chunks": 1,
+                    "container": False,
+                }
+            size = _input_size(fin)
+            if size is not None and size <= chunk_bytes:
+                data = fin.read()
+                frame = session.compress(serial(data), chunk_bytes=0)
+                fout.write(frame)
+                return {
+                    "bytes_in": len(data),
+                    "bytes_out": len(frame),
+                    "chunks": 1,
+                    "container": False,
+                }
+            chunks = iter_file_chunks(fin, chunk_bytes)
+            if size is None:
+                # unknown length: look ahead one chunk so a short input still
+                # gets a bare frame, matching the in-memory path
+                first = next(chunks, None)
+                if first is None:
+                    first = serial(b"")
+                second = next(chunks, None)
+                if second is None:
+                    frame = session.compress(first, chunk_bytes=0)
+                    fout.write(frame)
+                    return {
+                        "bytes_in": first.nbytes,
+                        "bytes_out": len(frame),
+                        "chunks": 1,
+                        "container": False,
+                    }
+
+                seen = [first.nbytes + second.nbytes]
+
+                def _chain():
+                    yield first
+                    yield second
+                    for ch in chunks:
+                        seen[0] += ch.nbytes
+                        yield ch
+
+                before = session.stats["chunks"]
+                n_out = session.compress_chunks(_chain(), fout, n_chunks=None)
+                n_chunks = session.stats["chunks"] - before
+                bytes_in = seen[0]
+            else:
+                n_chunks = -(-size // chunk_bytes)
+                before = session.stats["chunks"]
+                n_out = session.compress_chunks(chunks, fout, n_chunks=n_chunks)
+                bytes_in = size
+            return {
+                "bytes_in": bytes_in,
+                "bytes_out": n_out,
+                "chunks": n_chunks,
+                "container": True,
+            }
+    finally:
+        if own_session:
+            session.close()
+
+
+def decompress_file(
+    src: PathOrFile,
+    dst: PathOrFile,
+    *,
+    n_workers: Optional[int] = None,
+    window: Optional[int] = None,
+    session: Optional[DecompressorSession] = None,
+) -> dict:
+    """Universal streaming decode: any frame/container -> raw content bytes.
+
+    Container chunks decode behind the session window and append to ``dst``
+    in order — peak memory is ~window × chunk size, not the output size.  The
+    written bytes are each regenerated stream's ``content_bytes()`` (for data
+    compressed by ``compress_file`` / the CLI, exactly the original file).
+    Returns ``{"bytes_in", "bytes_out", "chunks"}``.
+    """
+    own_session = session is None
+    if session is None:
+        session = DecompressorSession(n_workers=n_workers, window=window)
+    try:
+        bytes_in = bytes_out = chunks = 0
+        with _open(src, "rb") as fin, _open(dst, "wb") as fout:
+            counted = _CountingReader(fin)
+            for s in session.iter_frames(counted):
+                payload = s.content_bytes()
+                fout.write(payload)
+                bytes_out += len(payload)
+                chunks += 1
+            bytes_in = counted.n
+        return {"bytes_in": bytes_in, "bytes_out": bytes_out, "chunks": chunks}
+    finally:
+        if own_session:
+            session.close()
+
+
+class _CountingReader:
+    def __init__(self, f: BinaryIO):
+        self._f = f
+        self.n = 0
+
+    def read(self, n: int = -1) -> bytes:
+        b = self._f.read(n)
+        self.n += len(b)
+        return b

@@ -40,12 +40,23 @@ Each chunk is a self-describing frame in its own right (chunks may even have
 been produced by different execution backends); the universal decoder decodes
 every chunk and concatenates the regenerated streams.  Nesting containers is
 rejected — the record is one level deep by construction.
+
+Incremental framing (streaming sessions)
+----------------------------------------
+``ContainerWriter`` emits the same record one chunk at a time into any binary
+sink — header first, each chunk frame as it completes, running CRC — so a
+compression session never holds the whole container in memory.  With the chunk
+count known up front the output is byte-identical to ``write_container``.
+``iter_container_frames`` is the reading twin: it yields chunk frames from a
+file-like object with memory bounded by one chunk, failing closed
+(``FrameError``) on truncation, bad varints, nested containers, or a trailing
+CRC mismatch.
 """
 from __future__ import annotations
 
 import struct as _struct
 import zlib
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -60,6 +71,9 @@ __all__ = [
     "write_container",
     "read_container",
     "is_container",
+    "ContainerWriter",
+    "iter_container_frames",
+    "read_stream_varint",
     "write_varint",
     "read_varint",
     "FrameError",
@@ -95,6 +109,24 @@ def read_varint(buf: bytes, pos: int) -> Tuple[int, int]:
         result |= (b & 0x7F) << shift
         if not (b & 0x80):
             return result, pos
+        shift += 7
+        if shift > 63:
+            raise FrameError("varint overflow")
+
+
+def read_stream_varint(reader) -> Tuple[int, bytes]:
+    """Read one varint from a file-like object -> (value, raw bytes consumed)."""
+    result = 0
+    shift = 0
+    raw = bytearray()
+    while True:
+        b = reader.read(1)
+        if not b:
+            raise FrameError("truncated varint")
+        raw += b
+        result |= (b[0] & 0x7F) << shift
+        if not (b[0] & 0x80):
+            return result, bytes(raw)
         shift += 7
         if shift > 63:
             raise FrameError("varint overflow")
@@ -204,26 +236,187 @@ def is_container(blob: bytes) -> bool:
     return bytes(blob[:4]) == CONTAINER_MAGIC
 
 
-def write_container(version: int, chunk_frames: Sequence[bytes]) -> bytes:
-    """Wrap independently compressed chunk frames into one container record."""
-    from .versioning import CONTAINER_MIN_VERSION
+class ContainerWriter:
+    """Incremental container emitter: header, then one chunk frame at a time.
 
-    if version < CONTAINER_MIN_VERSION:
-        raise ValueError(
-            f"multi-chunk container requires format version"
-            f" >= {CONTAINER_MIN_VERSION}, got {version}"
-        )
-    out = bytearray()
-    out += CONTAINER_MAGIC
-    out.append(version & 0xFF)
-    write_varint(out, len(chunk_frames))
-    for frame in chunk_frames:
+    A running CRC replaces the full-container buffer, so peak memory is one
+    chunk frame regardless of container size.  Two modes:
+
+      * ``n_chunks`` given — the chunk-count varint is emitted with the header
+        and the output is **byte-identical** to ``write_container`` for the
+        same chunks; any binary sink works.
+      * ``n_chunks=None`` — the count is unknown until :meth:`close`.  The
+        sink must then be seekable *and* readable: a fixed-width (5-byte,
+        LEB128-padded) count placeholder is reserved and backpatched, and the
+        trailing CRC is computed by re-reading the body in blocks.  The padded
+        varint decodes identically but the bytes differ from
+        ``write_container`` at exactly the count field.
+
+    Use as a context manager, or call :meth:`close` explicitly; ``close``
+    verifies the promised chunk count and appends the CRC trailer.
+    """
+
+    _PAD_VARINT_LEN = 5  # 5 x 7 = 35 bits of count — far above the 1e6 cap
+
+    def __init__(self, out, version: int, n_chunks: Optional[int] = None):
+        from .versioning import CONTAINER_MIN_VERSION
+
+        if version < CONTAINER_MIN_VERSION:
+            raise ValueError(
+                f"multi-chunk container requires format version"
+                f" >= {CONTAINER_MIN_VERSION}, got {version}"
+            )
+        self._out = out
+        self._expect = n_chunks
+        self._written = 0
+        self._closed = False
+        self.bytes_written = 0
+        header = bytearray()
+        header += CONTAINER_MAGIC
+        header.append(version & 0xFF)
+        if n_chunks is not None:
+            if n_chunks < 1:
+                raise ValueError("container needs at least one chunk")
+            write_varint(header, n_chunks)
+            self._count_pos = None
+        else:
+            if not (out.seekable() and out.readable()):
+                raise ValueError(
+                    "ContainerWriter with unknown n_chunks needs a seekable,"
+                    " readable sink (pass n_chunks for pure streaming)"
+                )
+            self._count_pos = out.tell() + len(header)
+            header += self._pad_varint(0)
+        self._crc = zlib.crc32(bytes(header))
+        out.write(bytes(header))
+        self.bytes_written += len(header)
+
+    @classmethod
+    def _pad_varint(cls, value: int) -> bytes:
+        raw = bytearray()
+        for _ in range(cls._PAD_VARINT_LEN - 1):
+            raw.append((value & 0x7F) | 0x80)
+            value >>= 7
+        if value > 0x7F:
+            raise ValueError("chunk count overflows the padded varint")
+        raw.append(value)
+        return bytes(raw)
+
+    def write_chunk(self, frame: bytes) -> None:
+        if self._closed:
+            raise ValueError("ContainerWriter already closed")
         if bytes(frame[:4]) != MAGIC:
             raise ValueError("container chunks must be single frames (no nesting)")
-        write_varint(out, len(frame))
-        out += frame
-    out += _struct.pack("<I", zlib.crc32(bytes(out)) & 0xFFFFFFFF)
-    return bytes(out)
+        if self._expect is not None and self._written >= self._expect:
+            raise ValueError(f"more than the promised {self._expect} chunks")
+        piece = bytearray()
+        write_varint(piece, len(frame))
+        piece += frame
+        self._crc = zlib.crc32(bytes(piece), self._crc)
+        self._out.write(bytes(piece))
+        self.bytes_written += len(piece)
+        self._written += 1
+
+    def close(self) -> int:
+        """Finish the record (count check + CRC trailer) -> total bytes."""
+        if self._closed:
+            return self.bytes_written
+        self._closed = True
+        if self._expect is not None and self._written != self._expect:
+            raise ValueError(
+                f"promised {self._expect} chunks, wrote {self._written}"
+            )
+        if self._written == 0:
+            raise ValueError("container needs at least one chunk")
+        if self._count_pos is not None:
+            # backpatch the count, then recompute the CRC over the final body
+            end = self._out.tell()
+            self._out.seek(self._count_pos)
+            self._out.write(self._pad_varint(self._written))
+            self._out.seek(end - self.bytes_written)
+            crc = 0
+            remaining = self.bytes_written
+            while remaining:
+                block = self._out.read(min(remaining, 1 << 20))
+                if not block:
+                    raise IOError("container body unreadable during CRC fixup")
+                crc = zlib.crc32(block, crc)
+                remaining -= len(block)
+            self._crc = crc
+        self._out.write(_struct.pack("<I", self._crc & 0xFFFFFFFF))
+        self.bytes_written += 4
+        return self.bytes_written
+
+    def __enter__(self) -> "ContainerWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.close()
+        else:  # don't mask the original error with count-mismatch noise
+            self._closed = True
+
+
+def write_container(version: int, chunk_frames: Sequence[bytes]) -> bytes:
+    """Wrap independently compressed chunk frames into one container record."""
+    import io
+
+    buf = io.BytesIO()
+    with ContainerWriter(buf, version, n_chunks=len(chunk_frames)) as w:
+        for frame in chunk_frames:
+            w.write_chunk(frame)
+    return buf.getvalue()
+
+
+def iter_container_frames(reader) -> Iterator[bytes]:
+    """Yield chunk frames from a file-like container with bounded memory.
+
+    Peak memory is one chunk frame (plus the fixed header), never the whole
+    container.  Fails closed with :class:`FrameError` on bad magic, bad or
+    truncated varints, mid-chunk EOF, nested containers, trailing garbage, and
+    container-CRC mismatch.  The trailing CRC can only be verified once every
+    chunk has been read, so earlier chunks are yielded before it is checked —
+    each chunk frame carries its own CRC, which the universal decoder verifies
+    per chunk, and the iterator still raises before completing, so a consumer
+    that drains it never mistakes a corrupt container for a complete one.
+    """
+    from .versioning import CONTAINER_MIN_VERSION
+
+    head = reader.read(5)
+    if len(head) < 5 or head[:4] != CONTAINER_MAGIC:
+        raise FrameError("bad container magic")
+    crc = zlib.crc32(head)
+    version = head[4]
+    if version < CONTAINER_MIN_VERSION:
+        raise FrameError(f"container frame predates format v{CONTAINER_MIN_VERSION}")
+    n_chunks, raw = read_stream_varint(reader)
+    crc = zlib.crc32(raw, crc)
+    if n_chunks > 1_000_000:
+        raise FrameError("implausible chunk count")
+    if n_chunks == 0:
+        raise FrameError("empty container")
+    for _ in range(n_chunks):
+        flen, raw = read_stream_varint(reader)
+        crc = zlib.crc32(raw, crc)
+        if flen > (1 << 48):
+            raise FrameError("implausible chunk length")
+        chunk = reader.read(flen)
+        if len(chunk) != flen:
+            raise FrameError("truncated container chunk")
+        crc = zlib.crc32(chunk, crc)
+        if chunk[:4] == CONTAINER_MAGIC:
+            raise FrameError("nested container rejected")
+        if chunk[:4] != MAGIC:
+            raise FrameError("container chunk is not a frame")
+        yield bytes(chunk)
+    trailer = reader.read(4)
+    if len(trailer) != 4:
+        raise FrameError("truncated container trailer")
+    (crc_expect,) = _struct.unpack("<I", trailer)
+    if (crc & 0xFFFFFFFF) != crc_expect:
+        raise FrameError("container checksum mismatch")
+    if reader.read(1):
+        raise FrameError("trailing garbage in container")
 
 
 def read_container(blob: bytes):

@@ -36,10 +36,57 @@ from repro.codecs import (
     float64_profile,
     numeric_profile,
 )
-from repro.core import Compressor, decompress, numeric
+from repro.core import CompressorSession, DecompressorSession, numeric
 from repro.core.graph import Plan, pipeline as plan_pipeline
 
 MANIFEST = "manifest.json"
+
+# ------------------------------------------------- long-lived codec sessions
+# One CompressorSession per distinct leaf plan and one shared
+# DecompressorSession per worker process: thousands of checkpoint leaves reuse
+# the same resolve cache, coder-table scratch, and thread pool instead of
+# paying session construction per leaf.  Sessions are thread-safe, so the
+# async-save background thread shares them with the restore path.
+_SESSION_LOCK = threading.Lock()
+_ENC_SESSIONS: Dict[Plan, CompressorSession] = {}
+_DEC_SESSION: list = []  # 0 or 1 DecompressorSession
+
+
+def _enc_session(plan: Plan) -> CompressorSession:
+    with _SESSION_LOCK:
+        sess = _ENC_SESSIONS.get(plan)
+        if sess is None:
+            sess = _ENC_SESSIONS[plan] = CompressorSession(plan)
+        return sess
+
+
+def _dec_session() -> DecompressorSession:
+    with _SESSION_LOCK:
+        if not _DEC_SESSION:
+            _DEC_SESSION.append(DecompressorSession())
+        return _DEC_SESSION[0]
+
+
+def codec_session_stats() -> dict:
+    """Aggregate encode/decode session counters (for serving diagnostics)."""
+    with _SESSION_LOCK:
+        enc = [s.stats for s in _ENC_SESSIONS.values()]
+        dec = _DEC_SESSION[0].stats if _DEC_SESSION else {}
+    agg = {"enc_plans": len(enc)}
+    for k in ("calls", "bytes_in", "bytes_out"):
+        agg[f"enc_{k}"] = sum(s[k] for s in enc)
+        agg[f"dec_{k}"] = int(dec.get(k, 0))
+    return agg
+
+
+def close_codec_sessions() -> None:
+    """Release session thread pools (tests / worker shutdown)."""
+    with _SESSION_LOCK:
+        sessions = list(_ENC_SESSIONS.values()) + list(_DEC_SESSION)
+        _ENC_SESSIONS.clear()
+        _DEC_SESSION.clear()
+    for s in sessions:
+        s.close()
 
 
 def _leaf_key(path) -> str:
@@ -75,11 +122,11 @@ def _to_numeric_stream(arr: np.ndarray):
 
 def compress_leaf(arr: np.ndarray) -> bytes:
     plan = _plan_for_dtype(arr.dtype)
-    return Compressor(plan).compress(_to_numeric_stream(arr))
+    return _enc_session(plan).compress(_to_numeric_stream(arr))
 
 
 def decompress_leaf(frame: bytes, shape, dtype) -> np.ndarray:
-    (stream,) = decompress(frame)
+    (stream,) = _dec_session().decompress(frame)
     raw = stream.content_bytes()
     if str(dtype) == "bfloat16":
         import ml_dtypes

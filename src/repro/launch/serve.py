@@ -8,6 +8,11 @@ Loads the latest checkpoint from --ckpt-dir if present (OpenZL frames),
 otherwise serves random-init weights.  Reports prefill and decode
 throughput.  SWA archs (h2o-danube) serve with a ring-buffer cache of
 window size — constant memory however long the generation runs.
+
+Checkpoint leaves decode through the per-worker long-lived codec sessions in
+``repro.distributed.checkpoint`` (one DecompressorSession per process): the
+universal-decoder thread pool and coder-table scratch are built once and
+reused across every leaf and every reload, not per frame.
 """
 from __future__ import annotations
 
@@ -42,12 +47,21 @@ def main(argv=None) -> int:
 
     params = transformer.init_params(jax.random.PRNGKey(0), cfg)
     if args.ckpt_dir:
+        from repro.distributed.checkpoint import codec_session_stats
+
         mgr = CheckpointManager(args.ckpt_dir)
         restored = mgr.restore_or_none({"params": params})
         if restored is not None:
             step, tree, _ = restored
             params = jax.tree.map(jnp.asarray, tree["params"])
+            cs = codec_session_stats()
             print(f"[serve] loaded checkpoint step {step}")
+            print(
+                f"[serve] ozl session: {cs['dec_calls']} leaf frames,"
+                f" {cs['dec_bytes_in']/1e6:.1f} MB compressed ->"
+                f" {cs['dec_bytes_out']/1e6:.1f} MB (pool+tables reused"
+                " across leaves)"
+            )
 
     B, P, G = args.batch, args.prompt_len, args.gen
     max_len = P + G

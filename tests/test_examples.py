@@ -36,6 +36,19 @@ def test_device_codec():
     assert "exponent entropy" in out
 
 
+def test_stream_file(tmp_path):
+    # small corpus via argv so the example stays fast under pytest
+    src = tmp_path / "corpus.log"
+    src.write_bytes(b"level=INFO svc=ingest msg=flushed in 42us\n" * 20000)
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(
+        [sys.executable, str(REPO / "examples" / "stream_file.py"), str(src)],
+        capture_output=True, text=True, timeout=240, env=env, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "bit-exact" in out.stdout
+
+
 def test_serve_lm_smoke():
     env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
     out = subprocess.run(

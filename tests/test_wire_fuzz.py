@@ -142,3 +142,113 @@ def test_nested_container_rejected():
     blob = bytes(body) + struct.pack("<I", zlib.crc32(bytes(body)) & 0xFFFFFFFF)
     with pytest.raises(CONTROLLED):
         decompress(blob)
+
+
+# ------------------------------------------------- streaming container input
+def _drain(blob: bytes):
+    """Fully consume the streaming iterator over an in-memory container."""
+    import io
+    from repro.core.wire import iter_container_frames
+
+    return list(iter_container_frames(io.BytesIO(blob)))
+
+
+def test_stream_iter_matches_read_container():
+    from repro.core import wire
+
+    blob = _a_container()
+    _version, frames = wire.read_container(blob)
+    assert _drain(blob) == frames
+
+
+def test_stream_truncation_every_prefix_rejected():
+    """EOF at any point — header, count varint, length varint, mid-chunk,
+    trailer — must raise FrameError, never hang or return cleanly."""
+    blob = _a_container()
+    for cut in range(len(blob)):  # every proper prefix, incl. len-1
+        with pytest.raises(CONTROLLED):
+            _drain(blob[:cut])
+
+
+def test_stream_bad_chunk_length_varint():
+    import struct
+    import zlib
+    from repro.core.wire import write_varint
+
+    # container advertising 1 chunk whose length varint overflows 64 bits
+    body = bytearray(b"OZLC\x04")
+    write_varint(body, 1)
+    body += b"\xff" * 10  # varint with shift > 63
+    blob = bytes(body) + struct.pack("<I", zlib.crc32(bytes(body)) & 0xFFFFFFFF)
+    with pytest.raises(CONTROLLED):
+        _drain(blob)
+
+    # ... and one whose length claims more bytes than exist (mid-chunk EOF)
+    body = bytearray(b"OZLC\x04")
+    write_varint(body, 1)
+    write_varint(body, 1 << 30)
+    body += b"OZLJ\x04 some bytes that end early"
+    blob = bytes(body) + struct.pack("<I", zlib.crc32(bytes(body)) & 0xFFFFFFFF)
+    with pytest.raises(CONTROLLED):
+        _drain(blob)
+
+
+def test_stream_crc_mismatch_raises_after_chunks():
+    """Flipping a bit in the trailer (or body) must surface as FrameError by
+    the time the iterator is drained — a corrupt container never completes
+    silently."""
+    blob = bytearray(_a_container())
+    blob[-1] ^= 0x01  # trailer CRC byte
+    with pytest.raises(CONTROLLED):
+        _drain(bytes(blob))
+
+
+def test_stream_trailing_garbage_rejected():
+    with pytest.raises(CONTROLLED):
+        _drain(_a_container() + b"x")
+
+
+@given(st.binary(min_size=0, max_size=256))
+@settings(max_examples=150, deadline=None)
+def test_stream_random_bytes_fail_closed(blob):
+    with pytest.raises(CONTROLLED):
+        _drain(blob)
+
+
+def test_stream_random_mutations_fail_closed_or_roundtrip():
+    """Single-byte corruption anywhere in the container: the streaming
+    iterator + universal decoder either raise a controlled error or the data
+    roundtrips bit-exactly (the flip was semantically inert)."""
+    from repro.core.engine import DecompressorSession
+
+    base = _a_container()
+    want = np.arange(5000, dtype=np.uint32).tobytes()
+    with DecompressorSession() as sess:
+        for pos in range(0, len(base), max(len(base) // 63, 1)):
+            import io
+
+            blob = bytearray(base)
+            blob[pos] ^= 0xFF
+            try:
+                parts = list(sess.iter_frames(io.BytesIO(bytes(blob))))
+                got = b"".join(p.content_bytes() for p in parts)
+            except CONTROLLED:
+                continue
+            assert got == want
+
+
+def test_container_writer_count_mismatch_rejected():
+    import io
+    from repro.core import wire
+
+    blob = _a_container()
+    _v, frames = wire.read_container(blob)
+    w = wire.ContainerWriter(io.BytesIO(), 4, n_chunks=len(frames) + 1)
+    for f in frames:
+        w.write_chunk(f)
+    with pytest.raises(CONTROLLED):
+        w.close()
+    w2 = wire.ContainerWriter(io.BytesIO(), 4, n_chunks=1)
+    w2.write_chunk(frames[0])
+    with pytest.raises(CONTROLLED):
+        w2.write_chunk(frames[1])
