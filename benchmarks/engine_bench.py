@@ -26,6 +26,13 @@ reported as a delta over a no-op import baseline.  The streaming rows should
 show peak memory ~ window × chunk (not input size) at one-shot-or-better
 warm-session throughput.  With ``--json`` the results land in
 ``results/BENCH_stream.json``.
+
+``--train`` benchmarks the parallel trainer (``repro train``) on a synthetic
+CSV corpus (``REPRO_TRAIN_BENCH_KIB``, default 512): one full training run at
+``workers=1`` and one at ``workers=4``, asserting the emitted Pareto plans
+are byte-identical (the trainer's determinism contract) and recording the
+wall-clock speedup.  With ``--json`` the results land in
+``results/BENCH_train.json``.
 """
 from __future__ import annotations
 
@@ -335,6 +342,83 @@ def run_stream(emit_json: bool = False, print_rows: bool = True):
     return rows, results
 
 
+# ------------------------------------------------------- parallel trainer
+TRAIN_KIB = int(os.environ.get("REPRO_TRAIN_BENCH_KIB", "1024"))
+TRAIN_POP = int(os.environ.get("REPRO_TRAIN_BENCH_POP", "16"))
+TRAIN_GENS = int(os.environ.get("REPRO_TRAIN_BENCH_GENS", "4"))
+
+
+def synth_train_numeric(nbytes: int, seed: int = 0) -> bytes:
+    """A smooth, bounded u32 measurement series (era5-like): the workload
+    shape where candidate evaluation is dominated by GIL-releasing backend
+    codecs (lzma/zlib/bz2/numpy), i.e. where the trainer's thread pool can
+    actually scale."""
+    rng = np.random.default_rng(seed)
+    n = nbytes // 4
+    walk = np.cumsum(rng.integers(-40, 44, n, dtype=np.int64))
+    return (np.abs(walk) % (1 << 22)).astype(np.uint32).tobytes()
+
+
+def run_train(emit_json: bool = False, print_rows: bool = True):
+    """Train at workers=1 vs workers=4: byte-identity + wall-clock speedup."""
+    from repro.core.message import serial
+    from repro.core.serialize import serialize_plan
+    from repro.training import NumericFrontend, train
+
+    corpus = synth_train_numeric(TRAIN_KIB << 10)
+    rows = []
+    results = {
+        "corpus_bytes": len(corpus),
+        "pop_size": TRAIN_POP,
+        "generations": TRAIN_GENS,
+        "seed": 0,
+    }
+    plans_by_workers = {}
+    for workers in (1, 2, 4):
+        resolve_cache_clear()  # no cross-run warm-up: every run starts cold
+        t0 = time.perf_counter()
+        tc = train(
+            [[serial(corpus)]],
+            NumericFrontend(width=4),
+            pop_size=TRAIN_POP,
+            generations=TRAIN_GENS,
+            seed=0,
+            workers=workers,
+        )
+        dt = time.perf_counter() - t0
+        plans_by_workers[workers] = tuple(
+            serialize_plan(p) for p, _, _ in tc.pareto_plans()
+        )
+        results[f"workers_{workers}"] = {
+            "seconds": round(dt, 3),
+            "evaluations": int(tc.stats["evaluations"]),
+            "eval_wall_seconds": round(tc.stats["eval_wall_seconds"], 3),
+            "pareto_points": len(tc.points),
+        }
+        rows.append(
+            f"train/workers_{workers},{dt*1e6:.1f},"
+            f"evals={int(tc.stats['evaluations'])};points={len(tc.points)}"
+        )
+    if any(p != plans_by_workers[1] for p in plans_by_workers.values()):
+        raise AssertionError("trainer determinism violated across worker counts")
+    speedup = results["workers_1"]["seconds"] / results["workers_4"]["seconds"]
+    results["plans_identical"] = True
+    results["speedup"] = round(speedup, 2)
+    rows.append(f"train/speedup,{0:.1f},speedup={speedup:.2f};identical=1")
+    if emit_json:
+        payload = {
+            "schema": "BENCH_train/v1",
+            "host_cpus": os.cpu_count(),
+            "rows": results,
+        }
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        (RESULTS_DIR / "BENCH_train.json").write_text(json.dumps(payload, indent=2))
+    if print_rows:
+        for r in rows:
+            print(r)
+    return rows, results
+
+
 def _big_input():
     rng = np.random.default_rng(0)
     n = TOTAL_BYTES // 4
@@ -432,6 +516,14 @@ if __name__ == "__main__":
     ap.add_argument(
         "--stream-only", action="store_true", help="skip the engine section"
     )
+    ap.add_argument(
+        "--train", action="store_true",
+        help="run the parallel-trainer section (results/BENCH_train.json"
+        " with --json)",
+    )
+    ap.add_argument(
+        "--train-only", action="store_true", help="skip the engine section"
+    )
     ap.add_argument("--stream-worker", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--stream-src", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--stream-dst", default=None, help=argparse.SUPPRESS)
@@ -447,10 +539,11 @@ if __name__ == "__main__":
         )
         raise SystemExit(0)
     print("name,us_per_call,derived")
-    if not (args.codecs_only or args.stream_only):
+    if not (args.codecs_only or args.stream_only or args.train_only):
         run()
     if args.codecs or args.codecs_only or (
-        args.json and not (args.stream or args.stream_only)
+        args.json
+        and not (args.stream or args.stream_only or args.train or args.train_only)
     ):
         sizes = tuple(
             int(x) if float(x) == int(float(x)) else float(x)
@@ -459,3 +552,5 @@ if __name__ == "__main__":
         run_codecs(sizes_mib=sizes, emit_json=args.json)
     if args.stream or args.stream_only:
         run_stream(emit_json=args.json)
+    if args.train or args.train_only:
+        run_train(emit_json=args.json)

@@ -22,6 +22,7 @@ CACHE = Path(__file__).resolve().parents[1] / "results" / "trained"
 SMALL = os.environ.get("BENCH_SMALL", "1") == "1"
 POP = int(os.environ.get("BENCH_POP", "12"))
 GENS = int(os.environ.get("BENCH_GENS", "4"))
+WORKERS = int(os.environ.get("BENCH_TRAIN_WORKERS", "0")) or None  # None=all CPUs
 
 
 def _sample_streams(streams: List[Stream], frac: float) -> List[Stream]:
@@ -67,7 +68,9 @@ def get_trained(force: bool = False) -> Dict[str, dict]:
         else:
             sample = _sample_streams(streams, train_frac)
             # csv frontends need raw bytes; sampling serial streams is fine
-            tc = train([sample], frontend, pop_size=POP, generations=GENS)
+            tc = train(
+                [sample], frontend, pop_size=POP, generations=GENS, workers=WORKERS
+            )
             plans = [(p, sz, tm) for p, sz, tm in tc.pareto_plans()]
             meta = {
                 "n_points": len(plans),

@@ -1,10 +1,16 @@
 #!/usr/bin/env python
 """End-to-end compressor training (the paper's §VI-C zli-train workflow):
-parse -> cluster -> NSGA-II backend search -> Pareto tradeoff points ->
-serialized deployable compressors.
+parse -> cluster -> parallel NSGA-II backend search -> Pareto tradeoff
+points -> serialized deployable compressors.
+
+Candidate evaluation fans out over a session-backed worker pool
+(``workers=``); training is deterministic — the same seed yields
+byte-identical plans for any worker count.  The shell equivalent is
+``python -m repro train SAMPLES... --out plan.ozp``.
 
     PYTHONPATH=src python examples/train_compressor.py
 """
+import os
 import sys
 import time
 from pathlib import Path
@@ -29,11 +35,15 @@ tc = train(
     MultiStreamFrontend(k=len(train_cols)),
     pop_size=12,
     generations=4,
+    seed=0,
+    workers=os.cpu_count(),
     verbose=True,
 )
 print(f"\ntraining took {time.time()-t0:.1f}s; stats: "
       f"{tc.stats['train_speed_mib_min']:.2f} MiB/min, "
-      f"{int(tc.stats['n_clusters'])} clusters from {int(tc.stats['n_streams'])} streams")
+      f"{int(tc.stats['n_clusters'])} clusters from {int(tc.stats['n_streams'])} streams, "
+      f"{int(tc.stats['evaluations'])} candidate evals on {int(tc.stats['workers'])} workers "
+      f"({tc.stats['eval_wall_seconds']:.1f}s encode time)")
 
 print("\nPareto tradeoff points (size estimate vs encode-time estimate):")
 for plan, sz, tm in tc.pareto_plans():

@@ -10,6 +10,14 @@ configuration.
     python -m repro inspect   corpus.ozl
     python -m repro decompress corpus.ozl -o corpus.out
     python -m repro profiles
+    python -m repro train     samples/*.bin --out plan.ozp
+
+``train`` is the ``zli-train`` analogue (paper §VI-C): it sniffs the sample
+format (``--frontend auto``: csv / struct / numeric / raw), runs the
+parallel NSGA-II trainer over a persistent session-backed worker pool, and
+writes deployable ``.ozp`` plans that ``compress --plan`` consumes directly.
+Training is deterministic: the same ``--seed`` yields byte-identical plans
+for any ``--workers`` value.
 
 Compression streams through a :class:`~repro.core.engine.CompressorSession`
 (bounded in-flight window; the file is never fully loaded), so arbitrarily
@@ -214,6 +222,140 @@ def _cmd_inspect(args) -> int:
     return 0
 
 
+# ------------------------------------------------------------------ training
+def _parse_frontend(spec: str, first_sample: bytes):
+    """Resolve ``--frontend``: auto-sniffing or an explicit frontend form."""
+    from repro.codecs.parse import sniff_csv
+    from repro.training import (
+        CsvFrontend,
+        Frontend,
+        NumericFrontend,
+        StructFrontend,
+        detect_frontend,
+    )
+
+    if spec == "auto":
+        return detect_frontend(first_sample)
+    if spec == "raw":
+        return Frontend()
+    if spec == "csv" or spec.startswith("csv:"):
+        parts = spec.split(":")
+        sep = parts[2] if len(parts) > 2 else ","
+        if len(parts) > 1 and parts[1]:
+            return CsvFrontend(n_cols=int(parts[1]), sep=sep)
+        sniffed = sniff_csv(first_sample, seps=(sep.encode(),))
+        if sniffed is None:
+            raise SystemExit(
+                f"--frontend csv: samples are not rectangular {sep!r}-separated"
+                f" CSV; pass csv:N to force a column count"
+            )
+        return CsvFrontend(n_cols=sniffed[0], sep=sniffed[1])
+    if spec.startswith("struct:"):
+        widths = tuple(int(w) for w in spec[len("struct:") :].split(",") if w)
+        if not widths or any(w < 1 for w in widths):
+            raise SystemExit(f"--frontend {spec!r}: field widths must be >= 1")
+        return StructFrontend(widths=widths)
+    if spec == "numeric" or spec.startswith("numeric:"):
+        width = int(spec.split(":")[1]) if ":" in spec else 4
+        if width not in (1, 2, 4, 8):
+            raise SystemExit(f"--frontend {spec!r}: width must be 1/2/4/8")
+        return NumericFrontend(width=width)
+    raise SystemExit(
+        f"unknown frontend {spec!r}; known: auto, raw, csv[:N[:sep]],"
+        f" struct:W1,W2,.., numeric[:W]"
+    )
+
+
+def _trim_sample(frontend, blob: bytes) -> bytes:
+    """Cut a sample so the frontend parses it whole (line/record aligned)."""
+    name = getattr(frontend, "name", "raw")
+    if name == "csv":
+        cut = blob.rfind(b"\n")
+        return blob[: cut + 1] if cut >= 0 else blob
+    if name == "numeric":
+        return blob[: len(blob) - len(blob) % frontend.width]
+    if name == "struct":
+        rec = sum(frontend.widths) or 1
+        return blob[: len(blob) - len(blob) % rec]
+    return blob
+
+
+def _frontend_desc(frontend) -> str:
+    name = getattr(frontend, "name", "raw")
+    if name == "csv":
+        return f"csv ({frontend.n_cols} cols, sep {frontend.sep!r})"
+    if name == "numeric":
+        return f"numeric (width {frontend.width})"
+    if name == "struct":
+        return f"struct (record {sum(frontend.widths)}B, {len(frontend.widths)} fields)"
+    return name
+
+
+def _cmd_train(args) -> int:
+    from repro.core.message import serial
+    from repro.training import train
+
+    paths = [Path(p) for p in args.samples]
+    limit = _parse_size(args.sample_bytes)
+    blobs = [p.read_bytes()[:limit] for p in paths]
+    if not blobs or not any(blobs):
+        raise SystemExit("train: no sample bytes")
+    frontend = _parse_frontend(args.frontend, blobs[0])
+    blobs = [_trim_sample(frontend, b) for b in blobs]
+    blobs = [b for b in blobs if b]
+    if not blobs:
+        raise SystemExit(
+            "train: no usable sample bytes after frontend alignment"
+            f" ({_frontend_desc(frontend)})"
+        )
+    total = sum(len(b) for b in blobs)
+    print(
+        f"training on {len(blobs)} sample(s), {total} bytes,"
+        f" frontend: {_frontend_desc(frontend)}"
+    )
+    tc = train(
+        [[serial(b)] for b in blobs],
+        frontend,
+        pop_size=args.pop,
+        generations=args.gens,
+        n_points=args.points,
+        seed=args.seed,
+        workers=args.workers,
+        verbose=args.verbose,
+    )
+    st = tc.stats
+    print(
+        f"trained in {st['train_seconds']:.1f}s: {st['evaluations']:.0f} candidate"
+        f" evaluations on {st['workers']:.0f} worker(s)"
+        f" ({st['eval_wall_seconds']:.1f}s candidate encode time),"
+        f" {st['n_streams']:.0f} stream(s) -> {st['n_clusters']:.0f} cluster(s)"
+    )
+    plans = tc.pareto_plans()  # size-ascending (best ratio first)
+    print("pareto tradeoff points (training-sample size vs encode-cost estimate):")
+    for i, (plan, sz, tm) in enumerate(plans):
+        print(f"  [{i}] {sz:>10.0f} B  {tm * 1e3:>8.2f} ms  {len(plan.nodes)} codec node(s)")
+
+    out = Path(args.out) if args.out else paths[0].with_suffix(".ozp")
+    emitted = []
+    for i, (plan, _sz, _tm) in enumerate(plans):
+        if i == 0:
+            path = out
+        elif args.all_points:
+            path = out.with_name(f"{out.stem}.p{i}{out.suffix or '.ozp'}")
+        else:
+            continue
+        comp = Compressor(plan, level=args.level if args.level is not None else 5)
+        if not all(comp.roundtrip_check(b) for b in blobs):
+            raise SystemExit(f"train: point {i} failed the losslessness check")
+        path.write_bytes(comp.serialize())
+        emitted.append((i, path))
+    for i, path in emitted:
+        tag = "best-ratio point" if i == 0 else f"tradeoff point {i}"
+        print(f"wrote {path} ({path.stat().st_size} bytes, {tag}; verified lossless)")
+    print(f"deploy with: python -m repro compress FILE --plan {emitted[0][1]}")
+    return 0
+
+
 def _cmd_profiles(_args) -> int:
     for name, (_fn, doc) in sorted(named_profiles().items()):
         print(f"{name:<12} {doc}")
@@ -266,6 +408,32 @@ def build_parser() -> argparse.ArgumentParser:
     i.add_argument("--chunks", type=int, default=1,
                    help="container chunks to print graphs for (default 1)")
     i.set_defaults(fn=_cmd_inspect)
+
+    t = sub.add_parser(
+        "train", help="train a compressor from sample files (paper §VI-C)"
+    )
+    t.add_argument("samples", nargs="+", help="sample files (one input each)")
+    t.add_argument("--out", default=None,
+                   help="output plan path (default: FIRST_SAMPLE.ozp)")
+    t.add_argument("--frontend", default="auto",
+                   help="auto (sniff csv/struct/numeric/raw), raw,"
+                   " csv[:N[:sep]], struct:W1,W2,.., numeric[:W]")
+    t.add_argument("--pop", type=int, default=16, help="NSGA-II population")
+    t.add_argument("--gens", type=int, default=6, help="NSGA-II generations")
+    t.add_argument("--points", type=int, default=8,
+                   help="max Pareto tradeoff points kept")
+    t.add_argument("--seed", type=int, default=0,
+                   help="training seed (same seed => byte-identical plans)")
+    t.add_argument("--workers", type=int, default=None,
+                   help="evaluation threads (default: all CPUs)")
+    t.add_argument("--level", type=int, default=None,
+                   help="effort 1-9 recorded in the emitted plan")
+    t.add_argument("--sample-bytes", default="4MiB",
+                   help="per-file training sample cap (default 4MiB)")
+    t.add_argument("--all-points", action="store_true",
+                   help="also write every tradeoff point as OUT.pN.ozp")
+    t.add_argument("-v", "--verbose", action="store_true")
+    t.set_defaults(fn=_cmd_train)
 
     p = sub.add_parser("profiles", help="list named profiles")
     p.set_defaults(fn=_cmd_profiles)

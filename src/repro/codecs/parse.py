@@ -5,10 +5,17 @@
                     exception strings).  Canonical integers go numeric; any
                     string that would not round-trip exactly stays an
                     exception — losslessness beats parsing coverage.
+
+The module also hosts the *format sniffers* (``sniff_csv``,
+``sniff_numeric_width``, ``sniff_struct_width``) behind the trainer's
+``--frontend auto``: cheap, bounded-probe heuristics that decide which
+frontend codec would parse a sample byte blob.  They share this module
+because they are the detection side of the same parsing model — ``sniff_csv``
+applies exactly ``csv_split``'s rectangularity rule.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -152,3 +159,129 @@ register_codec(
         doc="ASCII ints -> (bitmap, i64 values, exceptions); lossless always",
     )
 )
+
+
+# -------------------------------------------------------------- sniffers
+SNIFF_PROBE_BYTES = 1 << 16  # all sniffing runs on a bounded prefix
+
+_PRINTABLE_MASK = np.zeros(256, dtype=bool)
+_PRINTABLE_MASK[32:127] = True
+_PRINTABLE_MASK[[9, 10, 13]] = True  # tab / newline / carriage return
+
+_NUMERIC_SNIFF_DTYPES = {2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def sniff_csv(
+    raw: bytes,
+    *,
+    seps: Tuple[bytes, ...] = (b",", b"\t", b";", b"|"),
+    max_probe: int = SNIFF_PROBE_BYTES,
+) -> Optional[Tuple[int, str]]:
+    """Detect a rectangular CSV prefix -> ``(n_cols, sep)``, else None.
+
+    The acceptance rule is ``csv_split``'s own: every probed (complete) line
+    must split into the same column count under one separator.  Of the
+    separators that pass, the one yielding the most columns wins — a file
+    whose fields contain no separator at all still parses as 1 column, so
+    at least 2 columns are required to call it CSV.
+    """
+    probe = bytes(raw[:max_probe])
+    if len(probe) < 8:
+        return None
+    arr = np.frombuffer(probe, dtype=np.uint8)
+    if float(_PRINTABLE_MASK[arr].mean()) < 0.95:
+        return None
+    cut = probe.rfind(b"\n")
+    if cut <= 0:
+        return None
+    lines = probe[:cut].split(b"\n")
+    if len(lines) < 2 or any(not ln for ln in lines):
+        return None
+    best: Optional[Tuple[int, bytes]] = None
+    for sep in seps:
+        n_cols = lines[0].count(sep) + 1
+        if n_cols < 2:
+            continue
+        if any(ln.count(sep) + 1 != n_cols for ln in lines[1:]):
+            continue
+        if best is None or n_cols > best[0]:
+            best = (n_cols, sep)
+    if best is None:
+        return None
+    return best[0], best[1].decode()
+
+
+def sniff_numeric_width(
+    raw: bytes,
+    *,
+    widths: Tuple[int, ...] = (2, 4, 8),
+    require_monotone: bool = False,
+    max_probe: int = SNIFF_PROBE_BYTES,
+) -> Optional[int]:
+    """Detect a fixed-width little-endian integer array -> element width.
+
+    Two independent signals, probed narrowest-first (a sorted w-wide array
+    read at width 2w still looks sorted — its high halves carry the order —
+    while a 2w-wide array read at w interleaves random low halves, so the
+    narrowest width that fires is the true one): *sortedness* (>= 90% of
+    adjacent deltas non-negative — index-like columns) and *bounded range*
+    (>= 95% of the values share one top byte — measurements far narrower
+    than their storage width).  ``require_monotone=True`` keeps only the
+    strong first signal; the bounded-range signal also fires on multi-field
+    records, so callers try struct detection in between.
+    """
+    n = len(raw)
+    for w in widths:
+        if n % w or n // w < 64:
+            continue
+        take = (min(n, max_probe) // w) * w
+        a = np.frombuffer(raw[:take], dtype=_NUMERIC_SNIFF_DTYPES[w])
+        mono = float(np.mean(a[1:] >= a[:-1]))
+        if mono >= 0.9:
+            return w
+        if require_monotone:
+            continue
+        top = np.frombuffer(raw[:take], dtype=np.uint8).reshape(-1, w)[:, -1]
+        counts = np.bincount(top, minlength=256)
+        if (
+            float(counts.max()) / top.size >= 0.95
+            or int((counts > 0).sum()) <= 2
+        ):
+            return w
+    return None
+
+
+def sniff_struct_width(
+    raw: bytes,
+    *,
+    min_width: int = 2,
+    max_width: int = 16,
+    max_probe: int = SNIFF_PROBE_BYTES,
+) -> Optional[int]:
+    """Detect a fixed-size record layout -> record width, else None.
+
+    Signal: byte equality at lag ``w`` (same field offset, adjacent records)
+    far above the lag-1 baseline — fixed-width records repeat their
+    near-constant field bytes with period exactly ``w``.  The smallest width
+    within 95% of the best score wins, so a ``2w`` multiple never shadows
+    the true record size.
+    """
+    n = len(raw)
+    x = np.frombuffer(raw[:max_probe], dtype=np.uint8).astype(np.int16)
+    if x.size < 64:
+        return None
+    base = float(np.mean(x[1:] == x[:-1]))
+    scores = {}
+    for w in range(min_width, max_width + 1):
+        if n % w or n // w < 16 or x.size <= 2 * w:
+            continue
+        scores[w] = float(np.mean(x[w:] == x[:-w]))
+    if not scores:
+        return None
+    best_w = min(scores, key=lambda w: (-scores[w], w))
+    if scores[best_w] < max(0.35, 1.5 * base):
+        return None
+    for w in sorted(scores):
+        if scores[w] >= 0.95 * scores[best_w]:
+            return w
+    return best_w

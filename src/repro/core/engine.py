@@ -43,6 +43,7 @@ from __future__ import annotations
 import io
 import os
 import threading
+import time
 from collections import OrderedDict, deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -489,11 +490,23 @@ class _Executor:
     Maintains its own runtime edge numbering (``emap``: resolved edge id ->
     runtime edge id) because a fused step may lower to two wire nodes with an
     interior edge the resolved plan never saw.
+
+    ``trace`` (optional) collects one ``(codec_name, input_bytes)`` pair per
+    executed codec, in execution order — the raw material for the trainer's
+    deterministic cost model (the counts are a pure function of plan + data,
+    unlike wall-clock timings).
     """
 
-    def __init__(self, resolved: ResolvedPlan, streams: Sequence[Stream], backend: str):
+    def __init__(
+        self,
+        resolved: ResolvedPlan,
+        streams: Sequence[Stream],
+        backend: str,
+        trace: Optional[List[Tuple[str, int]]] = None,
+    ):
         self.resolved = resolved
         self.backend = backend
+        self.trace = trace
         self.edges: List[Stream] = []
         self.consumed: List[bool] = []
         self.nodes: List[ResolvedNode] = []
@@ -517,6 +530,8 @@ class _Executor:
     def _run_codec(self, name: str, params: dict, rt_ins: List[int]) -> List[int]:
         spec = _checked_codec(name, self.resolved.format_version)
         ins = [self._consume(e) for e in rt_ins]
+        if self.trace is not None:
+            self.trace.append((name, sum(s.nbytes for s in ins)))
         outs, header = run_encode_via(spec, self.backend, ins, params)
         out_ids = [self._new_edge(o) for o in outs]
         self.nodes.append(ResolvedNode(spec.codec_id, tuple(rt_ins), len(outs), header))
@@ -567,6 +582,8 @@ class _Executor:
                 "bitpack", {"bits": explicit} if explicit else {}, d_out
             )
         self._consume(rt_ins[0])
+        if self.trace is not None:
+            self.trace.append((FUSED_NAME, s.nbytes))
         out_ids = [self._new_edge(o) for o in outs]
         self.nodes.append(ResolvedNode(spec.codec_id, tuple(rt_ins), len(outs), header))
         return out_ids
@@ -579,6 +596,7 @@ def execute(
     backend: str = "host",
     fuse: Optional[bool] = None,
     scratch: Optional[ExecScratch] = None,
+    trace: Optional[List[Tuple[str, int]]] = None,
 ) -> bytes:
     """Phase 2: run a resolved program over concrete streams -> wire frame.
 
@@ -586,6 +604,8 @@ def execute(
     lives); pass an explicit bool to override either way.  ``scratch`` scopes
     per-call coder-table caching; the chunked ``compress()`` path passes one
     shared scratch to every pool worker so read-only tables are built once.
+    ``trace`` (a caller-owned list) collects ``(codec_name, input_bytes)`` per
+    executed step — see :class:`_Executor`.
     """
     streams = [s.validate() for s in _as_streams(inputs)]
     if len(streams) != resolved.n_inputs:
@@ -601,9 +621,9 @@ def execute(
     if fuse:
         resolved = fuse_resolved(resolved)
     if scratch is None:
-        return _Executor(resolved, streams, backend).run()
+        return _Executor(resolved, streams, backend, trace).run()
     with scratch.activate():
-        return _Executor(resolved, streams, backend).run()
+        return _Executor(resolved, streams, backend, trace).run()
 
 
 # ------------------------------------------------------------------ chunking
@@ -675,9 +695,12 @@ class _SessionBase:
         window: Optional[int],
         table_cache_size: int,
         pool_name: str,
+        scratch: Optional[ExecScratch] = None,
     ):
         self.n_workers = n_workers
-        self.scratch = ExecScratch(table_cache_size)
+        # a caller-provided scratch lets many sessions share one coder-table
+        # cache (the trainer holds hundreds of tiny per-genome sessions)
+        self.scratch = scratch if scratch is not None else ExecScratch(table_cache_size)
         self._window = window
         self._pool: Optional[ThreadPoolExecutor] = None
         self._pool_lock = threading.Lock()
@@ -794,8 +817,9 @@ class CompressorSession(_SessionBase):
         window: Optional[int] = None,
         use_resolve_cache: bool = True,
         table_cache_size: int = 256,
+        scratch: Optional[ExecScratch] = None,
     ):
-        super().__init__(n_workers, window, table_cache_size, "ozl-enc")
+        super().__init__(n_workers, window, table_cache_size, "ozl-enc", scratch)
         self.plan = plan.validate()
         self.ctx = ctx or CompressionCtx()
         check_compress_version(self.ctx.format_version)
@@ -842,12 +866,19 @@ class CompressorSession(_SessionBase):
         self._bump(bytes_out=len(frame))
         return frame
 
-    def _compress_single(self, streams: List[Stream], backend: str) -> bytes:
+    def _compress_single(
+        self,
+        streams: List[Stream],
+        backend: str,
+        trace: Optional[List[Tuple[str, int]]] = None,
+    ) -> bytes:
         resolved, was_hit = _resolve_impl(
             self.plan, streams, self.ctx, use_cache=self.use_resolve_cache
         )
         try:
-            return execute(resolved, streams, backend=backend, scratch=self.scratch)
+            return execute(
+                resolved, streams, backend=backend, scratch=self.scratch, trace=trace
+            )
         except Exception:
             # A cached resolution is keyed on stream *shape*, but a selector's
             # choice can be inapplicable to new *values* of the same shape
@@ -855,8 +886,40 @@ class CompressorSession(_SessionBase):
             # data; a failure on a fresh resolution is a genuine error.
             if not was_hit or self.plan.is_resolved:
                 raise
+            if trace is not None:
+                trace.clear()  # the failed attempt's steps are not part of it
             fresh, _ = _resolve_impl(self.plan, streams, self.ctx, use_cache=False)
-            return execute(fresh, streams, backend=backend, scratch=self.scratch)
+            return execute(
+                fresh, streams, backend=backend, scratch=self.scratch, trace=trace
+            )
+
+    def compress_traced(
+        self,
+        inputs: Union[Stream, bytes, Sequence[Stream]],
+        *,
+        backend: Optional[str] = None,
+    ) -> Tuple[bytes, List[Tuple[str, int]], float]:
+        """Session-scoped evaluation call: one unchunked frame, instrumented.
+
+        Returns ``(frame, trace, seconds)`` where ``trace`` is the executed
+        ``(codec_name, input_bytes)`` list and ``seconds`` the wall-clock
+        resolve+execute time from ``time.perf_counter`` (the clock the
+        benchmarks use).  The frame is byte-identical to
+        ``compress(..., chunk_bytes=0)``.  This is the trainer's candidate
+        evaluation path: the trace feeds its *deterministic* cost model, the
+        timing its reporting.
+        """
+        streams = [s.validate() for s in _as_streams(inputs)]
+        trace: List[Tuple[str, int]] = []
+        t0 = time.perf_counter()
+        frame = self._compress_single(streams, backend or self.backend, trace)
+        dt = time.perf_counter() - t0
+        self._bump(
+            calls=1,
+            bytes_in=sum(s.nbytes for s in streams),
+            bytes_out=len(frame),
+        )
+        return frame, trace, dt
 
     # ----------------------------------------------------------- streaming
     def compress_chunks(
@@ -956,8 +1019,9 @@ class DecompressorSession(_SessionBase):
         n_workers: Optional[int] = None,
         window: Optional[int] = None,
         table_cache_size: int = 256,
+        scratch: Optional[ExecScratch] = None,
     ):
-        super().__init__(n_workers, window, table_cache_size, "ozl-dec")
+        super().__init__(n_workers, window, table_cache_size, "ozl-dec", scratch)
 
     def _one(self, frame: bytes) -> List[Stream]:
         with self.scratch.activate():

@@ -93,17 +93,40 @@ def _leaf_key(path) -> str:
     return "/".join(str(getattr(k, "key", k)) for k in path)
 
 
-def _plan_for_dtype(dtype) -> Plan:
+# Trained-plan overrides (the `repro train` -> deploy loop, paper §VI-C):
+# a plan registered for a dtype name ("float32", ...) — or "*" for all
+# dtypes — replaces the shipped profile for checkpoint leaves.  Restore is
+# unaffected: frames are self-describing, the universal decoder reads both.
+_PLAN_OVERRIDES: Dict[str, Plan] = {}
+
+
+def set_checkpoint_plan(dtype_name: str, plan: Optional[Plan]) -> None:
+    """Route checkpoint leaves of ``dtype_name`` (or ``"*"``) through
+    ``plan`` — typically a deserialized trained ``.ozp``.  ``None`` clears
+    the override."""
+    with _SESSION_LOCK:
+        if plan is None:
+            _PLAN_OVERRIDES.pop(dtype_name, None)
+        else:
+            _PLAN_OVERRIDES[dtype_name] = plan.validate()
+
+
+def _plan_for_dtype(dtype) -> Tuple[Plan, bool]:
+    """-> (plan, is_trained_override)."""
     name = str(dtype)
+    with _SESSION_LOCK:
+        override = _PLAN_OVERRIDES.get(name) or _PLAN_OVERRIDES.get("*")
+    if override is not None:
+        return override, True
     if name == "float32":
-        return float32_profile()
+        return float32_profile(), False
     if name == "bfloat16":
-        return bfloat16_profile()
+        return bfloat16_profile(), False
     if name == "float64":
-        return float64_profile()
+        return float64_profile(), False
     if name in ("int8", "uint8", "bool"):
-        return plan_pipeline("zlib_backend")
-    return numeric_profile()
+        return plan_pipeline("zlib_backend"), False
+    return numeric_profile(), False
 
 
 def _to_numeric_stream(arr: np.ndarray):
@@ -121,8 +144,18 @@ def _to_numeric_stream(arr: np.ndarray):
 
 
 def compress_leaf(arr: np.ndarray) -> bytes:
-    plan = _plan_for_dtype(arr.dtype)
-    return _enc_session(plan).compress(_to_numeric_stream(arr))
+    plan, trained = _plan_for_dtype(arr.dtype)
+    stream = _to_numeric_stream(arr)
+    if not trained:
+        return _enc_session(plan).compress(stream)
+    try:
+        return _enc_session(plan).compress(stream)
+    except Exception:
+        # plans trained by `repro train` on raw sample files start from a
+        # SERIAL input (their frontend re-types the bytes); numeric leaves
+        # feed them as raw bytes instead — the frame stays self-describing
+        # either way, so restore is unchanged
+        return _enc_session(plan).compress(stream.as_serial())
 
 
 def decompress_leaf(frame: bytes, shape, dtype) -> np.ndarray:

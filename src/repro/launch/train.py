@@ -13,7 +13,11 @@ Production behaviours demonstrated end-to-end on CPU:
     same command auto-resumes from the latest checkpoint (params, optimizer,
     data-pipeline cursor),
   * optional compressed gradient collectives (--grad-compress bf16|int8_ef)
-    when a 'pod' axis exists.
+    when a 'pod' axis exists,
+  * trained checkpoint compressors: --ckpt-plan [DTYPE=]plan.ozp routes
+    checkpoint leaves through a `python -m repro train` plan instead of the
+    shipped profiles — the paper's train->deploy loop closed inside the
+    training job (restore is untouched: frames are self-describing).
 """
 from __future__ import annotations
 
@@ -69,6 +73,14 @@ def main(argv=None) -> int:
     ap.add_argument("--save-interval", type=int, default=50)
     ap.add_argument("--keep", type=int, default=3)
     ap.add_argument("--fail-at-step", type=int, default=0, help="simulate a crash")
+    ap.add_argument(
+        "--ckpt-plan",
+        action="append",
+        default=[],
+        metavar="[DTYPE=]PLAN.ozp",
+        help="compress checkpoint leaves with a trained plan (repeatable;"
+        " bare PATH applies to all dtypes)",
+    )
     ap.add_argument("--straggler-timeout", type=float, default=30.0)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--log-every", type=int, default=10)
@@ -77,6 +89,20 @@ def main(argv=None) -> int:
     spec = get_arch(args.arch)
     if spec.family != "lm":
         ap.error("train.py drives LM archs; see examples/ for gnn/recsys")
+
+    if args.ckpt_plan:
+        from repro.core.serialize import deserialize_plan
+        from repro.distributed.checkpoint import set_checkpoint_plan
+
+        for item in args.ckpt_plan:
+            dtype_name, _, path = item.rpartition("=")
+            dtype_name = dtype_name or "*"
+            plan, meta = deserialize_plan(Path(path).read_bytes())
+            set_checkpoint_plan(dtype_name, plan)
+            print(
+                f"[ckpt] trained plan {meta.get('name') or plan.name or path}"
+                f" deployed for dtype {dtype_name!r}"
+            )
     cfg = spec.reduced_cfg if args.reduced else spec.model_cfg
     cfg = dataclasses.replace(cfg, remat=False) if args.reduced else cfg
 

@@ -1,8 +1,15 @@
 """Automated compressor training (paper §VI-C): greedy stream clustering +
-NSGA-II genetic search over backend graphs + Pareto merge."""
+parallel NSGA-II genetic search over backend graphs + Pareto merge, behind a
+deterministic session-backed evaluation service (``TrainerService``)."""
 from .cluster import Clustering, cluster_streams  # noqa: F401
 from .gp import GNode, compile_genome, crossover, mutate, random_genome  # noqa: F401
-from .nsga2 import nsga2, nondominated_sort, pareto_prune  # noqa: F401
+from .nsga2 import (  # noqa: F401
+    crowding_distance,
+    nondominated_sort,
+    nsga2,
+    pareto_prune,
+    rng_stream,
+)
 from .trainer import (  # noqa: F401
     CsvFrontend,
     Frontend,
@@ -11,5 +18,7 @@ from .trainer import (  # noqa: F401
     StructFrontend,
     TradeoffPoint,
     TrainedCompressor,
+    TrainerService,
+    detect_frontend,
     train,
 )

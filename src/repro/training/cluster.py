@@ -8,7 +8,7 @@ streams may merge (concat requires it), which also bounds the pair set.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -71,23 +71,42 @@ class Clustering:
 
 
 def cluster_streams(
-    streams: Sequence[Stream], *, level: int = 5, max_rounds: int = 64
+    streams: Sequence[Stream],
+    *,
+    level: int = 5,
+    max_rounds: int = 64,
+    pool_map: Optional[Callable[[Callable, Sequence], List]] = None,
 ) -> Clustering:
+    """Greedy same-signature merging; ``pool_map`` (an ordered parallel map,
+    e.g. ``TrainerService.map``) fans the per-round candidate-pair probes
+    out.  Probe sizes are a pure function of the streams, and the winning
+    pair is picked from the ordered result list, so the clustering is
+    identical with or without a pool."""
+    pool_map = pool_map or (lambda fn, items: [fn(x) for x in items])
     sigs = [(int(s.stype), s.width) for s in streams]
     clusters: List[List[int]] = [[i] for i in range(len(streams))]
-    sizes: List[int] = [_size_of([streams[i]], level) for i in range(len(streams))]
+    sizes: List[int] = pool_map(
+        lambda i: _size_of([streams[i]], level), range(len(streams))
+    )
 
     for _ in range(max_rounds):
+        pairs = [
+            (a, b)
+            for a in range(len(clusters))
+            for b in range(a + 1, len(clusters))
+            if sigs[clusters[a][0]] == sigs[clusters[b][0]]
+        ]
+        msizes = pool_map(
+            lambda ab: _size_of(
+                [streams[i] for i in clusters[ab[0]] + clusters[ab[1]]], level
+            ),
+            pairs,
+        )
         best = None  # (gain, a, b, merged_size)
-        for a in range(len(clusters)):
-            for b in range(a + 1, len(clusters)):
-                if sigs[clusters[a][0]] != sigs[clusters[b][0]]:
-                    continue
-                merged = [streams[i] for i in clusters[a] + clusters[b]]
-                msize = _size_of(merged, level)
-                gain = sizes[a] + sizes[b] - msize
-                if gain > 0 and (best is None or gain > best[0]):
-                    best = (gain, a, b, msize)
+        for (a, b), msize in zip(pairs, msizes):
+            gain = sizes[a] + sizes[b] - msize
+            if gain > 0 and (best is None or gain > best[0]):
+                best = (gain, a, b, msize)
         if best is None:
             break  # local minimum (paper: "repeats until local minimum")
         _, a, b, msize = best

@@ -1,8 +1,17 @@
 """NSGA-II (Deb et al. 2002) — the multi-objective engine behind the paper's
 backend graph generator (§VI-C): fast nondominated sort, crowding distance,
-binary tournament, elitist environmental selection."""
+binary tournament, elitist environmental selection.
+
+Evaluation is *batched*: each generation hands the full child population to
+one ``evaluate_batch`` callable, which is free to fan the candidates out
+across a worker pool.  Variation is driven by per-child RNG streams derived
+from ``(seed, generation, child_index)`` — never from a shared sequential RNG
+interleaved with evaluation — so the evolved population is a pure function of
+the seed, independent of worker count or evaluation completion order.
+"""
 from __future__ import annotations
 
+import hashlib
 import math
 import random
 from dataclasses import dataclass
@@ -11,6 +20,19 @@ from typing import Callable, Generic, List, Sequence, Tuple, TypeVar
 T = TypeVar("T")
 
 Objectives = Tuple[float, ...]  # minimized
+
+
+def rng_stream(seed: int, *key) -> random.Random:
+    """A deterministic, independent RNG stream for ``(seed, *key)``.
+
+    Stable across processes and Python versions (keyed blake2b, not
+    ``hash()``), so identically seeded runs replay identical genomes no
+    matter how evaluation is scheduled.
+    """
+    digest = hashlib.blake2b(
+        repr((int(seed),) + tuple(key)).encode(), digest_size=8
+    ).digest()
+    return random.Random(int.from_bytes(digest, "big"))
 
 
 def dominates(a: Objectives, b: Objectives) -> bool:
@@ -88,34 +110,42 @@ class NSGA2Result(Generic[T]):
 
 def nsga2(
     seed_pop: List[T],
-    evaluate: Callable[[T], Objectives],
+    evaluate_batch: Callable[[List[T]], List[Objectives]],
     mutate: Callable[[T, random.Random], T],
     crossover: Callable[[T, T, random.Random], T],
     *,
     pop_size: int = 20,
     generations: int = 10,
-    rng: random.Random = None,
+    seed: int = 0,
 ) -> NSGA2Result:
-    rng = rng or random.Random(0)
+    """Evolve ``seed_pop`` under batched evaluation.
+
+    ``evaluate_batch(pop) -> [objectives]`` must be a pure function of each
+    candidate (it may run candidates concurrently and in any order).  Given
+    that, the returned Pareto set is byte-identical for any scheduling of the
+    batch — the determinism contract ``repro train`` relies on.
+    """
     pop: List[T] = list(seed_pop)[:pop_size]
-    while len(pop) < pop_size:
-        pop.append(mutate(rng.choice(seed_pop), rng))
-    objs = [evaluate(p) for p in pop]
+    for i in range(len(pop), pop_size):
+        r = rng_stream(seed, "fill", i)
+        pop.append(mutate(r.choice(seed_pop), r))
+    objs = list(evaluate_batch(pop))
     evals = len(pop)
 
-    def tournament() -> T:
-        i, j = rng.randrange(len(pop)), rng.randrange(len(pop))
-        return pop[i] if dominates(objs[i], objs[j]) or rng.random() < 0.5 else pop[j]
+    def tournament(r: random.Random) -> T:
+        i, j = r.randrange(len(pop)), r.randrange(len(pop))
+        return pop[i] if dominates(objs[i], objs[j]) or r.random() < 0.5 else pop[j]
 
-    for _gen in range(generations):
+    for gen in range(generations):
         children: List[T] = []
-        while len(children) < pop_size:
-            a, b = tournament(), tournament()
-            c = crossover(a, b, rng) if rng.random() < 0.7 else a
-            if rng.random() < 0.6:
-                c = mutate(c, rng)
+        for i in range(pop_size):
+            r = rng_stream(seed, "child", gen, i)
+            a, b = tournament(r), tournament(r)
+            c = crossover(a, b, r) if r.random() < 0.7 else a
+            if r.random() < 0.6:
+                c = mutate(c, r)
             children.append(c)
-        child_objs = [evaluate(c) for c in children]
+        child_objs = list(evaluate_batch(children))
         evals += len(children)
         merged = pop + children
         merged_objs = objs + child_objs

@@ -2,29 +2,51 @@
 
 Pipeline: frontend-parse sample files into streams -> greedy clustering ->
 per-cluster NSGA-II backend search (objectives: compressed bytes, encode
-seconds) -> iterative Pareto merge across clusters pruned by crowding
+cost) -> iterative Pareto merge across clusters pruned by crowding
 distance -> a set of deployable tradeoff-point compressors (serializable
 Plans, paper §V-D).
+
+Candidate evaluation runs through :class:`TrainerService`: a persistent
+worker pool fanning genome evaluations out over long-lived
+:class:`~repro.core.engine.CompressorSession` objects that share one
+coder-table :class:`~repro.core.engine.ExecScratch` and the engine's resolve
+cache (keyed per compiled genome, so elitist survivors re-evaluate without
+re-resolving).  Training is *deterministic*: the NSGA-II speed objective is a
+calibrated per-codec cost model over the executed step trace — a pure
+function of (genome, sample) — never a wall-clock measurement, and variation
+uses per-genome RNG streams (:func:`~repro.training.nsga2.rng_stream`).  The
+same seed therefore yields byte-identical Pareto plans for any worker count.
+Wall-clock per-candidate timings (``time.perf_counter``, the benchmarks'
+clock path) are still recorded — in ``stats`` — for reporting.
 """
 from __future__ import annotations
 
-import random
+import os
+import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.codec import get_codec
-from repro.core.engine import CompressionCtx, Compressor, compress
+from repro.core.engine import (
+    CompressionCtx,
+    CompressorSession,
+    DecompressorSession,
+    ExecScratch,
+)
 from repro.core.graph import GraphBuilder, Plan
 from repro.core.message import Stream, SType
 
 from .cluster import Clustering, _concat_streams, cluster_streams
 from .gp import GNode, compile_genome, crossover, emit_genome, mutate, random_genome
-from .nsga2 import nsga2, pareto_prune
+from .nsga2 import nsga2, pareto_prune, rng_stream
 
 SAMPLE_LIMIT = 1 << 18  # per-cluster evaluation sample (256 KiB)
+
+INVALID = (float("inf"), float("inf"))  # objectives of a broken genome
 
 
 # ------------------------------------------------------------------ frontends
@@ -109,12 +131,46 @@ class MultiStreamFrontend(Frontend):
         return self.k
 
 
+def detect_frontend(raw: bytes) -> Frontend:
+    """``--frontend auto``: pick a frontend by sniffing sample bytes.
+
+    Detection order encodes signal strength: rectangular CSV first (the
+    strictest rule), then *sorted* fixed-width integers, then fixed-size
+    records (split into per-offset byte columns so clustering and the
+    per-cluster search see each field position on its own), then bounded
+    integers, and finally raw bytes.  Sorted-numeric outranks struct because
+    a sorted array is itself lag-periodic; bounded-numeric ranks below
+    struct because multi-field records also show a constant top byte.
+    Heuristics live in :mod:`repro.codecs.parse` next to the parser codecs
+    they route to.
+    """
+    from repro.codecs.parse import sniff_csv, sniff_numeric_width, sniff_struct_width
+
+    csv = sniff_csv(raw)
+    if csv is not None:
+        return CsvFrontend(n_cols=csv[0], sep=csv[1])
+    width = sniff_numeric_width(raw, require_monotone=True)
+    if width is not None:
+        return NumericFrontend(width=width)
+    rec = sniff_struct_width(raw)
+    if rec is not None:
+        # a "record" of a numeric storage width whose values also read as
+        # bounded integers is an integer column, not a struct
+        if rec in (2, 4, 8) and sniff_numeric_width(raw, widths=(rec,)) == rec:
+            return NumericFrontend(width=rec)
+        return StructFrontend(widths=(1,) * rec)
+    width = sniff_numeric_width(raw)
+    if width is not None:
+        return NumericFrontend(width=width)
+    return Frontend()
+
+
 # ----------------------------------------------------------- trained result
 @dataclass
 class TradeoffPoint:
     genomes: List[Optional[GNode]]  # one per cluster
-    est_size: float
-    est_time: float
+    est_size: float  # compressed bytes of the training sample
+    est_time: float  # deterministic encode-cost estimate, seconds (cost model)
 
 
 @dataclass
@@ -209,27 +265,225 @@ def _seed_genomes(sig: Tuple[int, int]) -> List[Optional[GNode]]:
     return seeds
 
 
-def _evaluate_genome(genome, sample: Stream, sig) -> Tuple[float, float]:
-    try:
-        plan = compile_genome(genome, sig)
-        t0 = time.perf_counter()
-        frame = compress(plan, [sample], ctx=CompressionCtx(level=5))
-        dt = time.perf_counter() - t0
-        # verify losslessness on the sample — broken genomes are discarded
-        from repro.core.engine import decompress
+# ----------------------------------------------------- deterministic cost
+# Per-codec encode cost in ns/input-byte, loosely calibrated against the
+# host measurements in results/BENCH_codecs.json (and stdlib backend docs).
+# This is the NSGA-II *speed objective*: a pure function of the executed
+# step trace, so identically seeded training runs rank candidates
+# identically on any machine and worker count.  Absolute accuracy matters
+# far less than a stable, roughly-proportional ordering.
+COST_NS_PER_BYTE: Dict[str, float] = {
+    "store": 0.05,
+    "dup": 0.1,
+    "constant": 0.1,
+    "interpret_numeric": 0.1,
+    "split_n": 0.2,
+    "concat": 0.3,
+    "delta": 0.3,
+    "zigzag": 0.3,
+    "transpose": 0.5,
+    "string_split": 0.5,
+    "transpose_split": 0.6,
+    "fused_delta_bitpack": 0.6,
+    "bitpack": 0.8,
+    "range_pack": 0.9,
+    "field_split": 1.0,
+    "float_split": 1.0,
+    "rle": 1.2,
+    "tokenize": 2.0,
+    "huffman": 9.0,
+    "fse": 11.0,
+    "zlib_backend": 30.0,
+    "lz77": 45.0,
+    "parse_numeric": 60.0,
+    "csv_split": 80.0,
+    "bz2_backend": 90.0,
+    "lzma_backend": 450.0,
+}
+COST_DEFAULT_NS_PER_BYTE = 8.0  # unlisted codecs: mid-range transform
+COST_NS_PER_NODE = 20_000.0  # fixed per-node dispatch/header overhead
 
-        (back,) = decompress(frame)
-        if back.content_bytes() != sample.content_bytes():
-            return (float("inf"), float("inf"))
-        if back.stype != sample.stype or back.width != sample.width:
-            return (float("inf"), float("inf"))  # type-faithfulness required
-        if sample.stype == SType.STRING and not np.array_equal(
-            back.lengths, sample.lengths
-        ):
-            return (float("inf"), float("inf"))
-        return (float(len(frame)), float(dt))
-    except Exception:
-        return (float("inf"), float("inf"))
+
+def trace_cost_seconds(trace: Sequence[Tuple[str, int]]) -> float:
+    """Deterministic encode-cost estimate (seconds) of an executed trace."""
+    ns = 0.0
+    for name, nbytes in trace:
+        ns += COST_NS_PER_NODE + COST_NS_PER_BYTE.get(
+            name, COST_DEFAULT_NS_PER_BYTE
+        ) * nbytes
+    return ns / 1e9
+
+
+# ------------------------------------------------------------- the service
+class TrainerService:
+    """Parallel, session-backed genome evaluation (the trainer's engine room).
+
+    Owns a persistent thread pool (numpy/zlib/lzma encoders release the GIL),
+    one shared :class:`ExecScratch` so every candidate reuses the same
+    coder-table cache, an LRU of per-genome :class:`CompressorSession`
+    objects (elitist survivors are re-evaluated every generation — their
+    sessions, and through them the engine resolve cache entries keyed on the
+    compiled plan, persist across generations and clusters), and one
+    :class:`DecompressorSession` for the mandatory losslessness check.
+
+    ``evaluate_batch`` is order-independent and side-effect-free w.r.t. the
+    returned objectives: ``(compressed_bytes, trace_cost_seconds)`` is a pure
+    function of (genome, sample).  Wall-clock per-candidate timing
+    (``time.perf_counter``) is accumulated in :attr:`stats` for reporting
+    only.  A service instance may be reused across ``train()`` calls — a
+    long-running training endpoint pays for pool/cache spin-up once.
+    """
+
+    def __init__(
+        self,
+        workers: Optional[int] = None,
+        *,
+        level: int = 5,
+        session_cache_size: int = 1024,
+        table_cache_size: int = 512,
+    ):
+        self.workers = int(workers) if workers else (os.cpu_count() or 1)
+        if self.workers < 1:
+            raise ValueError("workers must be >= 1")
+        self.level = level
+        self.scratch = ExecScratch(table_cache_size)
+        self._dec = DecompressorSession(scratch=self.scratch)
+        self._sessions: "OrderedDict[Plan, CompressorSession]" = OrderedDict()
+        self._session_cache_size = session_cache_size
+        self._lock = threading.Lock()
+        self._pool = None
+        self.stats: Dict[str, float] = {
+            "evaluations": 0,
+            "invalid": 0,
+            "eval_wall_seconds": 0.0,
+            "session_hits": 0,
+            "session_misses": 0,
+        }
+
+    # ------------------------------------------------------------- plumbing
+    def _pool_get(self):
+        from concurrent.futures import ThreadPoolExecutor
+
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.workers, thread_name_prefix="ozl-train"
+                )
+            return self._pool
+
+    def map(self, fn, items) -> list:
+        """Ordered parallel map; strictly serial when ``workers == 1`` (so
+        worker-count determinism tests compare genuinely different paths)."""
+        items = list(items)
+        if self.workers <= 1 or len(items) <= 1:
+            return [fn(x) for x in items]
+        return list(self._pool_get().map(fn, items))
+
+    def _session_for(self, plan: Plan) -> CompressorSession:
+        with self._lock:
+            sess = self._sessions.get(plan)
+            if sess is not None:
+                self._sessions.move_to_end(plan)
+                self.stats["session_hits"] += 1
+                return sess
+            self.stats["session_misses"] += 1
+            sess = CompressorSession(
+                plan, ctx=CompressionCtx(level=self.level), scratch=self.scratch
+            )
+            self._sessions[plan] = sess
+            while len(self._sessions) > self._session_cache_size:
+                _, old = self._sessions.popitem(last=False)
+                old.close()
+            return sess
+
+    def _bump(self, **deltas: float) -> None:
+        with self._lock:
+            for k, v in deltas.items():
+                self.stats[k] += v
+
+    # ------------------------------------------------------------ evaluation
+    def _evaluate_plan(
+        self, plan: Plan, sample: Stream, sig: Tuple[int, int]
+    ) -> Tuple[float, float]:
+        try:
+            sess = self._session_for(plan)
+            frame, trace, wall = sess.compress_traced([sample])
+        except Exception:
+            self._bump(evaluations=1, invalid=1)
+            return INVALID
+        self._bump(evaluations=1, eval_wall_seconds=wall)
+        try:
+            (back,) = self._dec.decompress(frame)
+            ok = (
+                back.content_bytes() == sample.content_bytes()
+                and back.stype == sample.stype
+                and back.width == sample.width  # type-faithfulness required
+                and (
+                    sample.stype != SType.STRING
+                    or np.array_equal(back.lengths, sample.lengths)
+                )
+            )
+        except Exception:
+            ok = False
+        if not ok:
+            self._bump(invalid=1)
+            return INVALID
+        return (float(len(frame)), trace_cost_seconds(trace))
+
+    def evaluate_genome(
+        self, genome: Optional[GNode], sample: Stream, sig: Tuple[int, int]
+    ) -> Tuple[float, float]:
+        """One candidate -> ``(compressed_bytes, deterministic cost seconds)``.
+
+        Broken genomes (compile/encode refusals, or any losslessness or
+        type-fidelity failure) score ``(inf, inf)`` and are discarded by
+        selection.
+        """
+        try:
+            plan = compile_genome(genome, sig)
+        except Exception:
+            self._bump(evaluations=1, invalid=1)
+            return INVALID
+        return self._evaluate_plan(plan, sample, sig)
+
+    def evaluate_batch(
+        self,
+        genomes: Sequence[Optional[GNode]],
+        sample: Stream,
+        sig: Tuple[int, int],
+    ) -> List[Tuple[float, float]]:
+        """Batch evaluation: compile, dedupe by compiled plan (elites and
+        crossover clones recur every generation), fan the unique plans out
+        over the pool, and scatter results back in order."""
+        plans: List[Optional[Plan]] = []
+        for g in genomes:
+            try:
+                plans.append(compile_genome(g, sig))
+            except Exception:
+                self._bump(evaluations=1, invalid=1)
+                plans.append(None)
+        unique = list(OrderedDict.fromkeys(p for p in plans if p is not None))
+        objs = self.map(lambda p: self._evaluate_plan(p, sample, sig), unique)
+        table = dict(zip(unique, objs))
+        return [INVALID if p is None else table[p] for p in plans]
+
+    # -------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        with self._lock:
+            pool, self._pool = self._pool, None
+            sessions = list(self._sessions.values())
+            self._sessions.clear()
+        if pool is not None:
+            pool.shutdown(wait=True)
+        for s in sessions:
+            s.close()
+        self._dec.close()
+
+    def __enter__(self) -> "TrainerService":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
 
 def train(
@@ -240,79 +494,106 @@ def train(
     generations: int = 6,
     n_points: int = 8,
     seed: int = 0,
+    workers: Optional[int] = None,
+    service: Optional[TrainerService] = None,
     verbose: bool = False,
 ) -> TrainedCompressor:
-    """Train a compressor from sample inputs (each a list of input streams)."""
+    """Train a compressor from sample inputs (each a list of input streams).
+
+    ``workers`` sizes the evaluation pool (default: all CPUs); pass an
+    existing ``service`` instead to amortize pool/cache spin-up across calls.
+    Identical ``seed`` ⇒ identical result — including serialized plan bytes —
+    for any ``workers`` value.
+    """
     t_start = time.perf_counter()
-    rng = random.Random(seed)
+    own_service = service is None
+    if service is None:
+        service = TrainerService(workers)
+    try:
+        # 1. parse every sample and concatenate slot-wise
+        parsed = [frontend.parse(s) for s in sample_inputs]
+        n_slots = len(parsed[0])
+        if any(len(p) != n_slots for p in parsed):
+            raise ValueError("inconsistent stream counts across samples")
+        streams = [
+            _concat_streams([p[i] for p in parsed]) for i in range(n_slots)
+        ]
+        total_bytes = sum(s.nbytes for s in streams)
 
-    # 1. parse every sample and concatenate slot-wise
-    parsed = [frontend.parse(s) for s in sample_inputs]
-    n_slots = len(parsed[0])
-    if any(len(p) != n_slots for p in parsed):
-        raise ValueError("inconsistent stream counts across samples")
-    streams = [
-        _concat_streams([p[i] for p in parsed]) for i in range(n_slots)
-    ]
-    total_bytes = sum(s.nbytes for s in streams)
-
-    # 2. greedy clustering (paper: trainer merges clusters while it shrinks)
-    clustering = cluster_streams(streams)
-    if verbose:
-        print(f"[train] {n_slots} streams -> {len(clustering.clusters)} clusters")
-
-    # 3. per-cluster NSGA-II backend search
-    sigs: List[Tuple[int, int]] = []
-    per_cluster: List[Tuple[List[Optional[GNode]], List[Tuple[float, float]]]] = []
-    for ci, idxs in enumerate(clustering.clusters):
-        merged = _concat_streams([streams[i] for i in idxs])
-        sig = (int(merged.stype), merged.width)
-        sigs.append(sig)
-        sample = _sample_stream(merged)
-        res = nsga2(
-            _seed_genomes(sig),
-            lambda gno: _evaluate_genome(gno, sample, sig),
-            lambda gno, r: mutate(gno, sig, r),
-            lambda a, b, r: crossover(a, b, sig, r),
-            pop_size=pop_size,
-            generations=generations,
-            rng=random.Random(rng.randrange(1 << 30)),
-        )
-        # drop invalid entries
-        pareto = [
-            (g, o) for g, o in zip(res.pareto, res.pareto_objs) if o[0] != float("inf")
-        ] or [(None, _evaluate_genome(None, sample, sig))]
-        genomes, objs = zip(*pareto)
-        per_cluster.append((list(genomes), list(objs)))
+        # 2. greedy clustering (paper: trainer merges clusters while it
+        # shrinks); merge-candidate probes fan out over the same pool
+        clustering = cluster_streams(streams, pool_map=service.map)
         if verbose:
-            print(
-                f"[train] cluster {ci} ({len(idxs)} streams, sig {sig}):"
-                f" {len(genomes)} pareto pts, best {min(o[0] for o in objs):.0f}B"
+            print(f"[train] {n_slots} streams -> {len(clustering.clusters)} clusters")
+
+        # 3. per-cluster NSGA-II backend search
+        sigs: List[Tuple[int, int]] = []
+        per_cluster: List[Tuple[List[Optional[GNode]], List[Tuple[float, float]]]] = []
+        for ci, idxs in enumerate(clustering.clusters):
+            merged = _concat_streams([streams[i] for i in idxs])
+            sig = (int(merged.stype), merged.width)
+            sigs.append(sig)
+            sample = _sample_stream(merged)
+            res = nsga2(
+                _seed_genomes(sig),
+                lambda genomes: service.evaluate_batch(genomes, sample, sig),
+                lambda gno, r: mutate(gno, sig, r),
+                lambda a, b, r: crossover(a, b, sig, r),
+                pop_size=pop_size,
+                generations=generations,
+                seed=rng_stream(seed, "cluster", ci).getrandbits(32),
             )
-
-    # 4. iterative Pareto merge across clusters (paper §VI-C last paragraph)
-    points: List[TradeoffPoint] = [TradeoffPoint([], 0.0, 0.0)]
-    for genomes, objs in per_cluster:
-        expanded: List[TradeoffPoint] = []
-        for pt in points:
-            for gno, (sz, tm) in zip(genomes, objs):
-                expanded.append(
-                    TradeoffPoint(pt.genomes + [gno], pt.est_size + sz, pt.est_time + tm)
+            # drop invalid entries
+            pareto = [
+                (g, o)
+                for g, o in zip(res.pareto, res.pareto_objs)
+                if o[0] != float("inf")
+            ] or [(None, service.evaluate_genome(None, sample, sig))]
+            genomes, objs = zip(*pareto)
+            per_cluster.append((list(genomes), list(objs)))
+            if verbose:
+                print(
+                    f"[train] cluster {ci} ({len(idxs)} streams, sig {sig}):"
+                    f" {len(genomes)} pareto pts, best {min(o[0] for o in objs):.0f}B"
                 )
-        objs2 = [(p.est_size, p.est_time) for p in expanded]
-        points, _ = pareto_prune(expanded, objs2, n_points)
 
-    dt = time.perf_counter() - t_start
-    return TrainedCompressor(
-        frontend,
-        clustering,
-        sigs,
-        sorted(points, key=lambda p: p.est_size),
-        stats={
-            "train_seconds": dt,
-            "train_bytes": float(total_bytes),
-            "train_speed_mib_min": total_bytes / (1 << 20) / (dt / 60.0) if dt else 0.0,
-            "n_clusters": float(len(clustering.clusters)),
-            "n_streams": float(n_slots),
-        },
-    )
+        # 4. iterative Pareto merge across clusters (paper §VI-C last paragraph)
+        points: List[TradeoffPoint] = [TradeoffPoint([], 0.0, 0.0)]
+        for genomes, objs in per_cluster:
+            expanded: List[TradeoffPoint] = []
+            seen_objs = set()  # identical objectives => redundant tradeoff
+            for pt in points:
+                for gno, (sz, tm) in zip(genomes, objs):
+                    key = (pt.est_size + sz, pt.est_time + tm)
+                    if key in seen_objs:
+                        continue
+                    seen_objs.add(key)
+                    expanded.append(TradeoffPoint(pt.genomes + [gno], *key))
+            objs2 = [(p.est_size, p.est_time) for p in expanded]
+            points, _ = pareto_prune(expanded, objs2, n_points)
+
+        dt = time.perf_counter() - t_start
+        return TrainedCompressor(
+            frontend,
+            clustering,
+            sigs,
+            sorted(points, key=lambda p: p.est_size),
+            stats={
+                "train_seconds": dt,
+                "train_bytes": float(total_bytes),
+                "train_speed_mib_min": total_bytes / (1 << 20) / (dt / 60.0)
+                if dt
+                else 0.0,
+                "n_clusters": float(len(clustering.clusters)),
+                "n_streams": float(n_slots),
+                "workers": float(service.workers),
+                "evaluations": float(service.stats["evaluations"]),
+                "invalid_evaluations": float(service.stats["invalid"]),
+                "eval_wall_seconds": float(service.stats["eval_wall_seconds"]),
+                "session_hits": float(service.stats["session_hits"]),
+                "session_misses": float(service.stats["session_misses"]),
+            },
+        )
+    finally:
+        if own_service:
+            service.close()

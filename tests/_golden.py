@@ -1,0 +1,390 @@
+"""Golden wire-format conformance corpus: registry + regeneration helper.
+
+``tests/golden/`` holds *frozen* wire frames: for every vector a payload
+(``<name>.in``), the pinned plan (``<name>.ozp``), and the frame the current
+encoder emitted when the vector was frozen (``<name>.ozl``), indexed by
+``manifest.json``.  ``tests/test_golden_vectors.py`` asserts two invariants
+against them:
+
+  * **universal decode** — every stored frame decodes to its stored payload,
+    byte for byte, forever (the §III-D guarantee across library versions);
+  * **encoder stability** — re-encoding the pinned (plan, input, version,
+    chunking) quadruple still produces the frozen frame byte-for-byte, so
+    *any* wire-format drift fails CI before it ships.
+
+The corpus covers format versions 1-4, every registered codec id (enforced
+by a coverage test — registering a codec without freezing a vector for it is
+a test failure), chunked and unchunked containers, every shipped profile
+family, and a trained plan from ``results/trained/``.
+
+Regeneration is deliberately awkward: it only runs with
+``REPRO_REGEN_GOLDEN=1`` set, because regenerating *is* a format change and
+must be a reviewed decision, not a test-fixing reflex:
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python tests/_golden.py
+
+Vector inputs are seeded ``np.random.default_rng`` draws (bit-stable across
+platforms), so regeneration itself is reproducible.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import zlib
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import CompressionCtx, compress  # noqa: E402
+from repro.core.graph import GraphBuilder, Plan, pipeline  # noqa: E402
+from repro.core.message import Stream, SType, serial, strings  # noqa: E402
+from repro.core.serialize import deserialize_plan, serialize_plan  # noqa: E402
+
+GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
+MANIFEST = GOLDEN_DIR / "manifest.json"
+REGEN_ENV = "REPRO_REGEN_GOLDEN"
+LEVEL = 5  # every vector is frozen at the default effort level
+
+TRAINED_SOURCE = (
+    Path(__file__).resolve().parents[1] / "results" / "trained" / "era5_flux_0.ozp"
+)
+
+
+def _rng(name: str) -> np.random.Generator:
+    return np.random.default_rng(zlib.crc32(name.encode()))
+
+
+# ------------------------------------------------------------ input builders
+def _text(name: str, n: int = 4096) -> Stream:
+    rng = _rng(name)
+    words = [b"graph", b"codec", b"stream", b"frame", b"openzl", b"wire", b"the"]
+    picks = rng.integers(0, len(words), n // 5)
+    return serial(b" ".join(words[i] for i in picks)[:n])
+
+
+def _smooth_u32(name: str, n: int = 1024) -> Stream:
+    rng = _rng(name)
+    walk = np.cumsum(rng.integers(0, 50, n, dtype=np.int64))
+    return Stream((walk % (1 << 22)).astype(np.uint32), SType.NUMERIC, 4)
+
+
+def _bounded_u32(name: str, n: int = 1024, hi: int = 1000) -> Stream:
+    return Stream(
+        _rng(name).integers(0, hi, n).astype(np.uint32), SType.NUMERIC, 4
+    )
+
+
+def _runs_u32(name: str, n: int = 1024) -> Stream:
+    rng = _rng(name)
+    vals = np.repeat(
+        rng.integers(0, 9, n // 8).astype(np.uint32), rng.integers(2, 16, n // 8)
+    )[:n]
+    return Stream(np.ascontiguousarray(vals), SType.NUMERIC, 4)
+
+
+def _signed_wiggle(name: str, n: int = 1024) -> Stream:
+    rng = _rng(name)
+    return Stream(
+        rng.integers(-60, 60, n).astype(np.int32), SType.NUMERIC, 4
+    )
+
+
+def _struct_rec(name: str, width: int, n: int = 512) -> Stream:
+    rng = _rng(name)
+    rec = np.empty((n, width), np.uint8)
+    rec[:, : width // 2] = rng.integers(0, 256, (n, width // 2))
+    rec[:, width // 2 :] = rng.integers(0, 4, (n, width - width // 2))
+    return Stream(rec.reshape(-1), SType.STRUCT, width)
+
+
+def _float32(name: str, n: int = 1024) -> Stream:
+    rng = _rng(name)
+    vals = (np.sin(np.linspace(0, 20, n)) * 100 + rng.normal(0, 0.3, n)).astype(
+        np.float32
+    )
+    return Stream(vals.view(np.uint32), SType.NUMERIC, 4)
+
+
+def _float64(name: str, n: int = 512) -> Stream:
+    rng = _rng(name)
+    vals = np.cumsum(rng.normal(0, 1, n)).astype(np.float64)
+    return Stream(vals.view(np.uint64), SType.NUMERIC, 8)
+
+
+def _bf16(name: str, n: int = 1024) -> Stream:
+    # bf16 bit patterns: f32 rounded by truncation to the top 16 bits
+    f32 = _float32(name).data
+    return Stream((f32 >> np.uint32(16)).astype(np.uint16), SType.NUMERIC, 2)
+
+
+def _csv(name: str, n_rows: int = 400) -> Stream:
+    rng = _rng(name)
+    animals = [b"cat", b"dog", b"emu"]
+    rows = [
+        b"%d,%s,%d"
+        % (i * 3, animals[int(rng.integers(3))], int(rng.integers(0, 50)))
+        for i in range(n_rows)
+    ]
+    return serial(b"\n".join(rows) + b"\n")
+
+
+def _strings_ints(name: str, n: int = 400) -> Stream:
+    rng = _rng(name)
+    items = []
+    for i in range(n):
+        if rng.random() < 0.8:
+            items.append(b"%d" % int(rng.integers(-5000, 5000)))
+        else:
+            items.append(b"n/a")
+    return strings(items)
+
+
+def _strings_mixed(name: str, n: int = 300) -> Stream:
+    rng = _rng(name)
+    words = [b"alpha", b"beta", b"gamma", b"", b"x" * 40]
+    return strings([words[int(rng.integers(len(words)))] for _ in range(n)])
+
+
+def _sao_like(name: str, n: int = 256) -> Stream:
+    """28-byte header + n 28-byte records shaped like the §IV SAO catalog."""
+    rng = _rng(name)
+    sra0 = np.sort(rng.integers(0, 1 << 40, n).astype(np.uint64))
+    sdec0 = rng.integers(0, 1 << 30, n).astype(np.uint64)
+    is_f = rng.integers(0, 4, n).astype(np.uint16)
+    mag = rng.integers(0, 1500, n).astype(np.uint16)
+    xrpm = rng.integers(0, 1 << 16, n).astype(np.uint32)
+    xdpm = rng.integers(0, 1 << 16, n).astype(np.uint32)
+    rec = np.zeros((n, 28), np.uint8)
+    rec[:, 0:8] = sra0.view(np.uint8).reshape(n, 8)
+    rec[:, 8:16] = sdec0.view(np.uint8).reshape(n, 8)
+    rec[:, 16:18] = is_f.view(np.uint8).reshape(n, 2)
+    rec[:, 18:20] = mag.view(np.uint8).reshape(n, 2)
+    rec[:, 20:24] = xrpm.view(np.uint8).reshape(n, 4)
+    rec[:, 24:28] = xdpm.view(np.uint8).reshape(n, 4)
+    header = np.frombuffer(b"SAO golden header 28 bytes!!", np.uint8)
+    return serial(np.concatenate([header, rec.reshape(-1)]).tobytes())
+
+
+# ------------------------------------------------------------- plan builders
+def _single(codec: str, **params) -> Plan:
+    return pipeline((codec, params) if params else codec, name=f"unit_{codec}")
+
+
+def _fanout(codec: str, n_out: int, **params) -> Plan:
+    g = GraphBuilder(1)
+    g.add(codec, g.input(0), n_out=n_out, **params)
+    return g.build(f"unit_{codec}")
+
+
+@dataclass(frozen=True)
+class GoldenVector:
+    name: str
+    format_version: int
+    make_plan: Callable[[], Plan]
+    make_input: Callable[[], Stream]
+    chunk_bytes: int = 0  # 0 = unchunked
+
+
+def vectors() -> List[GoldenVector]:
+    from repro.codecs import profiles as P
+
+    out: List[GoldenVector] = []
+
+    def add(name, fv, make_plan, make_input, chunk_bytes=0):
+        out.append(GoldenVector(name, fv, make_plan, make_input, chunk_bytes))
+
+    # --- codec unit vectors, each pinned at the codec's min_version --------
+    add("codec_store", 1, lambda: _single("store"),
+        lambda: _text("codec_store"))
+    add("codec_dup", 1, lambda: _fanout("dup", 2),
+        lambda: _bounded_u32("codec_dup"))
+    add("codec_delta", 1, lambda: _single("delta"),
+        lambda: _smooth_u32("codec_delta"))
+    add("codec_zigzag", 1, lambda: _single("zigzag"),
+        lambda: _signed_wiggle("codec_zigzag"))
+    add("codec_transpose", 1, lambda: _single("transpose"),
+        lambda: _bounded_u32("codec_transpose"))
+    add("codec_bitpack", 1, lambda: _single("bitpack"),
+        lambda: _bounded_u32("codec_bitpack"))
+    add("codec_rle", 1, lambda: _fanout("rle", 2),
+        lambda: _runs_u32("codec_rle"))
+    add("codec_constant", 1, lambda: _fanout("constant", 0),
+        lambda: Stream(np.full(777, 42, np.uint32), SType.NUMERIC, 4))
+    add("codec_tokenize", 2, lambda: _fanout("tokenize", 2),
+        lambda: _bounded_u32("codec_tokenize", hi=17))
+    add("codec_field_split", 1, lambda: _fanout("field_split", 2, widths=[2, 4]),
+        lambda: _struct_rec("codec_field_split", 6))
+    add("codec_split_n", 1, lambda: _fanout("split_n", 2, sizes=[100, -1]),
+        lambda: _text("codec_split_n"))
+
+    def concat_plan() -> Plan:
+        g = GraphBuilder(1)
+        a, b = g.add("split_n", g.input(0), n_out=2, sizes=[700, -1])
+        g.add("concat", a, b)
+        return g.build("unit_concat")
+
+    add("codec_concat", 1, concat_plan, lambda: _text("codec_concat"))
+    add("codec_range_pack", 1, lambda: _single("range_pack"),
+        lambda: _bounded_u32("codec_range_pack"))
+    add("codec_huffman", 2, lambda: _fanout("huffman", 2),
+        lambda: _text("codec_huffman"))
+    add("codec_fse", 2, lambda: _fanout("fse", 2),
+        lambda: _text("codec_fse"))
+    add("codec_lz77", 2, lambda: _fanout("lz77", 4),
+        lambda: _text("codec_lz77", 8192))
+    add("codec_zlib_backend", 3, lambda: _single("zlib_backend", level=6),
+        lambda: _text("codec_zlib_backend"))
+    add("codec_float_split", 3, lambda: _fanout("float_split", 3, fmt=2),
+        lambda: _float32("codec_float_split"))
+    add("codec_parse_numeric", 2, lambda: _fanout("parse_numeric", 3),
+        lambda: _strings_ints("codec_parse_numeric"))
+    add("codec_csv_split", 2, lambda: _fanout("csv_split", 3, sep=","),
+        lambda: _csv("codec_csv_split"))
+    add("codec_string_split", 1, lambda: _fanout("string_split", 2),
+        lambda: _strings_mixed("codec_string_split"))
+    add("codec_transpose_split", 1, lambda: _fanout("transpose_split", 4),
+        lambda: _bounded_u32("codec_transpose_split"))
+    add("codec_interpret_numeric", 1,
+        lambda: _single("interpret_numeric", width=4),
+        lambda: _struct_rec("codec_interpret_numeric", 4))
+    add("codec_lzma_backend", 3, lambda: _single("lzma_backend", preset=6),
+        lambda: _text("codec_lzma_backend"))
+    add("codec_bz2_backend", 3, lambda: _single("bz2_backend", level=9),
+        lambda: _text("codec_bz2_backend"))
+    # explicit bits: dynamic selection only fuses exact power widths, and the
+    # coverage test needs codec id 26 *in* the frame, not its lowered form
+    add("codec_fused_delta_bitpack", 4,
+        lambda: _single("fused_delta_bitpack", bits=8),
+        lambda: _smooth_u32("codec_fused_delta_bitpack"))
+
+    # --- profile families at the current version ---------------------------
+    add("profile_generic_numeric", 4, P.generic_profile,
+        lambda: _smooth_u32("profile_generic_numeric"))
+    add("profile_generic_text", 4, P.generic_profile,
+        lambda: _text("profile_generic_text"))
+    add("profile_numeric", 4, P.numeric_profile,
+        lambda: _bounded_u32("profile_numeric"))
+    add("profile_text", 4, P.text_profile,
+        lambda: _text("profile_text"))
+    add("profile_float32", 4, P.float32_profile,
+        lambda: _float32("profile_float32"))
+    add("profile_bfloat16", 4, P.bfloat16_profile,
+        lambda: _bf16("profile_bfloat16"))
+    add("profile_float64", 4, P.float64_profile,
+        lambda: _float64("profile_float64"))
+    add("profile_sao", 4, P.sao_profile, lambda: _sao_like("profile_sao"))
+    add("profile_csv3", 4, lambda: P.csv_profile(3),
+        lambda: _csv("profile_csv3"))
+    add("profile_struct44", 4, lambda: P.struct_profile([4, 4]),
+        lambda: _struct_rec("profile_struct44", 8))
+
+    # --- one generic vector per supported format version (drift canary) ----
+    for fv in (1, 2, 3, 4):
+        add(f"version_v{fv}_generic", fv, P.generic_profile,
+            lambda: _smooth_u32("version_generic"))
+
+    # --- chunked containers (format v4 OZLC record) ------------------------
+    add("container_text", 4, P.text_profile,
+        lambda: _text("container_text", 10240), chunk_bytes=2048)
+    add("container_numeric", 4, P.numeric_profile,
+        lambda: _smooth_u32("container_numeric", 4096), chunk_bytes=4096)
+
+    # --- a trained plan from results/trained (the §VI-C deploy loop) -------
+    def trained_plan() -> Plan:
+        plan, _meta = deserialize_plan(TRAINED_SOURCE.read_bytes())
+        return plan
+
+    def trained_input() -> Stream:
+        # era5_flux_0 starts with interpret_numeric: serial bytes whose
+        # length divides its width
+        plan, _meta = deserialize_plan(TRAINED_SOURCE.read_bytes())
+        width = plan.nodes[0].param_dict().get("width", 4)
+        raw = _smooth_u32("trained_era5", 1024).data.tobytes()
+        return serial(raw[: len(raw) - len(raw) % width])
+
+    add("trained_era5_flux", 4, trained_plan, trained_input)
+    return out
+
+
+# ------------------------------------------------------------- (de)hydration
+def stream_to_entry(s: Stream) -> Dict:
+    entry = {"stype": int(s.stype), "width": int(s.width)}
+    if s.stype == SType.STRING and s.lengths is not None:
+        entry["lengths"] = [int(x) for x in s.lengths.tolist()]
+    return entry
+
+
+def stream_from_entry(entry: Dict, payload: bytes) -> Stream:
+    stype = SType(entry["stype"])
+    width = int(entry["width"])
+    if stype == SType.NUMERIC:
+        dtype = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}[width]
+        return Stream(np.frombuffer(payload, dtype=dtype), stype, width).validate()
+    lengths = None
+    if stype == SType.STRING:
+        lengths = np.asarray(entry.get("lengths", []), dtype=np.uint32)
+    return Stream(
+        np.frombuffer(payload, dtype=np.uint8), stype, width, lengths
+    ).validate()
+
+
+def encode_vector(v_entry: Dict, plan: Plan, stream: Stream) -> bytes:
+    """The one pinned encode path both regeneration and the tests use.
+
+    The resolve cache is bypassed: it is keyed on stream *shape*, so a warm
+    cache could replay a selector choice made on some other vector's data —
+    frozen frames must depend only on (plan, input, version, chunking).
+    """
+    return compress(
+        plan,
+        [stream],
+        ctx=CompressionCtx(v_entry["format_version"], LEVEL),
+        chunk_bytes=v_entry["chunk_bytes"] or None,
+        use_resolve_cache=False,
+    )
+
+
+def load_manifest() -> Dict[str, Dict]:
+    return json.loads(MANIFEST.read_text())
+
+
+# -------------------------------------------------------------- regeneration
+def regenerate() -> None:
+    if os.environ.get(REGEN_ENV) != "1":
+        raise SystemExit(
+            f"refusing to regenerate the conformance corpus without"
+            f" {REGEN_ENV}=1 — frozen frames define the wire format;"
+            f" regenerating them is a format change (see ROADMAP.md)"
+        )
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    manifest: Dict[str, Dict] = {}
+    for v in vectors():
+        plan = v.make_plan().validate()
+        stream = v.make_input().validate()
+        entry = {
+            "format_version": v.format_version,
+            "chunk_bytes": v.chunk_bytes,
+            "level": LEVEL,
+            **stream_to_entry(stream),
+        }
+        frame = encode_vector(entry, plan, stream)
+        (GOLDEN_DIR / f"{v.name}.in").write_bytes(stream.content_bytes())
+        (GOLDEN_DIR / f"{v.name}.ozl").write_bytes(frame)
+        (GOLDEN_DIR / f"{v.name}.ozp").write_bytes(
+            serialize_plan(plan, name=v.name, format_version=v.format_version,
+                           level=LEVEL)
+        )
+        entry["frame_bytes"] = len(frame)
+        manifest[v.name] = entry
+        print(f"froze {v.name}: {stream.nbytes}B -> {len(frame)}B (v{v.format_version})")
+    MANIFEST.write_text(json.dumps(manifest, indent=1, sort_keys=True) + "\n")
+    print(f"{len(manifest)} vectors -> {GOLDEN_DIR}")
+
+
+if __name__ == "__main__":
+    regenerate()

@@ -1,0 +1,295 @@
+"""Differential execution-path harness: one matrix, byte-identity everywhere.
+
+The engine promises that *how* you drive it never changes the wire bytes:
+one-shot ``compress()`` vs a reused ``CompressorSession`` vs the streaming
+``stream_io`` file path vs the CLI subprocess, host vs device backend,
+chunked vs unchunked, known vs unknown chunk count.  Before this harness
+those promises were pinned by scattered per-PR checks; this module is the
+single table that states them — extend ``CASES`` (or the path functions)
+when a PR adds an execution path or corpus family.
+
+Every case clears the resolve cache first: byte-identity must come from the
+engine's contract, not from paths accidentally sharing a cached selector
+choice (the CLI subprocess starts cold and would expose that).
+"""
+import io
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or skip-at-call-time stubs
+
+from repro.codecs import profiles as P
+from repro.core import (
+    CompressionCtx,
+    CompressorSession,
+    compress,
+    decompress,
+    numeric,
+    resolve_cache_clear,
+    serial,
+    stream_io,
+)
+from repro.core.codec import available_backends
+from repro.core.graph import pipeline
+from repro.core.message import SType, Stream, strings, struct as mk_struct
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+CHUNK = 2048  # small enough that every corpus splits into several chunks
+
+
+# ----------------------------------------------------------------- corpora
+def corpus_text(seed: int = 0) -> Stream:
+    rng = np.random.default_rng(seed)
+    words = [b"request", b"handled", b"auth", b"cache", b"miss", b"hit", b"the"]
+    parts = [words[int(i)] for i in rng.integers(0, len(words), 4000)]
+    return serial(b" ".join(parts)[:16000])
+
+
+def corpus_numeric(seed: int = 0) -> Stream:
+    rng = np.random.default_rng(seed)
+    return numeric(np.cumsum(rng.integers(0, 50, 5000)).astype(np.uint32))
+
+
+def corpus_struct(seed: int = 0) -> Stream:
+    rng = np.random.default_rng(seed)
+    n = 2000
+    rec = np.empty((n, 6), np.uint8)
+    rec[:, :4] = rng.integers(0, 100000, n).astype(np.uint32).view(np.uint8).reshape(n, 4)
+    rec[:, 4:] = rng.integers(0, 5, (n, 2))
+    return mk_struct(rec.reshape(-1), 6)
+
+
+def corpus_string(seed: int = 0) -> Stream:
+    rng = np.random.default_rng(seed)
+    words = [b"alpha", b"beta", b"gamma", b"", b"delta" * 10]
+    return strings([words[int(i)] for i in rng.integers(0, len(words), 3000)])
+
+
+CORPORA = {
+    "text": corpus_text,
+    "numeric": corpus_numeric,
+    "struct": corpus_struct,
+    "string": corpus_string,
+}
+
+PLANS = {
+    "text": P.text_profile,
+    "generic": P.generic_profile,
+    "numeric": P.numeric_profile,
+    "delta_chain": lambda: pipeline("delta", "transpose", ("zlib_backend", {"level": 1})),
+}
+
+# The matrix: (corpus, plan, chunk_bytes).  chunk_bytes=0 -> single frame.
+CASES = [
+    ("text", "text", 0),
+    ("text", "text", CHUNK),
+    ("text", "generic", 0),
+    ("text", "generic", CHUNK),
+    ("numeric", "numeric", 0),
+    ("numeric", "numeric", CHUNK),
+    ("numeric", "delta_chain", 0),
+    ("numeric", "delta_chain", CHUNK),
+    ("struct", "generic", 0),
+    ("struct", "generic", CHUNK),
+    ("string", "generic", 0),
+    ("string", "generic", CHUNK),
+]
+
+IDS = [f"{c}-{p}-{'chunked' if k else 'single'}" for c, p, k in CASES]
+
+
+# ------------------------------------------------------------------- paths
+def path_oneshot(plan, stream, chunk, backend="host") -> bytes:
+    return compress(plan, stream, chunk_bytes=chunk or None, backend=backend)
+
+
+def path_session(plan, stream, chunk, backend="host") -> bytes:
+    with CompressorSession(plan, chunk_bytes=chunk or None, backend=backend) as s:
+        return s.compress(stream)
+
+
+def path_session_to(plan, stream, chunk, backend="host") -> bytes:
+    buf = io.BytesIO()
+    with CompressorSession(plan, chunk_bytes=chunk or None, backend=backend) as s:
+        s.compress_to(stream, buf)
+    return buf.getvalue()
+
+
+def path_unknown_count(plan, stream, chunk, backend="host") -> bytes:
+    """Streaming writer with n_chunks=None (seekable backpatch mode)."""
+    from repro.core.engine import _split_chunks
+
+    buf = io.BytesIO()
+    with CompressorSession(plan, backend=backend) as s:
+        s.compress_chunks(iter(_split_chunks(stream, chunk)), buf, n_chunks=None)
+    return buf.getvalue()
+
+
+IN_MEMORY_PATHS = {
+    "session": path_session,
+    "session_to": path_session_to,
+}
+
+
+def _roundtrip_equal(stream: Stream, frame: bytes) -> None:
+    (out,) = decompress(frame)
+    assert out.content_bytes() == stream.content_bytes()
+    assert out.stype == stream.stype and out.width == stream.width
+    if stream.stype == SType.STRING:
+        assert np.array_equal(out.lengths, stream.lengths)
+
+
+# ------------------------------------------------------------------- matrix
+@pytest.mark.parametrize("corpus,plan_name,chunk", CASES, ids=IDS)
+def test_paths_byte_identical(corpus, plan_name, chunk):
+    stream = CORPORA[corpus]()
+    plan = PLANS[plan_name]()
+    resolve_cache_clear()
+    ref = path_oneshot(plan, stream, chunk)
+    for name, path in IN_MEMORY_PATHS.items():
+        resolve_cache_clear()
+        assert path(plan, stream, chunk) == ref, f"{name} diverged from one-shot"
+    if chunk and len(ref) > 4 and ref[:4] == b"OZLC":
+        # unknown-count mode reserves a 5-byte padded count varint (wire.py):
+        # bytes differ at exactly that field — and therefore at the trailing
+        # CRC, which covers it — everything between must match and the frame
+        # must decode identically
+        resolve_cache_clear()
+        unknown = path_unknown_count(plan, stream, chunk)
+        pad = len(unknown) - len(ref)
+        assert 0 <= pad <= 4, "unknown-count writer: unexpected layout change"
+        assert unknown[5 + 5 : -4] == ref[5 + 5 - pad : -4], (
+            "unknown-count container writer diverged beyond the count field"
+        )
+        _roundtrip_equal(stream, unknown)
+    _roundtrip_equal(stream, ref)
+
+
+@pytest.mark.parametrize(
+    "chunk", [0, CHUNK], ids=["single", "chunked"]
+)
+def test_device_backend_byte_identical(chunk):
+    if "device" not in available_backends():
+        pytest.skip("no device backend registered")
+    stream = corpus_numeric()
+    plan = PLANS["delta_chain"]()
+    resolve_cache_clear()
+    ref = path_oneshot(plan, stream, chunk)
+    resolve_cache_clear()
+    dev = path_oneshot(plan, stream, chunk, backend="device")
+    assert dev == ref, "device backend frames must be byte-identical to host"
+    resolve_cache_clear()
+    assert path_session(plan, stream, chunk, backend="device") == ref
+
+
+@pytest.mark.parametrize("chunk", [0, CHUNK], ids=["single", "chunked"])
+def test_stream_io_byte_identical(tmp_path, chunk):
+    """File path == in-memory path, for serial corpora (files are bytes)."""
+    stream = corpus_text()
+    plan = P.text_profile()
+    src = tmp_path / "corpus.bin"
+    src.write_bytes(stream.content_bytes())
+    resolve_cache_clear()
+    ref = path_oneshot(plan, stream, chunk)
+    dst = tmp_path / "corpus.ozl"
+    resolve_cache_clear()
+    stream_io.compress_file(src, dst, plan, chunk_bytes=chunk or None)
+    assert dst.read_bytes() == ref, "stream_io.compress_file diverged"
+    out = tmp_path / "corpus.out"
+    stream_io.decompress_file(dst, out)
+    assert out.read_bytes() == stream.content_bytes()
+
+
+@pytest.mark.parametrize(
+    "profile,chunk",
+    [("text", CHUNK), ("generic", 0)],
+    ids=["text-chunked", "generic-single"],
+)
+def test_cli_subprocess_byte_identical(tmp_path, profile, chunk):
+    """A cold CLI process emits the same bytes as the warm in-memory path."""
+    stream = corpus_text()
+    plan = PLANS[profile]()
+    resolve_cache_clear()
+    ref = path_oneshot(plan, stream, chunk)
+    src = tmp_path / "corpus.bin"
+    src.write_bytes(stream.content_bytes())
+    dst = tmp_path / "corpus.ozl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    subprocess.run(
+        [
+            sys.executable, "-m", "repro", "compress", str(src), "-o", str(dst),
+            "--profile", profile, "--chunk-bytes", str(chunk),
+        ],
+        check=True, env=env, cwd=REPO_ROOT, capture_output=True,
+    )
+    assert dst.read_bytes() == ref, "CLI subprocess diverged from in-memory path"
+
+
+# ---------------------------------------------------------------- hypothesis
+@given(
+    data=st.binary(min_size=1, max_size=4096),
+    chunk=st.sampled_from([0, 512]),
+)
+@settings(max_examples=25, deadline=None)
+def test_fuzz_serial_paths_agree(data, chunk):
+    stream = serial(data)
+    plan = P.generic_profile()
+    resolve_cache_clear()
+    ref = path_oneshot(plan, stream, chunk)
+    assert path_session(plan, stream, chunk) == ref
+    assert path_session_to(plan, stream, chunk) == ref
+    _roundtrip_equal(stream, ref)
+
+
+@given(
+    vals=st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=2000),
+    chunk=st.sampled_from([0, 512]),
+)
+@settings(max_examples=25, deadline=None)
+def test_fuzz_numeric_paths_agree(vals, chunk):
+    stream = numeric(np.asarray(vals, dtype=np.uint32))
+    plan = P.numeric_profile()
+    resolve_cache_clear()
+    ref = path_oneshot(plan, stream, chunk)
+    assert path_session(plan, stream, chunk) == ref
+    assert path_session_to(plan, stream, chunk) == ref
+    _roundtrip_equal(stream, ref)
+
+
+@given(
+    items=st.lists(st.binary(min_size=0, max_size=40), min_size=1, max_size=300),
+    chunk=st.sampled_from([0, 256]),
+)
+@settings(max_examples=15, deadline=None)
+def test_fuzz_string_paths_agree(items, chunk):
+    stream = strings(items)
+    plan = P.generic_profile()
+    resolve_cache_clear()
+    ref = path_oneshot(plan, stream, chunk)
+    assert path_session(plan, stream, chunk) == ref
+    assert path_session_to(plan, stream, chunk) == ref
+    _roundtrip_equal(stream, ref)
+
+
+@given(
+    data=st.binary(min_size=6, max_size=3000),
+    chunk=st.sampled_from([0, 512]),
+)
+@settings(max_examples=15, deadline=None)
+def test_fuzz_struct_paths_agree(data, chunk):
+    width = 6
+    data = data[: len(data) - len(data) % width] or b"\0" * width
+    stream = mk_struct(data, width)
+    plan = P.generic_profile()
+    resolve_cache_clear()
+    ref = path_oneshot(plan, stream, chunk)
+    assert path_session(plan, stream, chunk) == ref
+    assert path_session_to(plan, stream, chunk) == ref
+    _roundtrip_equal(stream, ref)

@@ -1,0 +1,111 @@
+"""Golden wire-format conformance tests (see tests/_golden.py).
+
+Two frozen-corpus invariants, vector by vector:
+
+  * the universal decoder reproduces the stored payload bytes for every
+    frozen frame (decode stability: frames outlive library versions);
+  * the current encoder still emits the byte-identical frame for the pinned
+    (plan, input, format_version, chunking) — encode drift fails fast.
+
+Plus structural coverage checks: every registered codec id, every supported
+format version, and both container shapes must appear in the corpus — so
+adding a codec or bumping the format version *requires* freezing new vectors
+(REPRO_REGEN_GOLDEN=1 python tests/_golden.py, a reviewed decision).
+"""
+import pytest
+from _golden import (
+    GOLDEN_DIR,
+    MANIFEST,
+    encode_vector,
+    load_manifest,
+    stream_from_entry,
+)
+
+from repro.core import decompress, wire
+from repro.core.codec import all_codecs
+from repro.core.message import SType
+from repro.core.serialize import deserialize_plan
+from repro.core.versioning import CURRENT_FORMAT_VERSION, MIN_FORMAT_VERSION
+
+import numpy as np
+
+MANIFEST_ENTRIES = load_manifest() if MANIFEST.exists() else {}
+NAMES = sorted(MANIFEST_ENTRIES)
+
+pytestmark = pytest.mark.skipif(
+    not MANIFEST_ENTRIES, reason="golden corpus missing (tests/golden/)"
+)
+
+
+def _frame(name: str) -> bytes:
+    return (GOLDEN_DIR / f"{name}.ozl").read_bytes()
+
+
+def _input_stream(name: str):
+    payload = (GOLDEN_DIR / f"{name}.in").read_bytes()
+    return stream_from_entry(MANIFEST_ENTRIES[name], payload)
+
+
+def _frame_codec_ids(frame: bytes) -> set:
+    ids = set()
+    if wire.is_container(frame):
+        _version, sub_frames = wire.read_container(frame)
+    else:
+        sub_frames = [frame]
+    for sub in sub_frames:
+        _v, _n, nodes, _stored = wire.read_frame(sub)
+        ids.update(node.codec_id for node in nodes)
+    return ids
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_universal_decode_reproduces_payload(name):
+    entry = MANIFEST_ENTRIES[name]
+    expected = _input_stream(name)
+    (out,) = decompress(_frame(name))
+    assert out.content_bytes() == expected.content_bytes(), name
+    assert out.stype == expected.stype and out.width == expected.width, name
+    if expected.stype == SType.STRING:
+        assert np.array_equal(out.lengths, expected.lengths), name
+    assert entry["frame_bytes"] == len(_frame(name))
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_encoder_emits_frozen_frame(name):
+    entry = MANIFEST_ENTRIES[name]
+    plan, _meta = deserialize_plan((GOLDEN_DIR / f"{name}.ozp").read_bytes())
+    frame = encode_vector(entry, plan, _input_stream(name))
+    assert frame == _frame(name), (
+        f"{name}: encoder output drifted from the frozen frame"
+        f" ({len(frame)}B vs {entry['frame_bytes']}B) — if this change is"
+        f" intentional, regenerate the corpus (REPRO_REGEN_GOLDEN=1) and"
+        f" say so in the PR"
+    )
+
+
+def test_every_registered_codec_id_is_covered():
+    covered = set()
+    for name in NAMES:
+        covered |= _frame_codec_ids(_frame(name))
+    registered = {spec.codec_id for spec in all_codecs().values()}
+    missing = registered - covered
+    assert not missing, (
+        f"codec ids {sorted(missing)} have no golden vector — freeze one in"
+        f" tests/_golden.py (new codecs must pin their wire format)"
+    )
+
+
+def test_every_format_version_is_covered():
+    versions = {MANIFEST_ENTRIES[n]["format_version"] for n in NAMES}
+    expected = set(range(MIN_FORMAT_VERSION, CURRENT_FORMAT_VERSION + 1))
+    missing = expected - versions
+    assert not missing, f"format versions {sorted(missing)} lack golden vectors"
+
+
+def test_both_container_shapes_are_covered():
+    shapes = {wire.is_container(_frame(n)) for n in NAMES}
+    assert shapes == {True, False}, "need both chunked and unchunked vectors"
+
+
+def test_corpus_includes_a_trained_plan():
+    assert any(n.startswith("trained_") for n in NAMES)
