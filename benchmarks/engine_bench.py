@@ -342,6 +342,161 @@ def run_stream(emit_json: bool = False, print_rows: bool = True):
     return rows, results
 
 
+# ----------------------------------------------------- compression service
+SERVE_KIB = int(os.environ.get("REPRO_SERVE_BENCH_KIB", "256"))
+SERVE_REQS = int(os.environ.get("REPRO_SERVE_BENCH_REQS", "8"))
+SERVE_CLI_REPS = int(os.environ.get("REPRO_SERVE_BENCH_CLI_REPS", "3"))
+SERVE_CHUNK_KIB = 64
+
+
+def _percentile(xs, q):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(round(q / 100 * (len(xs) - 1))))]
+
+
+def run_serve(emit_json: bool = False, print_rows: bool = True):
+    """Hot daemon sessions vs per-invocation CLI: req/s and latency tails.
+
+    The daemon amortizes process startup, plan resolution, and pool
+    construction across requests — the per-invocation CLI pays all three per
+    call.  1/4/8 concurrent clients issue ``SERVE_REQS`` compress requests
+    each over persistent connections; every returned frame is checked
+    byte-identical to the offline path.
+    """
+    import tempfile
+    import threading
+
+    from repro.core import compress, serial
+    from repro.codecs import text_profile
+    from repro.service import CompressionServer, PlanRegistry, ServiceClient
+
+    corpus = synth_log(SERVE_KIB << 10)
+    chunk = SERVE_CHUNK_KIB << 10
+    want = compress(text_profile(), serial(corpus), chunk_bytes=chunk)
+    rows = []
+    results = {
+        "corpus_kib": SERVE_KIB,
+        "chunk_kib": SERVE_CHUNK_KIB,
+        "requests_per_client": SERVE_REQS,
+        "profile": "text",
+    }
+
+    with tempfile.TemporaryDirectory(prefix="ozl_serve_bench_") as tmp:
+        # -- baseline: one CLI subprocess per request (cold everything) ------
+        src = os.path.join(tmp, "corpus.log")
+        with open(src, "wb") as f:
+            f.write(corpus)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(RESULTS_DIR.parent / "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+        )
+        cli_times = []
+        for rep in range(SERVE_CLI_REPS):
+            dst = os.path.join(tmp, f"cli{rep}.ozl")
+            t0 = time.perf_counter()
+            subprocess.run(
+                [
+                    sys.executable, "-m", "repro", "compress", src, "-o", dst,
+                    "--profile", "text", "--chunk-bytes", str(chunk),
+                ],
+                check=True, env=env, cwd=RESULTS_DIR.parent,
+                capture_output=True,
+            )
+            cli_times.append(time.perf_counter() - t0)
+        with open(os.path.join(tmp, "cli0.ozl"), "rb") as f:
+            assert f.read() == want, "CLI frame diverged from in-memory path"
+        cli_rps = 1.0 / (sum(cli_times) / len(cli_times))
+        results["cli_per_invocation"] = {
+            "req_s": round(cli_rps, 3),
+            "p50_ms": round(_percentile(cli_times, 50) * 1e3, 1),
+            "p99_ms": round(_percentile(cli_times, 99) * 1e3, 1),
+            "reps": SERVE_CLI_REPS,
+        }
+        rows.append(
+            f"serve/cli_per_invocation,{cli_times[0]*1e6:.1f},"
+            f"req_s={results['cli_per_invocation']['req_s']}"
+        )
+
+        # -- the daemon: hot sessions, persistent connections ---------------
+        registry = PlanRegistry()
+        registry.register_profile("text")
+        with CompressionServer(
+            registry, socket_path=os.path.join(tmp, "bench.sock"),
+            max_clients=8, sessions_per_plan=4,
+        ) as srv:
+            for n_clients in (1, 4, 8):
+                latencies = [[] for _ in range(n_clients)]
+                failures = []
+
+                def client_body(i):
+                    try:
+                        with ServiceClient(srv.address, timeout=120.0) as c:
+                            for _ in range(SERVE_REQS):
+                                t0 = time.perf_counter()
+                                frame, _info = c.compress_bytes(
+                                    corpus, "text", chunk_bytes=chunk
+                                )
+                                latencies[i].append(time.perf_counter() - t0)
+                                if frame != want:
+                                    raise AssertionError(
+                                        "service frame diverged"
+                                    )
+                    except Exception as err:  # surfaced after join
+                        failures.append(err)
+
+                # warm-up request so c1 doesn't pay first-touch resolution
+                with ServiceClient(srv.address) as c:
+                    c.compress_bytes(corpus, "text", chunk_bytes=chunk)
+                threads = [
+                    threading.Thread(target=client_body, args=(i,))
+                    for i in range(n_clients)
+                ]
+                t0 = time.perf_counter()
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+                wall = time.perf_counter() - t0
+                if failures:
+                    raise failures[0]
+                flat = [x for lane in latencies for x in lane]
+                entry = {
+                    "clients": n_clients,
+                    "req_s": round(len(flat) / wall, 3),
+                    "p50_ms": round(_percentile(flat, 50) * 1e3, 1),
+                    "p99_ms": round(_percentile(flat, 99) * 1e3, 1),
+                    "mib_s": round(
+                        len(flat) * len(corpus) / MIB / wall, 2
+                    ),
+                }
+                results[f"serve_c{n_clients}"] = entry
+                rows.append(
+                    f"serve/serve_c{n_clients},{wall/len(flat)*1e6:.1f},"
+                    + ";".join(f"{k}={v}" for k, v in entry.items())
+                )
+            results["frames_byte_identical"] = True
+        speedup = results["serve_c1"]["req_s"] / max(cli_rps, 1e-9)
+        results["hot_vs_cli_speedup"] = round(speedup, 2)
+        rows.append(f"serve/speedup,0.0,hot_vs_cli={speedup:.2f}")
+        if speedup <= 1.0:
+            raise AssertionError(
+                f"hot sessions must beat per-invocation CLI throughput"
+                f" (got {speedup:.2f}x)"
+            )
+    if emit_json:
+        payload = {
+            "schema": "BENCH_serve/v1",
+            "host_cpus": os.cpu_count(),
+            "rows": results,
+        }
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        (RESULTS_DIR / "BENCH_serve.json").write_text(json.dumps(payload, indent=2))
+    if print_rows:
+        for r in rows:
+            print(r)
+    return rows, results
+
+
 # ------------------------------------------------------- parallel trainer
 TRAIN_KIB = int(os.environ.get("REPRO_TRAIN_BENCH_KIB", "1024"))
 TRAIN_POP = int(os.environ.get("REPRO_TRAIN_BENCH_POP", "16"))
@@ -524,6 +679,14 @@ if __name__ == "__main__":
     ap.add_argument(
         "--train-only", action="store_true", help="skip the engine section"
     )
+    ap.add_argument(
+        "--serve", action="store_true",
+        help="run the compression-service section (results/BENCH_serve.json"
+        " with --json)",
+    )
+    ap.add_argument(
+        "--serve-only", action="store_true", help="skip the engine section"
+    )
     ap.add_argument("--stream-worker", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--stream-src", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--stream-dst", default=None, help=argparse.SUPPRESS)
@@ -539,11 +702,12 @@ if __name__ == "__main__":
         )
         raise SystemExit(0)
     print("name,us_per_call,derived")
-    if not (args.codecs_only or args.stream_only or args.train_only):
+    if not (args.codecs_only or args.stream_only or args.train_only or args.serve_only):
         run()
     if args.codecs or args.codecs_only or (
         args.json
-        and not (args.stream or args.stream_only or args.train or args.train_only)
+        and not (args.stream or args.stream_only or args.train or args.train_only
+                 or args.serve or args.serve_only)
     ):
         sizes = tuple(
             int(x) if float(x) == int(float(x)) else float(x)
@@ -554,3 +718,5 @@ if __name__ == "__main__":
         run_stream(emit_json=args.json)
     if args.train or args.train_only:
         run_train(emit_json=args.json)
+    if args.serve or args.serve_only:
+        run_serve(emit_json=args.json)

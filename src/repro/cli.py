@@ -44,41 +44,19 @@ __all__ = ["main", "named_profiles"]
 # ------------------------------------------------------------------ profiles
 def named_profiles() -> Dict[str, Tuple[Callable[[], Plan], str]]:
     """Parameterless named profiles: name -> (factory, one-line description)."""
-    from repro.codecs import profiles as P
+    from repro.codecs.profiles import named_profiles as _named
 
-    out: Dict[str, Tuple[Callable[[], Plan], str]] = {}
-    for name, fn, desc in [
-        ("generic", P.generic_profile, "auto selector over any byte stream"),
-        ("numeric", P.numeric_profile, "auto selector tuned for integer arrays"),
-        ("text", P.text_profile, "LZ-style text graph (zlib backend)"),
-        ("float32", P.float32_profile, "float_split fp32 checkpoint graph"),
-        ("bfloat16", P.bfloat16_profile, "float_split bf16 embedding graph"),
-        ("float64", P.float64_profile, "float_split fp64 graph"),
-        ("sao", P.sao_profile, "the paper's SAO star-catalog graph (§IV)"),
-    ]:
-        doc = (fn.__doc__ or "").strip().splitlines()
-        out[name] = (fn, doc[0] if doc and doc[0] else desc)
-    return out
+    return _named()
 
 
 def _profile_plan(spec: str) -> Plan:
     """Resolve ``--profile``: a named profile, ``struct:W1,W2,..`` or ``csv:N``."""
-    from repro.codecs import profiles as P
+    from repro.codecs.profiles import resolve_profile_spec
 
-    if spec.startswith("struct:"):
-        widths = [int(w) for w in spec[len("struct:") :].split(",") if w]
-        if not widths:
-            raise SystemExit(f"--profile {spec!r}: no field widths")
-        return P.struct_profile(widths)
-    if spec.startswith("csv:"):
-        return P.csv_profile(int(spec[len("csv:") :]))
-    reg = named_profiles()
-    if spec not in reg:
-        raise SystemExit(
-            f"unknown profile {spec!r}; known: {', '.join(sorted(reg))},"
-            f" struct:W1,W2,.., csv:N"
-        )
-    return reg[spec][0]()
+    try:
+        return resolve_profile_spec(spec)
+    except ValueError as err:
+        raise SystemExit(str(err)) from None
 
 
 def _parse_size(text: str) -> int:
@@ -200,13 +178,23 @@ def _cmd_inspect(args) -> int:
         if magic == wire.CONTAINER_MAGIC:
             sizes = []
             shown = 0
-            for i, chunk in enumerate(wire.iter_container_frames(f)):
+            # allow_empty: inspect is structural — it must tolerate a foreign
+            # zero-chunk container even though our writers refuse to emit one
+            for i, chunk in enumerate(
+                wire.iter_container_frames(f, allow_empty=True)
+            ):
                 sizes.append(len(chunk))
                 if shown < args.chunks:
                     print(f"chunk {i}:")
                     _print_frame(chunk, indent="  ")
                     shown += 1
             total = path.stat().st_size
+            if not sizes:
+                print(
+                    f"container: 0 chunk(s), {total} bytes total"
+                    " (empty container: no data, nothing to decode)"
+                )
+                return 0
             print(
                 f"container: {len(sizes)} chunk(s), {total} bytes total,"
                 f" chunk frames min/median/max ="
@@ -331,6 +319,11 @@ def _cmd_train(args) -> int:
         f" {st['n_streams']:.0f} stream(s) -> {st['n_clusters']:.0f} cluster(s)"
     )
     plans = tc.pareto_plans()  # size-ascending (best ratio first)
+    if not plans:
+        raise SystemExit(
+            "train: no Pareto point survived training — nothing to emit"
+            " (try more samples, a higher --pop, or more --gens)"
+        )
     print("pareto tradeoff points (training-sample size vs encode-cost estimate):")
     for i, (plan, sz, tm) in enumerate(plans):
         print(f"  [{i}] {sz:>10.0f} B  {tm * 1e3:>8.2f} ms  {len(plan.nodes)} codec node(s)")
@@ -349,6 +342,10 @@ def _cmd_train(args) -> int:
             raise SystemExit(f"train: point {i} failed the losslessness check")
         path.write_bytes(comp.serialize())
         emitted.append((i, path))
+    if not emitted:
+        raise SystemExit(
+            "train: no plan emitted (every tradeoff point was skipped)"
+        )
     for i, path in emitted:
         tag = "best-ratio point" if i == 0 else f"tradeoff point {i}"
         print(f"wrote {path} ({path.stat().st_size} bytes, {tag}; verified lossless)")
@@ -361,6 +358,120 @@ def _cmd_profiles(_args) -> int:
         print(f"{name:<12} {doc}")
     print("struct:W1,..  Generic record format: field_split + per-field auto backend.")
     print("csv:N         CSV frontend + per-column parse_numeric + auto backends.")
+    return 0
+
+
+# ------------------------------------------------------------------- service
+def _service_address(args) -> str:
+    if args.socket and args.tcp:
+        raise SystemExit("pass --socket or --tcp, not both")
+    if args.socket:
+        return f"unix:{args.socket}"
+    if args.tcp:
+        return args.tcp
+    raise SystemExit("pass --socket PATH or --tcp HOST:PORT")
+
+
+def _cmd_serve(args) -> int:
+    import signal
+
+    from repro.service import CompressionServer, PlanRegistry
+
+    import socket as _socket
+
+    from repro.service.protocol import parse_address
+
+    spec = _service_address(args)  # exactly one of --socket / --tcp
+    try:
+        family, target = parse_address(spec)
+    except ValueError as err:
+        raise SystemExit(str(err)) from None
+    registry = PlanRegistry()
+    for spec in args.profile or []:
+        entry = registry.register_profile(spec)
+        print(f"registered profile {entry.plan_id} (digest {entry.digest[:12]})")
+    for path in args.register or []:
+        entry = registry.register_file(path)
+        print(
+            f"registered plan {entry.plan_id} from {path}"
+            f" (digest {entry.digest[:12]})"
+        )
+    if not len(registry):
+        print("warning: no plans registered; only decompress/stats will work")
+
+    kw = dict(
+        max_clients=args.max_clients,
+        sessions_per_plan=args.sessions_per_plan,
+        n_workers=args.workers,
+        window=args.window,
+        request_timeout=args.timeout,
+    )
+    if family == _socket.AF_UNIX:
+        server = CompressionServer(registry, socket_path=target, **kw)
+    else:
+        host, port = target
+        server = CompressionServer(registry, host=host, port=port, **kw)
+    def _stop(_sig, _frm):
+        server.request_stop()
+
+    signal.signal(signal.SIGINT, _stop)
+    signal.signal(signal.SIGTERM, _stop)
+    print(f"serving on {server.address} ({len(registry)} plan(s); ^C to stop)")
+    sys.stdout.flush()
+    try:
+        server.serve_forever()
+    finally:
+        server.shutdown()
+        print("server stopped")
+    return 0
+
+
+def _cmd_client(args) -> int:
+    from repro.service import ServiceClient
+
+    address = _service_address(args)
+    with ServiceClient(address, timeout=args.timeout) as client:
+        if args.action == "stats":
+            import json as _json
+
+            print(_json.dumps(client.stats(), indent=2, sort_keys=True))
+            return 0
+        if args.action == "ping":
+            info = client.ping()
+            print(
+                f"{address}: ok, protocol v{info['protocol_version']},"
+                f" {info['plans']} plan(s), up {info['uptime_s']}s"
+            )
+            return 0
+        if not args.input:
+            raise SystemExit(f"client {args.action} needs an input file")
+        src = Path(args.input)
+        if args.action == "compress":
+            if not args.plan_id:
+                raise SystemExit("client compress needs --plan-id")
+            dst = Path(args.output) if args.output else src.with_name(src.name + ".ozl")
+            stats = client.compress_file(
+                src, dst, args.plan_id, chunk_bytes=_parse_size(args.chunk_bytes)
+            )
+            ratio = stats["bytes_in"] / max(stats["bytes_out"], 1)
+            kind = "container" if stats["container"] else "frame"
+            print(
+                f"{src} -> {dst}: {stats['bytes_in']} -> {stats['bytes_out']}"
+                f" bytes (x{ratio:.2f}), {stats['chunks']} chunk(s), {kind},"
+                f" plan={stats['plan_id']} digest={stats['digest'][:12]}"
+            )
+        else:  # decompress
+            if args.output:
+                dst = Path(args.output)
+            elif src.suffix == ".ozl":
+                dst = src.with_suffix("")
+            else:
+                dst = src.with_name(src.name + ".out")
+            stats = client.decompress_file(src, dst)
+            print(
+                f"{src} -> {dst}: {stats['bytes_in']} -> {stats['bytes_out']}"
+                f" bytes, {stats['chunks']} chunk(s)"
+            )
     return 0
 
 
@@ -437,6 +548,44 @@ def build_parser() -> argparse.ArgumentParser:
 
     p = sub.add_parser("profiles", help="list named profiles")
     p.set_defaults(fn=_cmd_profiles)
+
+    s = sub.add_parser(
+        "serve", help="run the compression daemon (paper §VIII services)"
+    )
+    s.add_argument("--socket", default=None, help="Unix socket path to bind")
+    s.add_argument("--tcp", default=None, help="HOST:PORT to bind (TCP)")
+    s.add_argument("--register", action="append", metavar="PLAN.ozp",
+                   help="serialized trained plan to register (repeatable;"
+                   " id = file stem)")
+    s.add_argument("--profile", action="append", metavar="NAME",
+                   help="named profile to register (repeatable; id = name)")
+    s.add_argument("--max-clients", type=int, default=8,
+                   help="concurrent connections served (default 8)")
+    s.add_argument("--sessions-per-plan", type=int, default=2,
+                   help="compressor sessions pooled per plan (default 2)")
+    s.add_argument("--workers", type=int, default=None,
+                   help="encode/decode threads per session")
+    s.add_argument("--window", type=int, default=None,
+                   help="max in-flight chunks per request (bounds memory)")
+    s.add_argument("--timeout", type=float, default=60.0,
+                   help="per-request socket timeout seconds (default 60)")
+    s.set_defaults(fn=_cmd_serve)
+
+    cl = sub.add_parser("client", help="talk to a running compression daemon")
+    cl.add_argument("action", choices=["compress", "decompress", "stats", "ping"])
+    cl.add_argument("input", nargs="?", default=None)
+    cl.add_argument("-o", "--output", default=None, help="default: INPUT.ozl /"
+                    " strip .ozl")
+    cl.add_argument("--socket", default=None, help="daemon Unix socket path")
+    cl.add_argument("--tcp", default=None, help="daemon HOST:PORT")
+    cl.add_argument("--plan-id", default=None,
+                    help="registered plan id or content digest (compress)")
+    cl.add_argument("--chunk-bytes", default="4MiB",
+                    help="chunk size for the container (default 4MiB, as the"
+                    " offline CLI)")
+    cl.add_argument("--timeout", type=float, default=60.0,
+                    help="client socket timeout seconds (default 60)")
+    cl.set_defaults(fn=_cmd_client)
     return ap
 
 

@@ -20,6 +20,8 @@ __all__ = [
     "sao_profile",
     "csv_profile",
     "struct_profile",
+    "named_profiles",
+    "resolve_profile_spec",
 ]
 
 
@@ -140,3 +142,54 @@ def struct_profile(widths: Sequence[int]) -> Plan:
     for f in fields:
         g.select("generic_auto", f)
     return g.build("struct" + "_".join(map(str, widths)))
+
+
+# ------------------------------------------------------------ spec resolution
+def named_profiles():
+    """Parameterless named profiles: name -> (factory, one-line description).
+
+    The single catalogue behind the CLI's ``--profile``/``profiles`` and the
+    service registry's ``register_profile`` — add a profile here and every
+    surface picks it up.
+    """
+    out = {}
+    for name, fn, desc in [
+        ("generic", generic_profile, "auto selector over any byte stream"),
+        ("numeric", numeric_profile, "auto selector tuned for integer arrays"),
+        ("text", text_profile, "LZ-style text graph (zlib backend)"),
+        ("float32", float32_profile, "float_split fp32 checkpoint graph"),
+        ("bfloat16", bfloat16_profile, "float_split bf16 embedding graph"),
+        ("float64", float64_profile, "float_split fp64 graph"),
+        ("sao", sao_profile, "the paper's SAO star-catalog graph (§IV)"),
+    ]:
+        doc = (fn.__doc__ or "").strip().splitlines()
+        out[name] = (fn, doc[0] if doc and doc[0] else desc)
+    return out
+
+
+def resolve_profile_spec(spec: str) -> Plan:
+    """Resolve a profile spec — a named profile, ``struct:W1,W2,..`` or
+    ``csv:N[:sep]`` — to a Plan.  Raises ValueError on an unknown or
+    malformed spec (library-safe: callers decide how to exit)."""
+    if spec.startswith("struct:"):
+        try:
+            widths = [int(w) for w in spec[len("struct:") :].split(",") if w]
+        except ValueError:
+            raise ValueError(f"profile {spec!r}: bad field widths") from None
+        if not widths or any(w < 1 for w in widths):
+            raise ValueError(f"profile {spec!r}: field widths must be >= 1")
+        return struct_profile(widths)
+    if spec.startswith("csv:"):
+        parts = spec.split(":")
+        try:
+            n_cols = int(parts[1])
+        except (IndexError, ValueError):
+            raise ValueError(f"profile {spec!r}: bad column count") from None
+        return csv_profile(n_cols, parts[2]) if len(parts) > 2 else csv_profile(n_cols)
+    reg = named_profiles()
+    if spec not in reg:
+        raise ValueError(
+            f"unknown profile {spec!r}; known: {', '.join(sorted(reg))},"
+            f" struct:W1,W2,.., csv:N"
+        )
+    return reg[spec][0]()

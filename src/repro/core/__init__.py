@@ -30,6 +30,7 @@ from .engine import (  # noqa: F401
     ExecScratch,
     ResolvedPlan,
     ResolvedStep,
+    SessionPool,
     StreamMeta,
     compress,
     decompress,

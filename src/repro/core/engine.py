@@ -98,6 +98,7 @@ __all__ = [
     "Compressor",
     "CompressorSession",
     "DecompressorSession",
+    "SessionPool",
 ]
 
 FUSED_NAME = "fused_delta_bitpack"
@@ -1104,6 +1105,155 @@ class DecompressorSession(_SessionBase):
             raise wire.FrameError("empty container")
         self.stats["calls"] += 1
         return [_concat_decoded(parts)]
+
+
+class SessionPool:
+    """Thread-safe checkout pool of sessions keyed by plan digest.
+
+    The serving layer keeps one entry per registered plan: a factory plus a
+    bounded set of lazily created :class:`CompressorSession` objects.
+    ``acquire(key)`` is a context manager that checks a session out for one
+    request and returns it on exit; when every session of a key is in use the
+    caller *blocks* until one frees — which is the service's first line of
+    backpressure (the second is each session's bounded in-flight window).
+
+    A session that dies mid-request (the context body raised) is closed and
+    dropped rather than returned, so a poisoned pool member can never serve a
+    later request; the next acquire simply builds a fresh one.
+    """
+
+    def __init__(self, max_per_key: int = 4):
+        if max_per_key < 1:
+            raise ValueError("max_per_key must be >= 1")
+        self.max_per_key = max_per_key
+        self._lock = threading.Condition()
+        self._factories: Dict[str, Callable[[], "CompressorSession"]] = {}
+        self._idle: Dict[str, List["CompressorSession"]] = {}
+        self._created: Dict[str, int] = {}
+        self._counters: Dict[str, Dict[str, int]] = {}
+
+    def register(self, key: str, factory: Callable[[], "CompressorSession"]) -> None:
+        """Associate ``key`` (a plan digest/id) with a session factory."""
+        with self._lock:
+            self._factories[key] = factory
+            self._idle.setdefault(key, [])
+            self._created.setdefault(key, 0)
+            self._counters.setdefault(
+                key, {"acquires": 0, "creates": 0, "waits": 0, "drops": 0}
+            )
+
+    def keys(self) -> List[str]:
+        with self._lock:
+            return sorted(self._factories)
+
+    def acquire(self, key: str, timeout: Optional[float] = None):
+        """Context manager: check a session for ``key`` out of the pool."""
+        return _PoolLease(self, key, timeout)
+
+    def _checkout(self, key: str, timeout: Optional[float]) -> "CompressorSession":
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            if key not in self._factories:
+                raise KeyError(f"no session factory registered for {key!r}")
+            self._counters[key]["acquires"] += 1
+            while True:
+                if key not in self._factories:  # close()d while we waited
+                    raise KeyError(
+                        f"session pool closed while waiting for {key!r}"
+                    )
+                if self._idle[key]:
+                    return self._idle[key].pop()
+                if self._created[key] < self.max_per_key:
+                    self._created[key] += 1
+                    self._counters[key]["creates"] += 1
+                    factory = self._factories[key]
+                    break  # create outside the lock: factories may be slow
+                self._counters[key]["waits"] += 1
+                remaining = (
+                    None if deadline is None else deadline - time.monotonic()
+                )
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"no free session for {key!r} after {timeout:.1f}s"
+                    )
+                self._lock.wait(remaining)
+        try:
+            return factory()
+        except BaseException:
+            with self._lock:
+                if key in self._created:  # close() may have raced us
+                    self._created[key] -= 1
+                # notify_all: one Condition spans every key, so a targeted
+                # notify could wake a waiter for a different key and strand
+                # the one this capacity actually frees
+                self._lock.notify_all()
+            raise
+
+    def _checkin(self, key: str, session: "CompressorSession", ok: bool) -> None:
+        with self._lock:
+            alive = key in self._factories  # close() may have dropped the key
+            if ok and alive:
+                self._idle[key].append(session)
+                drop = None
+            else:
+                if alive:
+                    self._created[key] = max(0, self._created[key] - 1)
+                    self._counters[key]["drops"] += 1
+                drop = session
+            self._lock.notify_all()  # see _checkout: one Condition, many keys
+        if drop is not None:
+            drop.close()
+
+    def stats(self) -> Dict[str, dict]:
+        """Per-key counters: created/idle/in_use plus acquire telemetry."""
+        with self._lock:
+            return {
+                key: {
+                    "created": self._created[key],
+                    "idle": len(self._idle[key]),
+                    "in_use": self._created[key] - len(self._idle[key]),
+                    **self._counters[key],
+                }
+                for key in self._factories
+            }
+
+    def close(self) -> None:
+        """Shut down every idle session and forget all factories.  Sessions
+        currently checked out are closed by their lease on return (their key
+        is gone, so ``_checkin`` drops them)."""
+        with self._lock:
+            idle, self._idle = self._idle, {}
+            self._factories.clear()
+            self._created.clear()
+            self._lock.notify_all()
+        for sessions in idle.values():
+            for s in sessions:
+                s.close()
+
+    def __enter__(self) -> "SessionPool":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+
+class _PoolLease:
+    """The checkout token ``SessionPool.acquire`` hands to a ``with`` block."""
+
+    def __init__(self, pool: SessionPool, key: str, timeout: Optional[float]):
+        self._pool = pool
+        self._key = key
+        self._timeout = timeout
+        self._session: Optional[CompressorSession] = None
+
+    def __enter__(self) -> "CompressorSession":
+        self._session = self._pool._checkout(self._key, self._timeout)
+        return self._session
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        session, self._session = self._session, None
+        if session is not None:
+            self._pool._checkin(self._key, session, ok=exc_type is None)
 
 
 class _Prefixed:

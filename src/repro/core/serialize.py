@@ -8,6 +8,7 @@ never need this module to decode.
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Optional, Tuple
 
 import msgpack
@@ -16,7 +17,7 @@ from .graph import KIND_CODEC, KIND_SELECTOR, Plan, PlanNode, _freeze, _thaw
 
 SERIAL_VERSION = 1
 
-__all__ = ["serialize_plan", "deserialize_plan"]
+__all__ = ["serialize_plan", "deserialize_plan", "plan_digest"]
 
 
 def plan_to_dict(
@@ -88,3 +89,21 @@ def serialize_plan(
 
 def deserialize_plan(blob: bytes) -> Tuple[Plan, dict]:
     return plan_from_dict(msgpack.unpackb(blob, raw=False))
+
+
+def plan_digest(
+    plan: Plan,
+    *,
+    format_version: Optional[int] = None,
+    level: Optional[int] = None,
+) -> str:
+    """Content address of a compression program: sha256 over the canonical
+    serialized form (topology + params + the deployment knobs that change
+    output bytes).  Two registry entries with the same digest are guaranteed
+    to emit identical frames for identical input — the plan name is *not*
+    hashed, so renaming a registered plan never changes its address.
+    """
+    d = plan_to_dict(plan, format_version=format_version, level=level)
+    d["name"] = ""  # plan_to_dict falls back to plan.name; strip it here
+    blob = msgpack.packb(d, use_bin_type=True)
+    return hashlib.sha256(blob).hexdigest()

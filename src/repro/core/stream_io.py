@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import io
 import os
+import tempfile
 from contextlib import contextmanager
 from pathlib import Path
 from typing import BinaryIO, Iterator, Optional, Union
@@ -55,8 +56,79 @@ def _open(src: PathOrFile, mode: str):
         yield src  # caller-owned file object: not closed here
 
 
+def same_path(src: PathOrFile, dst: PathOrFile) -> bool:
+    """True when two path-like arguments name the same file.
+
+    Uses ``os.path.samefile`` (inode identity: hardlinks, symlinks) when both
+    exist, falling back to resolved-path equality for a not-yet-created dst.
+    File objects never compare equal — we cannot see their targets.
+    """
+    if not (
+        isinstance(src, (str, os.PathLike)) and isinstance(dst, (str, os.PathLike))
+    ):
+        return False
+    try:
+        if os.path.exists(src) and os.path.exists(dst):
+            return os.path.samefile(src, dst)
+    except OSError:
+        pass
+    return os.path.realpath(os.fspath(src)) == os.path.realpath(os.fspath(dst))
+
+
+@contextmanager
+def _atomic_sink(dst: PathOrFile):
+    """Open ``dst`` for writing without ever truncating the final path.
+
+    Path destinations are written through a same-directory temp file that is
+    ``os.replace``d over ``dst`` only after the writer body completes — so
+    ``compress_file(f, f)`` reads the intact source while the output builds
+    elsewhere (the old in-place open truncated the input before the first
+    read), and a crash mid-write never leaves a partial output behind.  File
+    objects pass through untouched: the caller owns their lifecycle.
+    """
+    if not isinstance(dst, (str, os.PathLike)):
+        yield dst
+        return
+    final = Path(dst)
+    fd, tmp_name = tempfile.mkstemp(
+        dir=final.parent or Path("."), prefix=final.name + ".", suffix=".tmp"
+    )
+    tmp = Path(tmp_name)
+    try:
+        # mkstemp creates 0600: restore the mode open(dst,"wb") would have
+        # given — the existing dst's mode on rewrite, else 0666 & ~umask
+        try:
+            mode = os.stat(final).st_mode & 0o7777
+        except OSError:
+            umask = os.umask(0)
+            os.umask(umask)
+            mode = 0o666 & ~umask
+        os.chmod(fd, mode)
+        # "w+b"-equivalent: mkstemp opens O_RDWR, which the unknown-length
+        # container path needs for its backpatch + CRC re-read
+        with os.fdopen(fd, "r+b") as f:
+            yield f
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+    except BaseException:
+        try:
+            tmp.unlink()
+        except OSError:
+            pass
+        raise
+
+
 def _input_size(f: BinaryIO) -> Optional[int]:
-    """Remaining byte count, when the source can tell us (regular files)."""
+    """Remaining byte count, when the source can tell us (regular files).
+
+    Non-seekable sources (sockets, pipes) may volunteer the total via a
+    ``size_hint`` attribute — the service's request-body reader does, which is
+    what keeps the daemon on the known-chunk-count (byte-identical) path.
+    """
+    hint = getattr(f, "size_hint", None)
+    if hint is not None:
+        return int(hint)
     try:
         if not f.seekable():
             return None
@@ -64,7 +136,9 @@ def _input_size(f: BinaryIO) -> Optional[int]:
         end = f.seek(0, os.SEEK_END)
         f.seek(pos)
         return end - pos
-    except (OSError, ValueError):
+    except (OSError, ValueError, AttributeError):
+        # AttributeError: minimal readers (e.g. the service's BlockReader)
+        # expose read() only — treat like any non-seekable source
         return None
 
 
@@ -128,9 +202,9 @@ def compress_file(
             f" plan {plan.name!r}; reuse one session per plan"
         )
     try:
-        # "w+b": the unknown-length container path backpatches its chunk
-        # count and re-reads the body for the CRC trailer
-        with _open(src, "rb") as fin, _open(dst, "w+b") as fout:
+        # the sink must be read/writable: the unknown-length container path
+        # backpatches its chunk count and re-reads the body for the CRC trailer
+        with _open(src, "rb") as fin, _atomic_sink(dst) as fout:
             if not chunk_bytes:
                 data = fin.read()
                 frame = session.compress(serial(data), chunk_bytes=0)
@@ -220,7 +294,7 @@ def decompress_file(
         session = DecompressorSession(n_workers=n_workers, window=window)
     try:
         bytes_in = bytes_out = chunks = 0
-        with _open(src, "rb") as fin, _open(dst, "wb") as fout:
+        with _open(src, "rb") as fin, _atomic_sink(dst) as fout:
             counted = _CountingReader(fin)
             for s in session.iter_frames(counted):
                 payload = s.content_bytes()

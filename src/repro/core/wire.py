@@ -368,7 +368,7 @@ def write_container(version: int, chunk_frames: Sequence[bytes]) -> bytes:
     return buf.getvalue()
 
 
-def iter_container_frames(reader) -> Iterator[bytes]:
+def iter_container_frames(reader, *, allow_empty: bool = False) -> Iterator[bytes]:
     """Yield chunk frames from a file-like container with bounded memory.
 
     Peak memory is one chunk frame (plus the fixed header), never the whole
@@ -379,6 +379,12 @@ def iter_container_frames(reader) -> Iterator[bytes]:
     each chunk frame carries its own CRC, which the universal decoder verifies
     per chunk, and the iterator still raises before completing, so a consumer
     that drains it never mistakes a corrupt container for a complete one.
+
+    ``allow_empty=True`` accepts a structurally valid zero-chunk container
+    (yielding nothing) — a record our writers refuse to produce but a foreign
+    encoder may legally emit; structural readers such as ``inspect`` must
+    tolerate it.  Decoding keeps the default rejection: an empty container
+    regenerates no stream.
     """
     from .versioning import CONTAINER_MIN_VERSION
 
@@ -393,7 +399,7 @@ def iter_container_frames(reader) -> Iterator[bytes]:
     crc = zlib.crc32(raw, crc)
     if n_chunks > 1_000_000:
         raise FrameError("implausible chunk count")
-    if n_chunks == 0:
+    if n_chunks == 0 and not allow_empty:
         raise FrameError("empty container")
     for _ in range(n_chunks):
         flen, raw = read_stream_varint(reader)

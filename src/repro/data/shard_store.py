@@ -8,6 +8,9 @@ wins) and feeds the straggler-tolerant Prefetcher.
 from __future__ import annotations
 
 import json
+import os
+import shutil
+import tempfile
 import zlib
 from pathlib import Path
 from typing import Dict, Iterator, List, Optional
@@ -18,40 +21,133 @@ from repro.distributed.checkpoint import compress_leaf, decompress_leaf
 
 
 class CompressedShardStore:
+    # a tmp dir untouched for this long is a crashed writer's leftover; a
+    # *live* concurrent writer's staging dir is always younger (it is being
+    # written right now), so the sweep never deletes in-flight work
+    STALE_TMP_SECONDS = 15 * 60
+
     def __init__(self, directory):
         self.directory = Path(directory)
         self.directory.mkdir(parents=True, exist_ok=True)
 
-    def write_shard(self, idx: int, arrays: Dict[str, np.ndarray]) -> dict:
-        tmp = self.directory / f"shard_{idx:06d}.tmp"
-        final = self.directory / f"shard_{idx:06d}"
-        tmp.mkdir(parents=True, exist_ok=True)
-        entries = []
-        raw = comp = 0
-        for name, arr in arrays.items():
-            frame = compress_leaf(np.asarray(arr))
-            (tmp / f"{name}.ozl").write_bytes(frame)
-            raw += arr.nbytes
-            comp += len(frame)
-            entries.append(
-                {
-                    "name": name,
-                    "shape": list(arr.shape),
-                    "dtype": str(arr.dtype),
-                    "raw_bytes": int(arr.nbytes),
-                    "compressed_bytes": len(frame),
-                    "crc32": zlib.crc32(frame) & 0xFFFFFFFF,
-                }
-            )
-        meta = {"idx": idx, "entries": entries, "raw_bytes": raw, "compressed_bytes": comp}
-        (tmp / "meta.json").write_text(json.dumps(meta))
-        import os
+    def _stale_tmps(self, idx: int) -> List[Path]:
+        import time
 
-        os.replace(tmp, final)
+        cutoff = time.time() - self.STALE_TMP_SECONDS
+        final_exists = (self.directory / f"shard_{idx:06d}").exists()
+        candidates = [
+            d for d in self.directory.glob(f"shard_{idx:06d}.*.tmp") if d.is_dir()
+        ]
+        legacy = self.directory / f"shard_{idx:06d}.tmp"
+        if legacy.is_dir():  # pre-atomic-rewrite fixed tmp name (old crashes)
+            candidates.append(legacy)
+        out = []
+        for d in candidates:
+            if ".old." in d.name and not final_exists:
+                continue  # the aside may be the only surviving copy: keep it
+            try:
+                if d.stat().st_mtime <= cutoff:
+                    out.append(d)
+            except OSError:
+                pass  # vanished under us: someone else cleaned it
+        return out
+
+    def _recover_aside(self, idx: int) -> None:
+        """Self-heal after a crash between rewrite's two ``os.replace`` calls:
+        if the shard dir is missing but a renamed-aside copy exists, promote
+        the newest aside back to the canonical path."""
+        final = self.directory / f"shard_{idx:06d}"
+        if final.exists():
+            return
+        asides = [
+            d
+            for d in self.directory.glob(f"shard_{idx:06d}.old.*.tmp")
+            if d.is_dir()
+        ]
+        if not asides:
+            return
+        asides.sort(key=lambda d: d.stat().st_mtime)
+        try:
+            os.replace(asides[-1], final)
+        except OSError:
+            pass  # another process recovered first
+
+    def write_shard(self, idx: int, arrays: Dict[str, np.ndarray]) -> dict:
+        """Write (or atomically rewrite) one shard directory.
+
+        Every call stages into a *fresh* unique tmp dir — reusing a stale
+        ``.tmp`` left by a crashed writer would leak its orphan ``.ozl``
+        entries into the new shard (present on disk, absent from
+        ``meta.json``).  Rewriting an existing shard renames it aside first
+        (``os.replace`` cannot replace a non-empty directory), swaps the new
+        dir in, then deletes the old one; a concurrent reader may observe the
+        brief gap between the two renames as a missing dir (one writer per
+        shard is the contract — readers retry or tolerate), but a *crash* in
+        that gap is recovered: the aside copy is never swept while the
+        canonical dir is missing, and the next write or read promotes it
+        back.  Stale tmps from crashed writers (age-gated, so a live
+        concurrent writer's staging is untouched) are swept on the way out.
+        """
+        self._recover_aside(idx)
+        final = self.directory / f"shard_{idx:06d}"
+        tmp = Path(
+            tempfile.mkdtemp(
+                dir=self.directory, prefix=f"shard_{idx:06d}.", suffix=".tmp"
+            )
+        )
+        try:
+            entries = []
+            raw = comp = 0
+            for name, arr in arrays.items():
+                arr = np.asarray(arr)
+                frame = compress_leaf(arr)
+                (tmp / f"{name}.ozl").write_bytes(frame)
+                raw += arr.nbytes
+                comp += len(frame)
+                entries.append(
+                    {
+                        "name": name,
+                        "shape": list(arr.shape),
+                        "dtype": str(arr.dtype),
+                        "raw_bytes": int(arr.nbytes),
+                        "compressed_bytes": len(frame),
+                        "crc32": zlib.crc32(frame) & 0xFFFFFFFF,
+                    }
+                )
+            meta = {
+                "idx": idx,
+                "entries": entries,
+                "raw_bytes": raw,
+                "compressed_bytes": comp,
+            }
+            (tmp / "meta.json").write_text(json.dumps(meta))
+            if final.exists():
+                # rename-aside-then-replace: readers only ever see a complete
+                # shard dir (old or new), never a partially deleted one
+                aside = Path(
+                    tempfile.mkdtemp(
+                        dir=self.directory,
+                        prefix=f"shard_{idx:06d}.old.",
+                        suffix=".tmp",
+                    )
+                )
+                os.rmdir(aside)
+                os.replace(final, aside)
+                os.replace(tmp, final)
+                shutil.rmtree(aside, ignore_errors=True)
+            else:
+                os.replace(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        for stale in self._stale_tmps(idx):
+            shutil.rmtree(stale, ignore_errors=True)
         return meta
 
     def read_shard(self, idx: int) -> Dict[str, np.ndarray]:
         d = self.directory / f"shard_{idx:06d}"
+        if not d.exists():
+            self._recover_aside(idx)
         meta = json.loads((d / "meta.json").read_text())
         out = {}
         for e in meta["entries"]:

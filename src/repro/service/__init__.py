@@ -1,0 +1,25 @@
+"""repro.service — the long-lived compression daemon (paper §VIII).
+
+One universal decoder plus registered trained configurations, served: a
+:class:`~repro.service.server.CompressionServer` keeps a checkout pool of
+:class:`~repro.core.engine.CompressorSession` objects per registered plan and
+one shared :class:`~repro.core.engine.DecompressorSession`, so production
+callers pay plan resolution, coder-table construction, and thread-pool spin-up
+once — not per invocation, which is the deployment friction the one-shot CLI
+carries.  Frames produced through the service are byte-identical to the
+offline CLI for the same plan and chunk settings.
+
+Public API:
+    Wire protocol ......... repro.service.protocol  (framing, fail-closed)
+    Plan registry ......... repro.service.registry  (id + content digest)
+    Daemon ................ repro.service.server    (CompressionServer)
+    Blocking client ....... repro.service.client    (ServiceClient)
+"""
+from .protocol import (  # noqa: F401
+    PROTOCOL_VERSION,
+    ProtocolError,
+    parse_address,
+)
+from .registry import PlanRegistry, RegisteredPlan  # noqa: F401
+from .server import CompressionServer  # noqa: F401
+from .client import ServiceClient  # noqa: F401

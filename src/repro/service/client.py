@@ -1,0 +1,163 @@
+"""Blocking client for the compression daemon.
+
+One :class:`ServiceClient` holds one persistent connection; every call is a
+complete request/response exchange, so a client object is safe to reuse for
+many operations (and cheap: connection setup happens once).  File payloads
+stream through in protocol blocks — the client never loads a file whole —
+and file outputs are written with the same temp-file + atomic-rename
+discipline as ``stream_io`` (``client compress F -o F`` is safe).
+
+    with ServiceClient("unix:/tmp/ozl.sock") as c:
+        frame, info = c.compress_bytes(b"...", plan="text")
+        data, info = c.decompress_bytes(frame)
+        c.compress_file("corpus.bin", "corpus.ozl", plan="logs")
+        print(c.stats()["requests"])
+"""
+from __future__ import annotations
+
+import os
+import socket
+from typing import Iterable, Optional, Tuple, Union
+
+from repro.core.stream_io import DEFAULT_CHUNK_BYTES, _atomic_sink, _open
+
+from . import protocol as P
+
+__all__ = ["ServiceClient"]
+
+PathOrBytes = Union[bytes, bytearray, memoryview]
+
+
+class ServiceClient:
+    def __init__(
+        self,
+        address: Union[str, Tuple[str, int]],
+        *,
+        timeout: float = 60.0,
+        block_bytes: int = P.DEFAULT_BLOCK_BYTES,
+    ):
+        family, target = P.parse_address(address)
+        self.address = address
+        self.block_bytes = block_bytes
+        self._sock = socket.socket(family, socket.SOCK_STREAM)
+        self._sock.settimeout(timeout)
+        self._sock.connect(target)
+        self._r = self._sock.makefile("rb")
+        self._w = self._sock.makefile("wb")
+
+    # -------------------------------------------------------------- exchange
+    def _call(
+        self,
+        verb: int,
+        header: dict,
+        body: Optional[Iterable[bytes]] = None,
+    ) -> Tuple[dict, P.BlockReader]:
+        """One request/response -> (response header, body reader).
+
+        Raises RuntimeError on a server-reported error, ProtocolError on
+        malformed traffic.  The caller must drain the returned body before
+        issuing the next call.
+        """
+        P.write_request(self._w, verb, header, body)
+        status, resp, rbody = P.read_response(self._r)
+        if status == P.STATUS_ERROR:
+            rbody.drain()
+            raise RuntimeError(
+                f"service error: {resp.get('error', 'unknown error')}"
+            )
+        return resp, rbody
+
+    # -------------------------------------------------------------- commands
+    def ping(self) -> dict:
+        resp, body = self._call(P.VERB_PING, {})
+        body.drain()
+        return resp
+
+    def stats(self) -> dict:
+        resp, body = self._call(P.VERB_STATS, {})
+        body.drain()
+        return resp
+
+    def compress_bytes(
+        self,
+        data: PathOrBytes,
+        plan: str,
+        *,
+        chunk_bytes: Optional[int] = DEFAULT_CHUNK_BYTES,
+    ) -> Tuple[bytes, dict]:
+        """Compress an in-memory payload -> (wire frame, server stats)."""
+        header = {
+            "plan": plan,
+            "size": len(data),
+            "chunk_bytes": int(chunk_bytes or 0),
+        }
+        resp, body = self._call(
+            P.VERB_COMPRESS, header, P.iter_body_blocks(data, self.block_bytes)
+        )
+        return body.read(), resp
+
+    def decompress_bytes(self, frame: PathOrBytes) -> Tuple[bytes, dict]:
+        """Universal decode of an in-memory frame -> (content bytes, stats)."""
+        resp, body = self._call(
+            P.VERB_DECOMPRESS,
+            {"size": len(frame)},
+            P.iter_body_blocks(frame, self.block_bytes),
+        )
+        return body.read(), resp
+
+    def compress_file(
+        self,
+        src,
+        dst,
+        plan: str,
+        *,
+        chunk_bytes: Optional[int] = DEFAULT_CHUNK_BYTES,
+    ) -> dict:
+        """Stream a file through the daemon -> stats dict (atomic dst)."""
+        size = os.path.getsize(src) if isinstance(src, (str, os.PathLike)) else None
+        header = {"plan": plan, "chunk_bytes": int(chunk_bytes or 0)}
+        if size is not None:
+            header["size"] = size
+        with _open(src, "rb") as fin:
+            resp, body = self._call(
+                P.VERB_COMPRESS, header, P.iter_body_blocks(fin, self.block_bytes)
+            )
+        self._body_to_file(body, dst)
+        return resp
+
+    def decompress_file(self, src, dst) -> dict:
+        """Stream any frame/container through the universal decoder -> stats."""
+        size = os.path.getsize(src) if isinstance(src, (str, os.PathLike)) else None
+        header = {} if size is None else {"size": size}
+        with _open(src, "rb") as fin:
+            resp, body = self._call(
+                P.VERB_DECOMPRESS, header, P.iter_body_blocks(fin, self.block_bytes)
+            )
+        self._body_to_file(body, dst)
+        return resp
+
+    def _body_to_file(self, body: P.BlockReader, dst) -> None:
+        with _atomic_sink(dst) as fout:
+            while True:
+                piece = body.read(self.block_bytes)
+                if not piece:
+                    break
+                fout.write(piece)
+
+    # ------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        for f in (self._w, self._r):
+            try:
+                f.close()
+            except OSError:
+                pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "ServiceClient":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

@@ -1,0 +1,385 @@
+"""The compression daemon: hot sessions behind a socket.
+
+A :class:`CompressionServer` owns exactly the state the one-shot CLI rebuilds
+on every invocation — resolved plans, coder-table caches, thread pools — and
+serves it to many concurrent clients over the framed protocol
+(``repro.service.protocol``) on a Unix or TCP socket:
+
+  * one :class:`~repro.core.engine.SessionPool` entry per registered plan,
+    keyed by content digest, with sessions checked out per request;
+  * one shared :class:`~repro.core.engine.DecompressorSession` (decoding is
+    plan-free and its internals are lock-guarded);
+  * request bodies stream through :class:`~repro.service.protocol.BlockReader`
+    into ``stream_io`` — **byte-identical** frames to the offline CLI for the
+    same plan and chunk settings, because it *is* the same code path.
+
+Memory stays bounded under load from three directions: ``max_clients`` caps
+concurrent requests, each compression session's in-flight ``window`` bounds
+chunks per request (the server reads request blocks only as the window frees,
+so TCP flow control pushes back on fast senders), and results spool to disk
+past ``spool_bytes``.  A request that fails never wedges its worker: the body
+is drained (or the connection dropped), an error response is attempted, and
+the checked-out session is returned — or discarded, if it failed mid-use.
+"""
+from __future__ import annotations
+
+import socket
+import tempfile
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+from typing import Optional
+
+from repro.core import DecompressorSession, SessionPool
+from repro.core import stream_io, wire
+from repro.core.stream_io import DEFAULT_CHUNK_BYTES
+
+from . import protocol as P
+from .registry import PlanRegistry, RegisteredPlan
+
+__all__ = ["CompressionServer"]
+
+MAX_CHUNK_BYTES = 256 << 20
+
+
+class _Spool(tempfile.SpooledTemporaryFile):
+    """SpooledTemporaryFile plus the io predicates Python 3.10 forgot
+    (``seekable``/``readable``/``writable`` arrived in 3.11) — the
+    unknown-length ``ContainerWriter`` probes them before backpatching."""
+
+    def seekable(self) -> bool:
+        return True
+
+    def readable(self) -> bool:
+        return True
+
+    def writable(self) -> bool:
+        return True
+
+
+class CompressionServer:
+    def __init__(
+        self,
+        registry: Optional[PlanRegistry] = None,
+        *,
+        socket_path: Optional[str] = None,
+        host: Optional[str] = None,
+        port: int = 0,
+        max_clients: int = 8,
+        sessions_per_plan: int = 2,
+        n_workers: Optional[int] = None,
+        window: Optional[int] = None,
+        request_timeout: float = 60.0,
+        spool_bytes: int = 32 << 20,
+        max_body_bytes: int = 1 << 30,
+    ):
+        if (socket_path is None) == (host is None):
+            raise ValueError("pass exactly one of socket_path= or host=")
+        self.registry = registry if registry is not None else PlanRegistry()
+        self.max_clients = max_clients
+        self.n_workers = n_workers
+        self.window = window
+        self.request_timeout = request_timeout
+        self.spool_bytes = spool_bytes
+        self.max_body_bytes = max_body_bytes
+        self.pool = SessionPool(max_per_key=sessions_per_plan)
+        self._decoder = DecompressorSession(n_workers=n_workers, window=window)
+        self._started = time.monotonic()
+        self._shutdown = threading.Event()
+        self._conn_lock = threading.Lock()
+        self._conns: set = set()
+        self._accept_thread: Optional[threading.Thread] = None
+        self._stats_lock = threading.Lock()
+        self._stats = {
+            "connections": 0,
+            "active_connections": 0,
+            "errors": 0,
+            "requests": {name: 0 for name in P.VERBS.values()},
+            "bytes_in": 0,
+            "bytes_out": 0,
+        }
+
+        if socket_path is not None:
+            self.socket_path: Optional[str] = str(socket_path)
+            Path(self.socket_path).unlink(missing_ok=True)
+            self._listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            self._listener.bind(self.socket_path)
+            self.address = f"unix:{self.socket_path}"
+        else:
+            self.socket_path = None
+            self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            self._listener.bind((host, port))
+            bound_host, bound_port = self._listener.getsockname()[:2]
+            self.address = f"{bound_host}:{bound_port}"
+        self._listener.listen(max_clients * 2)
+        # accept() must wake up for shutdown: closing a socket does not
+        # reliably interrupt a thread blocked in accept(), so poll instead
+        self._listener.settimeout(0.1)
+        self._executor = ThreadPoolExecutor(
+            max_workers=max_clients, thread_name_prefix="ozl-serve"
+        )
+
+    # -------------------------------------------------------------- lifecycle
+    def start(self) -> "CompressionServer":
+        """Accept connections on a background thread (returns immediately)."""
+        self._accept_thread = threading.Thread(
+            target=self.serve_forever, name="ozl-serve-accept", daemon=True
+        )
+        self._accept_thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        while not self._shutdown.is_set():
+            try:
+                conn, _addr = self._listener.accept()
+            except socket.timeout:
+                continue  # periodic shutdown-flag check
+            except OSError:
+                break  # listener closed by shutdown()
+            with self._conn_lock:
+                if self._shutdown.is_set():
+                    conn.close()
+                    break
+                self._conns.add(conn)
+            self._bump(connections=1, active_connections=1)
+            self._executor.submit(self._handle_conn, conn)
+
+    def request_stop(self) -> None:
+        """Ask the accept loop to exit (signal-handler safe, non-blocking).
+
+        ``serve_forever`` returns shortly after; call :meth:`shutdown` (or let
+        the ``finally`` around ``serve_forever`` do it) for the full cleanup.
+        """
+        self._shutdown.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+
+    def shutdown(self) -> None:
+        """Stop accepting, drop live connections, release every session."""
+        self.request_stop()
+        with self._conn_lock:
+            conns = list(self._conns)
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+        self._executor.shutdown(wait=True)
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5)
+        self.pool.close()
+        self._decoder.close()
+        if self.socket_path:
+            Path(self.socket_path).unlink(missing_ok=True)
+
+    def __enter__(self) -> "CompressionServer":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown()
+
+    # -------------------------------------------------------------- plumbing
+    def _bump(self, *, verb: Optional[str] = None, **deltas: int) -> None:
+        with self._stats_lock:
+            if verb is not None:
+                self._stats["requests"][verb] += 1
+            for k, v in deltas.items():
+                self._stats[k] += v
+
+    def _session_key(self, entry: RegisteredPlan) -> str:
+        """Ensure a pool factory exists for this plan -> its digest key."""
+        if entry.digest not in self.pool.keys():
+            comp = entry.compressor
+            self.pool.register(
+                entry.digest,
+                lambda: comp.session(
+                    chunk_bytes=None, n_workers=self.n_workers, window=self.window
+                ),
+            )
+        return entry.digest
+
+    def _handle_conn(self, sock: socket.socket) -> None:
+        sock.settimeout(self.request_timeout)
+        r = sock.makefile("rb")
+        w = sock.makefile("wb")
+        try:
+            while not self._shutdown.is_set():
+                try:
+                    first = r.read(1)
+                except (OSError, socket.timeout):
+                    # idle past request_timeout, or hung up between requests:
+                    # not an error — reclaim the worker quietly
+                    return
+                if not first:
+                    return  # clean client hangup between requests
+                try:
+                    verb, header, body = P.read_request_rest(r, first)
+                except (P.ProtocolError, OSError, socket.timeout):
+                    # a *started* request that stalls or breaks is real
+                    # malformed traffic
+                    self._bump(errors=1)
+                    self._try_error(w, "malformed request (connection dropped)")
+                    return
+                self._bump(verb=P.VERBS[verb])
+                try:
+                    self._dispatch(verb, header, body, w)
+                except (P.ProtocolError, OSError, socket.timeout):
+                    # framing is broken (or the peer vanished): no resync
+                    # point exists, so drop the connection
+                    self._bump(errors=1)
+                    self._try_error(w, "request body unreadable")
+                    return
+                except Exception as err:
+                    # request-level failure with intact framing: report and
+                    # keep serving this connection
+                    self._bump(errors=1)
+                    try:
+                        body.drain()
+                    except (P.ProtocolError, OSError, socket.timeout):
+                        self._try_error(w, f"{type(err).__name__}: {err}")
+                        return
+                    if not self._try_error(w, f"{type(err).__name__}: {err}"):
+                        return
+        finally:
+            for f in (w, r):
+                try:
+                    f.close()
+                except OSError:
+                    pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+            with self._conn_lock:
+                self._conns.discard(sock)
+            self._bump(active_connections=-1)
+
+    def _try_error(self, w, message: str) -> bool:
+        try:
+            P.write_response(w, P.STATUS_ERROR, {"error": message})
+            return True
+        except (OSError, ValueError):
+            return False
+
+    # ------------------------------------------------------------- dispatch
+    def _dispatch(self, verb: int, header: dict, body: P.BlockReader, w) -> None:
+        if verb == P.VERB_PING:
+            body.drain()
+            P.write_response(w, P.STATUS_OK, self._ping_header())
+        elif verb == P.VERB_STATS:
+            body.drain()
+            P.write_response(w, P.STATUS_OK, self.stats())
+        elif verb == P.VERB_COMPRESS:
+            self._do_compress(header, body, w)
+        elif verb == P.VERB_DECOMPRESS:
+            self._do_decompress(header, body, w)
+        else:  # unreachable: read_request validated the verb
+            raise P.ProtocolError(f"unknown verb {verb}")
+
+    def _ping_header(self) -> dict:
+        return {
+            "ok": True,
+            "protocol_version": P.PROTOCOL_VERSION,
+            "plans": len(self.registry),
+            "uptime_s": round(time.monotonic() - self._started, 3),
+        }
+
+    def _spool(self):
+        return _Spool(max_size=self.spool_bytes)
+
+    def _do_compress(self, header: dict, body: P.BlockReader, w) -> None:
+        key = header.get("plan")
+        if not key or not isinstance(key, str):
+            raise ValueError("compress request needs a 'plan' header")
+        entry = self.registry.resolve(key)
+        chunk_bytes = header.get("chunk_bytes")
+        if chunk_bytes is None:
+            chunk_bytes = DEFAULT_CHUNK_BYTES
+        chunk_bytes = int(chunk_bytes)
+        if chunk_bytes < 0 or chunk_bytes > MAX_CHUNK_BYTES:
+            raise ValueError(f"bad chunk_bytes {chunk_bytes}")
+        declared = body.size_hint
+        # the limit cuts a lying/hostile sender off at the first over-budget
+        # block — before its body is buffered — keeping the bare-frame path
+        # (which reads the whole payload) bounded by what was declared
+        body.limit = declared if declared is not None else self.max_body_bytes
+        pool_key = self._session_key(entry)
+        with self._spool() as out:
+            with self.pool.acquire(pool_key, timeout=self.request_timeout) as sess:
+                stats = stream_io.compress_file(
+                    body,
+                    out,
+                    entry.compressor.plan,
+                    chunk_bytes=chunk_bytes or None,
+                    session=sess,
+                )
+            # fail closed on size lies: compare the bytes that actually
+            # arrived (not stats["bytes_in"], which on the known-size chunked
+            # path *is* the declared value) against the declaration — a short
+            # body must never be silently compressed as if complete
+            body.drain()
+            if declared is not None and body.bytes_read != declared:
+                raise ValueError(
+                    f"request declared size={declared} but sent"
+                    f" {body.bytes_read} bytes"
+                )
+            self._bump(
+                bytes_in=stats["bytes_in"], bytes_out=stats["bytes_out"]
+            )
+            out.seek(0)
+            P.write_response(
+                w,
+                P.STATUS_OK,
+                {
+                    **stats,
+                    "plan_id": entry.plan_id,
+                    "digest": entry.digest,
+                    "size": stats["bytes_out"],
+                },
+                P.iter_body_blocks(out),
+            )
+
+    def _do_decompress(self, header: dict, body: P.BlockReader, w) -> None:
+        declared = body.size_hint
+        body.limit = declared if declared is not None else self.max_body_bytes
+        with self._spool() as out:
+            stats = stream_io.decompress_file(body, out, session=self._decoder)
+            if body.drain():
+                raise wire.FrameError("trailing garbage after frame")
+            self._bump(bytes_in=stats["bytes_in"], bytes_out=stats["bytes_out"])
+            out.seek(0)
+            P.write_response(
+                w,
+                P.STATUS_OK,
+                {**stats, "size": stats["bytes_out"]},
+                P.iter_body_blocks(out),
+            )
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        with self._stats_lock:
+            counters = {
+                "connections": self._stats["connections"],
+                "active_connections": self._stats["active_connections"],
+                "errors": self._stats["errors"],
+                "requests": dict(self._stats["requests"]),
+                "bytes_in": self._stats["bytes_in"],
+                "bytes_out": self._stats["bytes_out"],
+            }
+        return {
+            **self._ping_header(),
+            "address": self.address,
+            "max_clients": self.max_clients,
+            **counters,
+            "registry": self.registry.entries(),
+            "sessions": self.pool.stats(),
+            "decoder": dict(self._decoder.stats),
+        }

@@ -1,0 +1,245 @@
+"""Regression tests for the CLI/stream_io data-loss and edge-case bugs.
+
+The worst of them: ``python -m repro compress F -o F`` opened the output
+``w+b`` *before* the first read, truncating the source to zero bytes and then
+"compressing" the empty file — silent, total data loss.  The fix routes every
+path-destined write through a same-directory temp file with an atomic
+``os.replace``, so in-place operation reads the intact source, and a crash
+mid-write never leaves a partial output.
+"""
+import io
+import struct
+import zlib
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.cli import main
+from repro.codecs import profiles as P
+from repro.core import compress, serial, stream_io, wire
+
+DATA = b"the quick brown fox jumps over the lazy dog\n" * 250  # 11,000 bytes
+
+
+# ----------------------------------------------------------- in-place safety
+def test_compress_file_in_place_roundtrips(tmp_path):
+    f = tmp_path / "corpus.bin"
+    f.write_bytes(DATA)
+    stats = stream_io.compress_file(f, f, P.generic_profile(), chunk_bytes=4096)
+    assert stats["bytes_in"] == len(DATA)  # read the real bytes, not 0
+    frame = f.read_bytes()
+    assert frame[:4] in (wire.MAGIC, wire.CONTAINER_MAGIC)
+    out = tmp_path / "corpus.out"
+    stream_io.decompress_file(f, out)
+    assert out.read_bytes() == DATA
+
+
+def test_decompress_file_in_place_roundtrips(tmp_path):
+    f = tmp_path / "corpus.ozl"
+    f.write_bytes(compress(P.generic_profile(), serial(DATA), chunk_bytes=2048))
+    stats = stream_io.decompress_file(f, f)
+    assert stats["bytes_out"] == len(DATA)
+    assert f.read_bytes() == DATA
+
+
+def test_cli_compress_in_place_roundtrips(tmp_path):
+    f = tmp_path / "corpus.bin"
+    f.write_bytes(DATA)
+    assert main(["compress", str(f), "-o", str(f), "--profile", "generic"]) == 0
+    assert f.stat().st_size > 0
+    assert main(["decompress", str(f), "-o", str(f)]) == 0
+    assert f.read_bytes() == DATA
+
+
+def test_cli_default_output_paths_unharmed(tmp_path):
+    """The no--o defaults (INPUT.ozl / strip-.ozl) must leave inputs intact."""
+    f = tmp_path / "corpus.bin"
+    f.write_bytes(DATA)
+    assert main(["compress", str(f), "--profile", "generic"]) == 0
+    assert f.read_bytes() == DATA  # source untouched
+    ozl = tmp_path / "corpus.bin.ozl"
+    assert ozl.exists()
+    assert main(["decompress", str(ozl)]) == 0  # strips .ozl -> corpus.bin
+    assert f.read_bytes() == DATA
+
+
+def test_in_place_via_symlink_roundtrips(tmp_path):
+    """samefile-style aliasing (symlink to the source) is still in-place."""
+    real = tmp_path / "real.bin"
+    real.write_bytes(DATA)
+    link = tmp_path / "alias.bin"
+    link.symlink_to(real)
+    stream_io.compress_file(link, real, P.generic_profile(), chunk_bytes=0)
+    out = tmp_path / "out.bin"
+    stream_io.decompress_file(real, out)
+    assert out.read_bytes() == DATA
+
+
+def test_failed_compress_leaves_no_partial_output(tmp_path):
+    src = tmp_path / "corpus.bin"
+    src.write_bytes(DATA)
+    dst = tmp_path / "corpus.ozl"
+    with pytest.raises(Exception):
+        stream_io.compress_file(src, dst, P.generic_profile(), chunk_bytes=-5)
+    assert not dst.exists()
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_same_path_detection(tmp_path):
+    a = tmp_path / "a.bin"
+    a.write_bytes(b"x")
+    assert stream_io.same_path(a, a)
+    assert stream_io.same_path(str(a), a)
+    assert stream_io.same_path(a, tmp_path / ".." / tmp_path.name / "a.bin")
+    assert not stream_io.same_path(a, tmp_path / "b.bin")
+    assert not stream_io.same_path(io.BytesIO(), io.BytesIO())
+    link = tmp_path / "ln.bin"
+    link.symlink_to(a)
+    assert stream_io.same_path(a, link)
+
+
+def test_atomic_sink_passes_file_objects_through():
+    buf = io.BytesIO()
+    with stream_io._atomic_sink(buf) as f:
+        assert f is buf
+
+
+def test_atomic_sink_honors_umask_and_preserves_modes(tmp_path):
+    """mkstemp's private 0600 must not leak to outputs: fresh files get the
+    umask-honoring mode open() would have given, rewrites keep dst's mode."""
+    import os
+
+    src = tmp_path / "in.bin"
+    src.write_bytes(DATA)
+    fresh = tmp_path / "fresh.ozl"
+    old_umask = os.umask(0o022)
+    try:
+        stream_io.compress_file(src, fresh, P.generic_profile(), chunk_bytes=0)
+        assert (fresh.stat().st_mode & 0o777) == 0o644
+        existing = tmp_path / "existing.ozl"
+        existing.write_bytes(b"old")
+        existing.chmod(0o604)
+        stream_io.compress_file(src, existing, P.generic_profile(), chunk_bytes=0)
+        assert (existing.stat().st_mode & 0o777) == 0o604
+    finally:
+        os.umask(old_umask)
+
+
+# -------------------------------------------------------- inspect edge cases
+def _empty_container() -> bytes:
+    body = bytearray(b"OZLC\x04")
+    wire.write_varint(body, 0)
+    return bytes(body) + struct.pack("<I", zlib.crc32(bytes(body)) & 0xFFFFFFFF)
+
+
+def test_inspect_foreign_zero_chunk_container(tmp_path, capsys):
+    """A structurally valid container we'd never write must still inspect
+    cleanly (no ``min([]) `` ValueError, no traceback)."""
+    f = tmp_path / "empty.ozlc"
+    f.write_bytes(_empty_container())
+    assert main(["inspect", str(f)]) == 0
+    out = capsys.readouterr().out
+    assert "0 chunk(s)" in out
+
+
+def test_iter_container_frames_allow_empty():
+    blob = _empty_container()
+    assert list(wire.iter_container_frames(io.BytesIO(blob), allow_empty=True)) == []
+    # decoding keeps rejecting: an empty container regenerates nothing
+    with pytest.raises(wire.FrameError):
+        list(wire.iter_container_frames(io.BytesIO(blob)))
+    # allow_empty must not weaken any other check (trailing garbage here)
+    with pytest.raises(wire.FrameError):
+        list(wire.iter_container_frames(io.BytesIO(blob + b"x"), allow_empty=True))
+
+
+def test_inspect_garbage_still_fails(tmp_path, capsys):
+    f = tmp_path / "junk.bin"
+    f.write_bytes(b"definitely not a frame")
+    assert main(["inspect", str(f)]) == 2
+
+
+def test_serve_without_address_is_usage_error():
+    with pytest.raises(SystemExit) as exc:
+        main(["serve", "--profile", "text"])
+    assert "--socket" in str(exc.value)
+    with pytest.raises(SystemExit):
+        main(["serve", "--socket", "/tmp/x.sock", "--tcp", "127.0.0.1:1"])
+    for bad_tcp in ("localhost", "host:abc"):  # malformed HOST:PORT forms
+        with pytest.raises(SystemExit):
+            main(["serve", "--tcp", bad_tcp])
+
+
+def test_profile_spec_errors_are_clean():
+    from repro.codecs.profiles import resolve_profile_spec
+
+    for bad in ("bogus", "struct:", "struct:0", "struct:a", "csv:", "csv:x"):
+        with pytest.raises(ValueError):
+            resolve_profile_spec(bad)
+    with pytest.raises(SystemExit):  # the CLI converts to a usage error
+        main(["compress", "/nonexistent", "--profile", "bogus"])
+
+
+# ---------------------------------------------------------- train edge cases
+def test_train_no_pareto_point_is_clear_error(tmp_path, monkeypatch):
+    """An empty training result must exit with a message, not IndexError."""
+
+    class _EmptyResult:
+        stats = {
+            "train_seconds": 0.0,
+            "evaluations": 0.0,
+            "workers": 1.0,
+            "eval_wall_seconds": 0.0,
+            "n_streams": 0.0,
+            "n_clusters": 0.0,
+        }
+
+        def pareto_plans(self):
+            return []
+
+    import repro.training
+
+    monkeypatch.setattr(
+        repro.training, "train", lambda *a, **k: _EmptyResult()
+    )
+    sample = tmp_path / "sample.bin"
+    sample.write_bytes(b"abc" * 100)
+    with pytest.raises(SystemExit) as exc:
+        main(["train", str(sample), "--out", str(tmp_path / "p.ozp")])
+    assert "no Pareto point" in str(exc.value)
+
+
+def test_train_all_points_skipped_is_clear_error(tmp_path, monkeypatch):
+    """Plans that exist but all get skipped must not hit emitted[0][1]."""
+    from repro.cli import _cmd_train  # noqa: F401  (the guarded function)
+
+    class _OnePlan:
+        stats = {
+            "train_seconds": 0.0,
+            "evaluations": 1.0,
+            "workers": 1.0,
+            "eval_wall_seconds": 0.0,
+            "n_streams": 1.0,
+            "n_clusters": 1.0,
+        }
+
+        def pareto_plans(self):
+            from repro.core import pipeline
+
+            return [(pipeline("zlib_backend"), 10.0, 0.001)]
+
+    import repro.cli
+    import repro.training
+
+    monkeypatch.setattr(repro.training, "train", lambda *a, **k: _OnePlan())
+    # force the "skip every point" path by making the roundtrip check fail
+    monkeypatch.setattr(
+        repro.cli.Compressor, "roundtrip_check", lambda self, b: False
+    )
+    sample = tmp_path / "sample.bin"
+    sample.write_bytes(b"abc" * 100)
+    with pytest.raises(SystemExit) as exc:
+        main(["train", str(sample), "--out", str(tmp_path / "p.ozp")])
+    msg = str(exc.value)
+    assert "IndexError" not in msg and ("lossless" in msg or "no plan" in msg)

@@ -32,6 +32,89 @@ def test_shard_store_corruption_detected(tmp_path):
         store.read_shard(0)
 
 
+def test_shard_store_rewrite_atomic(tmp_path):
+    """Rewriting an existing shard idx must replace it, not crash.
+
+    Regression: the old fixed-name tmp dir was ``os.replace``d onto an
+    existing non-empty shard dir -> ``OSError: Directory not empty``.
+    """
+    store = CompressedShardStore(tmp_path)
+    store.write_shard(0, {"x": np.arange(100, dtype=np.int64)})
+    meta = store.write_shard(
+        0, {"y": np.arange(50, dtype=np.int64), "z": np.ones(8, np.float32)}
+    )
+    assert [e["name"] for e in meta["entries"]] == ["y", "z"]
+    back = store.read_shard(0)
+    assert set(back) == {"y", "z"}
+    assert np.array_equal(back["y"], np.arange(50, dtype=np.int64))
+    # the old entry's payload is gone from disk, not just from meta.json
+    assert not (tmp_path / "shard_000000" / "x.ozl").exists()
+    assert store.shard_ids() == [0]
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_shard_store_stale_tmp_recovery(tmp_path):
+    """A crashed writer's leftover tmp dir must neither leak its orphan
+    entries into the next write nor survive it — while a *live* concurrent
+    writer's fresh staging dir must be left alone (age-gated sweep)."""
+    import os
+
+    store = CompressedShardStore(tmp_path)
+    # simulate both tmp generations a crash can leave behind, aged past the
+    # staleness cutoff (crashed writers stop touching their dirs)
+    old = time.time() - store.STALE_TMP_SECONDS - 60
+    legacy = tmp_path / "shard_000000.tmp"
+    legacy.mkdir()
+    (legacy / "orphan.ozl").write_bytes(b"stale bytes from a dead writer")
+    stale = tmp_path / "shard_000000.abc123.tmp"
+    stale.mkdir()
+    (stale / "meta.json").write_text("{}")
+    for d in (legacy, stale):
+        os.utime(d, (old, old))
+    live = tmp_path / "shard_000000.def456.tmp"  # a concurrent writer, now
+    live.mkdir()
+    meta = store.write_shard(0, {"tokens": np.arange(64, dtype=np.int64)})
+    assert [e["name"] for e in meta["entries"]] == ["tokens"]
+    back = store.read_shard(0)
+    assert set(back) == {"tokens"}  # orphans never surface through read_shard
+    assert not (tmp_path / "shard_000000" / "orphan.ozl").exists()
+    assert not legacy.exists() and not stale.exists()
+    assert live.exists()  # in-flight staging of another writer untouched
+    # tmp dirs never show up as shards, before or after cleanup
+    assert store.shard_ids() == [0]
+
+
+def test_shard_store_crash_between_renames_recovers(tmp_path):
+    """A crash in the rewrite's rename-aside window leaves only the aside
+    copy; reads and writes must promote it back, and the sweep must never
+    delete it while the canonical dir is missing."""
+    import os
+
+    store = CompressedShardStore(tmp_path)
+    store.write_shard(0, {"a": np.arange(20, dtype=np.int64)})
+    final = tmp_path / "shard_000000"
+    aside = tmp_path / "shard_000000.old.crash.tmp"
+    os.replace(final, aside)  # simulate: crashed after rename-aside
+    # even an old aside is protected while the canonical dir is missing
+    old = time.time() - store.STALE_TMP_SECONDS - 60
+    os.utime(aside, (old, old))
+    assert store._stale_tmps(0) == []
+    back = store.read_shard(0)  # read self-heals from the aside
+    assert np.array_equal(back["a"], np.arange(20, dtype=np.int64))
+    assert final.exists() and not aside.exists()
+
+
+def test_shard_store_read_ignores_orphan_entries(tmp_path):
+    """read_shard trusts meta.json, not the directory listing."""
+    store = CompressedShardStore(tmp_path)
+    store.write_shard(3, {"a": np.arange(10, dtype=np.int64)})
+    (tmp_path / "shard_000003" / "rogue.ozl").write_bytes(b"not in meta")
+    back = store.read_shard(3)
+    assert set(back) == {"a"}
+    stats = store.stats()
+    assert stats["raw_bytes"] == 80  # rogue bytes not accounted
+
+
 def test_prefetcher_orders_and_resumes(tmp_path):
     store = CompressedShardStore(tmp_path)
     for i in range(4):

@@ -204,6 +204,43 @@ def test_stream_io_byte_identical(tmp_path, chunk):
     assert out.read_bytes() == stream.content_bytes()
 
 
+@pytest.fixture(scope="module")
+def service_server(tmp_path_factory):
+    """One daemon for the whole module, with every serial-input plan
+    registered — the service column of the matrix."""
+    from repro.service import CompressionServer, PlanRegistry
+
+    registry = PlanRegistry()
+    registry.register_profile("text")
+    registry.register_profile("generic")
+    sock = tmp_path_factory.mktemp("svc") / "diff.sock"
+    with CompressionServer(registry, socket_path=str(sock)) as srv:
+        yield srv
+
+
+@pytest.mark.parametrize(
+    "profile,chunk",
+    [("text", 0), ("text", CHUNK), ("generic", 0), ("generic", CHUNK)],
+    ids=["text-single", "text-chunked", "generic-single", "generic-chunked"],
+)
+def test_service_byte_identical(service_server, profile, chunk):
+    """The daemon's hot-session path emits the offline path's exact bytes."""
+    from repro.service import ServiceClient
+
+    stream = corpus_text()
+    plan = PLANS[profile]()
+    resolve_cache_clear()
+    ref = path_oneshot(plan, stream, chunk)
+    with ServiceClient(service_server.address) as client:
+        frame, info = client.compress_bytes(
+            stream.content_bytes(), profile, chunk_bytes=chunk
+        )
+        assert frame == ref, "service diverged from the offline path"
+        assert info["bytes_out"] == len(ref)
+        back, _ = client.decompress_bytes(frame)
+        assert back == stream.content_bytes()
+
+
 @pytest.mark.parametrize(
     "profile,chunk",
     [("text", CHUNK), ("generic", 0)],

@@ -1,0 +1,382 @@
+"""The compression daemon end to end: registry, session pool, byte-identity.
+
+The deployment claim under test (paper §VIII): a long-lived service holding
+registered plans serves many concurrent clients and emits frames
+**byte-identical** to the offline CLI for the same plan and chunk settings —
+sessions change *when* work happens, never the wire bytes.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.codecs import profiles as P
+from repro.core import (
+    Compressor,
+    CompressorSession,
+    SessionPool,
+    compress,
+    decompress_bytes,
+    pipeline,
+    serial,
+)
+from repro.core.serialize import plan_digest
+from repro.service import (
+    CompressionServer,
+    PlanRegistry,
+    ServiceClient,
+)
+
+DATA = (b"req=deadbeef level=INFO svc=auth handled in 42us\n" * 800)  # ~39 KB
+CHUNK = 8 << 10
+
+
+@pytest.fixture()
+def server(tmp_path):
+    registry = PlanRegistry()
+    registry.register_profile("text")
+    registry.register_profile("generic")
+    srv = CompressionServer(
+        registry,
+        socket_path=str(tmp_path / "ozl.sock"),
+        max_clients=8,
+        sessions_per_plan=2,
+        request_timeout=20.0,
+    )
+    with srv:
+        yield srv
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_addressing(tmp_path):
+    reg = PlanRegistry()
+    entry = reg.register_profile("text")
+    assert reg.resolve("text") is entry
+    assert reg.resolve(entry.digest) is entry
+    assert reg.resolve(entry.digest[:12]) is entry  # unique prefix
+    with pytest.raises(KeyError):
+        reg.resolve("nope")
+    with pytest.raises(KeyError):
+        reg.resolve(entry.digest[:4])  # prefix too short to be an address
+    # idempotent re-registration; conflicting id rejected
+    assert reg.register_profile("text") is entry
+    with pytest.raises(ValueError):
+        reg.register_profile("generic", plan_id="text")
+    assert "text" in reg and entry.digest in reg and len(reg) == 1
+
+
+def test_registry_file_roundtrip(tmp_path):
+    comp = Compressor(P.numeric_profile(), level=7, name="nums")
+    path = tmp_path / "nums.ozp"
+    path.write_bytes(comp.serialize())
+    reg = PlanRegistry()
+    entry = reg.register_file(path)
+    assert entry.plan_id == "nums"
+    assert entry.compressor.level == 7
+    assert entry.digest == plan_digest(comp.plan, format_version=comp.format_version, level=comp.level)
+    assert entry.describe()["source"] == f"file:{path}"
+
+
+def test_registry_digest_tracks_output_knobs():
+    """Same topology, different level -> different content address."""
+    plan = P.text_profile()
+    a = plan_digest(plan, format_version=4, level=5)
+    b = plan_digest(plan, format_version=4, level=9)
+    c = plan_digest(plan, format_version=3, level=5)
+    assert len({a, b, c}) == 3
+
+
+# ------------------------------------------------------------- session pool
+def test_session_pool_checkout_and_reuse():
+    plan = pipeline("zlib_backend")
+    with SessionPool(max_per_key=2) as pool:
+        pool.register("k", lambda: CompressorSession(plan))
+        with pool.acquire("k") as s1:
+            frame = s1.compress(serial(b"hello"), chunk_bytes=0)
+            assert decompress_bytes(frame) == b"hello"
+        with pool.acquire("k") as s2:
+            assert s2 is s1  # returned sessions are reused, not rebuilt
+        st = pool.stats()["k"]
+        assert st == {
+            "created": 1, "idle": 1, "in_use": 0,
+            "acquires": 2, "creates": 1, "waits": 0, "drops": 0,
+        }
+
+
+def test_session_pool_blocks_at_capacity_and_unblocks():
+    plan = pipeline("zlib_backend")
+    with SessionPool(max_per_key=1) as pool:
+        pool.register("k", lambda: CompressorSession(plan))
+        release = threading.Event()
+        acquired = threading.Event()
+
+        def hold():
+            with pool.acquire("k"):
+                acquired.set()
+                release.wait(5)
+
+        t = threading.Thread(target=hold)
+        t.start()
+        assert acquired.wait(5)
+        with pytest.raises(TimeoutError):
+            with pool.acquire("k", timeout=0.05):
+                pass
+        release.set()
+        t.join(5)
+        with pool.acquire("k", timeout=5):
+            pass  # freed capacity is observable
+        assert pool.stats()["k"]["waits"] >= 1
+
+
+def test_session_pool_drops_poisoned_sessions():
+    plan = pipeline("zlib_backend")
+    with SessionPool(max_per_key=1) as pool:
+        pool.register("k", lambda: CompressorSession(plan))
+        with pytest.raises(RuntimeError):
+            with pool.acquire("k"):
+                raise RuntimeError("request blew up mid-session")
+        st = pool.stats()["k"]
+        assert st["created"] == 0 and st["drops"] == 1
+        with pool.acquire("k") as s:  # a fresh session takes its place
+            assert s.compress(serial(b"x"), chunk_bytes=0)
+
+
+def test_session_pool_unknown_key():
+    with SessionPool() as pool:
+        with pytest.raises(KeyError):
+            with pool.acquire("ghost"):
+                pass
+
+
+def test_session_pool_close_unblocks_waiter():
+    """close() must wake a blocked acquire with a clean KeyError, not wedge
+    it or crash it with an internal lookup error."""
+    plan = pipeline("zlib_backend")
+    pool = SessionPool(max_per_key=1)
+    pool.register("k", lambda: CompressorSession(plan))
+    holding = threading.Event()
+    release = threading.Event()
+    waiter_result = {}
+
+    def holder():
+        with pool.acquire("k"):
+            holding.set()
+            release.wait(5)
+
+    def waiter():
+        try:
+            with pool.acquire("k", timeout=10):
+                waiter_result["outcome"] = "acquired"
+        except KeyError as err:
+            waiter_result["outcome"] = f"KeyError: {err}"
+
+    t1 = threading.Thread(target=holder)
+    t2 = threading.Thread(target=waiter)
+    t1.start()
+    assert holding.wait(5)
+    t2.start()
+    while pool.stats().get("k", {}).get("waits", 0) == 0:
+        pass  # the waiter is provably blocked before we close
+    pool.close()
+    release.set()
+    t1.join(5)
+    t2.join(5)
+    assert "KeyError" in waiter_result["outcome"]
+
+
+def test_registry_bad_profile_spec_raises_value_error():
+    reg = PlanRegistry()
+    with pytest.raises(ValueError, match="unknown profile"):
+        reg.register_profile("not-a-profile")
+
+
+# ----------------------------------------------------------- service e2e
+def _offline(profile_factory, data: bytes, chunk: int) -> bytes:
+    return compress(profile_factory(), serial(data), chunk_bytes=chunk or None)
+
+
+@pytest.mark.parametrize("chunk", [0, CHUNK], ids=["single", "chunked"])
+def test_service_byte_identical_to_offline(server, chunk):
+    with ServiceClient(server.address) as c:
+        frame, info = c.compress_bytes(DATA, "text", chunk_bytes=chunk)
+        assert frame == _offline(P.text_profile, DATA, chunk)
+        assert info["bytes_in"] == len(DATA)
+        assert info["container"] == bool(chunk)
+        back, dinfo = c.decompress_bytes(frame)
+        assert back == DATA
+        assert dinfo["bytes_out"] == len(DATA)
+
+
+def test_service_plan_by_digest(server):
+    entry = server.registry.resolve("generic")
+    with ServiceClient(server.address) as c:
+        frame, info = c.compress_bytes(DATA, entry.digest, chunk_bytes=CHUNK)
+        assert info["plan_id"] == "generic"
+        assert frame == _offline(P.generic_profile, DATA, CHUNK)
+
+
+def test_service_file_paths_and_in_place(server, tmp_path):
+    src = tmp_path / "corpus.bin"
+    src.write_bytes(DATA)
+    dst = tmp_path / "corpus.ozl"
+    with ServiceClient(server.address) as c:
+        stats = c.compress_file(src, dst, "text", chunk_bytes=CHUNK)
+        assert stats["chunks"] == -(-len(DATA) // CHUNK)
+        assert dst.read_bytes() == _offline(P.text_profile, DATA, CHUNK)
+        # in-place through the service client: no data loss either
+        c.compress_file(src, src, "text", chunk_bytes=CHUNK)
+        assert src.read_bytes() == dst.read_bytes()
+        c.decompress_file(src, src)
+        assert src.read_bytes() == DATA
+
+
+def test_service_compress_without_size_header(server, tmp_path):
+    """A file-object source sends no 'size' header: the server must take the
+    unknown-length path (no AttributeError on the minimal body reader) and
+    still produce a decodable, lossless frame."""
+    import io as _io
+
+    with ServiceClient(server.address) as c:
+        for chunk in (0, CHUNK):
+            dst = tmp_path / f"nosize{chunk}.ozl"
+            stats = c.compress_file(
+                _io.BytesIO(DATA), dst, "text", chunk_bytes=chunk
+            )
+            assert stats["bytes_in"] == len(DATA)
+            back, _ = c.decompress_bytes(dst.read_bytes())
+            assert back == DATA
+
+
+def test_service_concurrent_clients_byte_identical(server):
+    """8 concurrent clients, interleaved plans: every frame matches offline."""
+    want = {
+        "text": _offline(P.text_profile, DATA, CHUNK),
+        "generic": _offline(P.generic_profile, DATA, CHUNK),
+    }
+    results = [None] * 8
+    errors = []
+
+    def worker(i):
+        plan = "text" if i % 2 == 0 else "generic"
+        try:
+            with ServiceClient(server.address) as c:
+                for _ in range(3):  # several requests per connection
+                    frame, _ = c.compress_bytes(DATA, plan, chunk_bytes=CHUNK)
+                    assert frame == want[plan]
+                    back, _ = c.decompress_bytes(frame)
+                    assert back == DATA
+            results[i] = True
+        except Exception as err:  # pragma: no cover - failure reporting
+            errors.append((i, err))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(120)
+    assert not errors, errors
+    assert all(results)
+    st = server.stats()
+    assert st["requests"]["compress"] == 24
+    assert st["errors"] == 0
+    for key_stats in st["sessions"].values():
+        assert key_stats["in_use"] == 0  # every session returned to the pool
+        assert key_stats["created"] <= server.pool.max_per_key
+
+
+def test_service_trained_plan_deploys(tmp_path):
+    """A serialized .ozp plan registered at serve time compresses identically
+    to `compress --plan` offline."""
+    comp = Compressor(
+        pipeline(("zlib_backend", {"level": 6})), name="trained", level=6
+    )
+    ozp = tmp_path / "trained.ozp"
+    ozp.write_bytes(comp.serialize())
+    payload = np.cumsum(
+        np.random.default_rng(3).integers(0, 9, 40_000)
+    ).astype(np.uint32).tobytes()
+    registry = PlanRegistry()
+    registry.register_file(ozp)
+    with CompressionServer(
+        registry, socket_path=str(tmp_path / "t.sock")
+    ) as srv:
+        with ServiceClient(srv.address) as c:
+            frame, info = c.compress_bytes(payload, "trained", chunk_bytes=CHUNK)
+    reloaded = Compressor.deserialize(ozp.read_bytes())
+    assert frame == reloaded.compress(serial(payload), chunk_bytes=CHUNK)
+    assert decompress_bytes(frame) == payload
+
+
+# ------------------------------------------------------------ error handling
+def test_service_unknown_plan_keeps_connection(server):
+    with ServiceClient(server.address) as c:
+        with pytest.raises(RuntimeError, match="unknown plan"):
+            c.compress_bytes(DATA, "no-such-plan")
+        # the same connection still serves the next request
+        frame, _ = c.compress_bytes(DATA, "text", chunk_bytes=CHUNK)
+        assert frame == _offline(P.text_profile, DATA, CHUNK)
+    assert server.stats()["errors"] == 1
+
+
+def test_service_size_lies_rejected(server):
+    """A declared size that disagrees with the body must fail, not silently
+    compress a truncated or padded payload."""
+    import repro.service.protocol as P_
+
+    with ServiceClient(server.address) as c:
+        # understate: extra bytes beyond the declared size
+        header = {"plan": "text", "size": 10, "chunk_bytes": 0}
+        P_.write_request(c._w, P_.VERB_COMPRESS, header, P_.iter_body_blocks(DATA))
+        status, resp, body = P_.read_response(c._r)
+        body.drain()
+        assert status == P_.STATUS_ERROR
+    with ServiceClient(server.address) as c:
+        # overstate: body ends before the declared size
+        header = {"plan": "text", "size": len(DATA) * 2, "chunk_bytes": CHUNK}
+        P_.write_request(c._w, P_.VERB_COMPRESS, header, P_.iter_body_blocks(DATA))
+        status, resp, body = P_.read_response(c._r)
+        body.drain()
+        assert status == P_.STATUS_ERROR
+    with ServiceClient(server.address) as c:
+        # overstate by so little that the promised chunk count still matches:
+        # only true byte accounting (not the chunk-count check) catches this
+        assert len(DATA) % CHUNK != 0
+        header = {"plan": "text", "size": len(DATA) + 1, "chunk_bytes": CHUNK}
+        P_.write_request(c._w, P_.VERB_COMPRESS, header, P_.iter_body_blocks(DATA))
+        status, resp, body = P_.read_response(c._r)
+        body.drain()
+        assert status == P_.STATUS_ERROR
+        assert "declared size" in resp.get("error", "")
+    # the daemon is still healthy
+    with ServiceClient(server.address) as c:
+        assert c.ping()["ok"]
+
+
+def test_service_decompress_garbage_rejected(server):
+    with ServiceClient(server.address) as c:
+        with pytest.raises(RuntimeError):
+            c.decompress_bytes(b"OZLJ this is not a real frame")
+        assert c.ping()["ok"]
+
+
+def test_service_stats_shape(server):
+    with ServiceClient(server.address) as c:
+        c.compress_bytes(DATA, "text", chunk_bytes=CHUNK)
+        st = c.stats()
+    assert st["protocol_version"] == 1
+    assert st["requests"]["compress"] == 1
+    assert {e["plan_id"] for e in st["registry"]} == {"text", "generic"}
+    for e in st["registry"]:
+        assert len(e["digest"]) == 64
+    assert st["bytes_in"] == len(DATA)
+
+
+def test_service_tcp_transport(tmp_path):
+    registry = PlanRegistry()
+    registry.register_profile("generic")
+    with CompressionServer(registry, host="127.0.0.1", port=0) as srv:
+        assert ":" in srv.address
+        with ServiceClient(srv.address) as c:
+            frame, _ = c.compress_bytes(b"tcp payload " * 100, "generic")
+            back, _ = c.decompress_bytes(frame)
+            assert back == b"tcp payload " * 100

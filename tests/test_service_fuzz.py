@@ -1,0 +1,340 @@
+"""Adversarial service-protocol tests, in the spirit of test_wire_fuzz.py.
+
+Invariant: no byte sequence a client can send — truncated, oversized,
+garbage, or cut off mid-body — may wedge a server worker, leak a checked-out
+session, or crash the daemon.  Every scenario ends the same way: the server
+answers with an error response and/or drops the connection, and a subsequent
+well-formed request on a fresh connection succeeds with the session pool
+fully returned (``in_use == 0``).
+"""
+import io
+import socket
+import threading
+
+import pytest
+
+from repro.codecs import profiles as P
+from repro.core import compress, serial
+from repro.service import CompressionServer, PlanRegistry, ServiceClient
+from repro.service import protocol as SP
+
+DATA = b"fuzz corpus: level=INFO svc=auth handled\n" * 200
+
+
+@pytest.fixture()
+def server(tmp_path):
+    registry = PlanRegistry()
+    registry.register_profile("generic")
+    srv = CompressionServer(
+        registry,
+        socket_path=str(tmp_path / "fuzz.sock"),
+        max_clients=8,
+        sessions_per_plan=2,
+        request_timeout=5.0,
+    )
+    with srv:
+        yield srv
+
+
+def _connect(server) -> socket.socket:
+    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    s.settimeout(10.0)
+    s.connect(server.socket_path)
+    return s
+
+
+def _send_then_close(server, blob: bytes) -> bytes:
+    """Write raw bytes, half-close, read whatever the server answers.
+
+    A reset/broken pipe mid-exchange *is* a valid server reaction to hostile
+    bytes (it dropped us before we finished) — that reads as "no response".
+    """
+    s = _connect(server)
+    out = bytearray()
+    try:
+        if blob:
+            s.sendall(blob)
+        s.shutdown(socket.SHUT_WR)
+        while True:
+            piece = s.recv(65536)
+            if not piece:
+                return bytes(out)
+            out += piece
+    except (ConnectionResetError, BrokenPipeError):
+        return bytes(out)
+    finally:
+        s.close()
+
+
+def _valid_request_bytes(chunk_bytes: int = 4096) -> bytes:
+    buf = io.BytesIO()
+    SP.write_request(
+        buf,
+        SP.VERB_COMPRESS,
+        {"plan": "generic", "size": len(DATA), "chunk_bytes": chunk_bytes},
+        SP.iter_body_blocks(DATA, 1024),
+    )
+    return buf.getvalue()
+
+
+def _assert_healthy(server):
+    """The one postcondition every scenario must leave behind."""
+    with ServiceClient(server.address, timeout=10.0) as c:
+        frame, _ = c.compress_bytes(DATA, "generic", chunk_bytes=4096)
+        assert frame == compress(P.generic_profile(), serial(DATA), chunk_bytes=4096)
+        st = c.stats()
+    for key_stats in st["sessions"].values():
+        assert key_stats["in_use"] == 0, "leaked checked-out session"
+
+
+def _response_status(blob: bytes):
+    """None when the server just closed; else the response status code."""
+    if not blob:
+        return None
+    status, header, body = SP.read_response(io.BytesIO(blob))
+    body.drain()
+    return status, header
+
+
+# ------------------------------------------------------------------ scenarios
+def test_every_prefix_truncation(server):
+    """EOF at any point of a request: the worker frees, the daemon survives."""
+    req = _valid_request_bytes()
+    for cut in range(0, len(req), max(len(req) // 59, 1)):
+        out = _send_then_close(server, req[:cut])
+        if out:  # if the server answered at all, it answered an error frame
+            status, header = _response_status(out)
+            assert status == SP.STATUS_ERROR
+            assert header.get("error")
+    _assert_healthy(server)
+
+
+def test_random_bytes_fail_closed(server):
+    import numpy as np
+
+    rng = np.random.default_rng(7)
+    for n in (1, 4, 16, 200, 4096):
+        out = _send_then_close(server, rng.bytes(n))
+        if out:
+            status, _ = _response_status(out)
+            assert status == SP.STATUS_ERROR
+    _assert_healthy(server)
+
+
+def test_garbage_verb_rejected(server):
+    buf = io.BytesIO()
+    SP.write_message(buf, SP.REQUEST_MAGIC, 99, {"plan": "generic"}, [b"x"])
+    status, header = _response_status(_send_then_close(server, buf.getvalue()))
+    assert status == SP.STATUS_ERROR
+    _assert_healthy(server)
+
+
+def test_bad_magic_rejected(server):
+    req = _valid_request_bytes()
+    status_out = _response_status(_send_then_close(server, b"EVIL" + req[4:]))
+    if status_out is not None:
+        assert status_out[0] == SP.STATUS_ERROR
+    _assert_healthy(server)
+
+
+def test_oversized_length_varints_rejected(server):
+    # header length varint overflowing 64 bits
+    blob = SP.REQUEST_MAGIC + bytes([SP.VERB_PING]) + b"\xff" * 10
+    status_out = _response_status(_send_then_close(server, blob))
+    if status_out is not None:
+        assert status_out[0] == SP.STATUS_ERROR
+    # header length over the 1 MiB cap (but a valid varint)
+    head = bytearray(SP.REQUEST_MAGIC + bytes([SP.VERB_PING]))
+    from repro.core.wire import write_varint
+
+    write_varint(head, SP.MAX_HEADER_BYTES + 1)
+    status_out = _response_status(_send_then_close(server, bytes(head)))
+    if status_out is not None:
+        assert status_out[0] == SP.STATUS_ERROR
+    # body block over the 64 MiB cap
+    buf = io.BytesIO()
+    SP.write_message(
+        buf, SP.REQUEST_MAGIC, SP.VERB_COMPRESS, {"plan": "generic"}
+    )
+    blob = bytearray(buf.getvalue()[:-1])  # drop the terminator
+    write_varint(blob, SP.MAX_BLOCK_BYTES + 1)
+    status_out = _response_status(_send_then_close(server, bytes(blob)))
+    if status_out is not None:
+        assert status_out[0] == SP.STATUS_ERROR
+    _assert_healthy(server)
+
+
+def test_undecodable_header_rejected(server):
+    blob = bytearray(SP.REQUEST_MAGIC + bytes([SP.VERB_COMPRESS]))
+    from repro.core.wire import write_varint
+
+    junk = b"\xc1\xc1\xc1\xc1"  # 0xc1 is an invalid msgpack type byte
+    write_varint(blob, len(junk))
+    blob += junk
+    status_out = _response_status(_send_then_close(server, bytes(blob)))
+    if status_out is not None:
+        assert status_out[0] == SP.STATUS_ERROR
+    _assert_healthy(server)
+
+
+def test_mid_body_disconnect(server):
+    """Header promises a body; the client vanishes mid-block."""
+    req = _valid_request_bytes()
+    # find a cut point inside the body (past magic+verb+header)
+    buf = io.BytesIO()
+    SP.write_message(
+        buf, SP.REQUEST_MAGIC, SP.VERB_COMPRESS,
+        {"plan": "generic", "size": len(DATA), "chunk_bytes": 4096},
+    )
+    header_len = len(buf.getvalue()) - 1  # minus the empty-body terminator
+    cut = header_len + (len(req) - header_len) // 2
+    out = _send_then_close(server, req[:cut])
+    if out:
+        status, _ = _response_status(out)
+        assert status == SP.STATUS_ERROR
+    _assert_healthy(server)
+
+
+def test_stacked_requests_then_garbage(server):
+    """Several valid requests pipelined on one connection, then garbage: the
+    valid ones are all answered before the connection drops."""
+    req = _valid_request_bytes()
+    blob = req * 3 + b"\x00garbage-that-is-not-a-request"
+    out = _send_then_close(server, blob)
+    r = io.BytesIO(out)
+    statuses = []
+    for _ in range(3):
+        status, _h, body = SP.read_response(r)
+        body.drain()
+        statuses.append(status)
+    assert statuses == [SP.STATUS_OK] * 3
+    # whatever follows (error response and/or close) is not a fourth OK
+    rest = r.read()
+    if rest:
+        status, _h, body = SP.read_response(io.BytesIO(rest))
+        body.drain()
+        assert status == SP.STATUS_ERROR
+    _assert_healthy(server)
+
+
+def test_concurrent_clients_with_interleaved_garbage(server):
+    """8 threads hammer the daemon with alternating valid and hostile
+    traffic; every valid exchange must still come back correct."""
+    want = compress(P.generic_profile(), serial(DATA), chunk_bytes=4096)
+    req = _valid_request_bytes()
+    errors = []
+
+    def hostile(i):
+        try:
+            for cut in range(0, len(req), max(len(req) // 7, 1)):
+                _send_then_close(server, req[: cut + i])
+        except Exception as err:  # pragma: no cover
+            errors.append(("hostile", i, err))
+
+    def honest(i):
+        try:
+            with ServiceClient(server.address, timeout=15.0) as c:
+                for _ in range(3):
+                    frame, _ = c.compress_bytes(DATA, "generic", chunk_bytes=4096)
+                    assert frame == want
+        except Exception as err:  # pragma: no cover
+            errors.append(("honest", i, err))
+
+    threads = [
+        threading.Thread(target=hostile if i % 2 else honest, args=(i,))
+        for i in range(8)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    assert not errors, errors
+    _assert_healthy(server)
+
+
+def test_worker_not_wedged_by_many_bad_connections(server):
+    """More hostile connections than worker threads: each one must free its
+    worker, or this loop (and the health check) would deadlock."""
+    for i in range(3 * server.max_clients):
+        _send_then_close(server, b"\xff" * (i % 7))
+    _assert_healthy(server)
+
+
+def test_body_limit_cuts_off_oversized_senders():
+    """A reader with a limit set must reject the first over-budget block
+    before buffering it — the server's guard against size-lying floods."""
+    buf = io.BytesIO()
+    SP.write_message(buf, SP.REQUEST_MAGIC, SP.VERB_COMPRESS,
+                     {"plan": "generic", "size": 16}, [b"x" * 64])
+    _verb, _header, body = SP.read_request(io.BytesIO(buf.getvalue()))
+    body.limit = 16
+    with pytest.raises(SP.ProtocolError, match="limit"):
+        body.read()
+    # within budget: same body with a matching limit reads fine
+    _verb, _header, body = SP.read_request(io.BytesIO(buf.getvalue()))
+    body.limit = 64
+    assert body.read() == b"x" * 64
+
+
+def test_compress_declared_size_caps_body(server):
+    """End to end: a tiny declared size with a huge body is rejected without
+    the server swallowing the flood (bare-frame path included)."""
+    s = _connect(server)
+    try:
+        w = s.makefile("wb")
+        SP.write_request(
+            w, SP.VERB_COMPRESS,
+            {"plan": "generic", "size": 16, "chunk_bytes": 0},
+            SP.iter_body_blocks(DATA, 1024),
+        )
+    except (BrokenPipeError, ConnectionResetError):
+        pass  # server cut us off mid-flood: exactly the point
+    finally:
+        s.close()
+    _assert_healthy(server)
+
+
+def test_client_rejects_malformed_response():
+    """The client side fails closed too: a fake server speaking garbage."""
+    fake = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    fake.bind(("127.0.0.1", 0))
+    fake.listen(1)
+    port = fake.getsockname()[1]
+
+    def fake_server():
+        conn, _ = fake.accept()
+        conn.recv(65536)
+        conn.sendall(b"HTTP/1.1 200 OK\r\n\r\nnot the protocol")
+        conn.close()
+
+    t = threading.Thread(target=fake_server)
+    t.start()
+    try:
+        c = ServiceClient(("127.0.0.1", port), timeout=5.0)
+        with pytest.raises(SP.ProtocolError, match="bad magic"):
+            c.ping()
+        c.close()
+    finally:
+        t.join(10)
+        fake.close()
+
+
+def test_struct_unpack_responses_have_no_padding():
+    """Protocol primitives reject a truncated varint and short reads."""
+    with pytest.raises(SP.ProtocolError):
+        SP.read_response(io.BytesIO(SP.RESPONSE_MAGIC))  # no status byte
+    with pytest.raises(SP.ProtocolError):
+        SP.read_response(io.BytesIO(SP.RESPONSE_MAGIC + b"\x00\xff"))
+    buf = io.BytesIO()
+    SP.write_response(buf, SP.STATUS_OK, {"x": 1}, [b"abc"])
+    blob = buf.getvalue()
+    for cut in range(len(blob)):  # every proper prefix must fail closed
+        try:
+            status, header, body = SP.read_response(io.BytesIO(blob[:cut]))
+            body.read()
+        except SP.ProtocolError:
+            continue
+        pytest.fail(f"prefix of {cut}/{len(blob)} bytes parsed cleanly")
+    # sanity: the full message parses
+    status, header, body = SP.read_response(io.BytesIO(blob))
+    assert (status, header, body.read()) == (SP.STATUS_OK, {"x": 1}, b"abc")
