@@ -387,15 +387,18 @@ def _cmd_serve(args) -> int:
     except ValueError as err:
         raise SystemExit(str(err)) from None
     registry = PlanRegistry()
-    for spec in args.profile or []:
-        entry = registry.register_profile(spec)
-        print(f"registered profile {entry.plan_id} (digest {entry.digest[:12]})")
-    for path in args.register or []:
-        entry = registry.register_file(path)
-        print(
-            f"registered plan {entry.plan_id} from {path}"
-            f" (digest {entry.digest[:12]})"
-        )
+    try:
+        for spec in args.profile or []:
+            entry = registry.register_profile(spec)
+            print(f"registered profile {entry.plan_id} (digest {entry.digest[:12]})")
+        for path in args.register or []:
+            entry = registry.register_file(path)
+            print(
+                f"registered plan {entry.plan_id} from {path}"
+                f" (digest {entry.digest[:12]})"
+            )
+    except (ValueError, OSError) as err:
+        raise SystemExit(f"serve: {err}") from None
     if not len(registry):
         print("warning: no plans registered; only decompress/stats will work")
 
@@ -405,6 +408,7 @@ def _cmd_serve(args) -> int:
         n_workers=args.workers,
         window=args.window,
         request_timeout=args.timeout,
+        idle_timeout=args.idle_timeout,
     )
     if family == _socket.AF_UNIX:
         server = CompressionServer(registry, socket_path=target, **kw)
@@ -569,6 +573,9 @@ def build_parser() -> argparse.ArgumentParser:
                    help="max in-flight chunks per request (bounds memory)")
     s.add_argument("--timeout", type=float, default=60.0,
                    help="per-request socket timeout seconds (default 60)")
+    s.add_argument("--idle-timeout", type=float, default=300.0,
+                   help="seconds a persistent connection may sit idle between"
+                        " requests before the server drops it (default 300)")
     s.set_defaults(fn=_cmd_serve)
 
     cl = sub.add_parser("client", help="talk to a running compression daemon")

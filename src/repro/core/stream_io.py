@@ -85,11 +85,18 @@ def _atomic_sink(dst: PathOrFile):
     elsewhere (the old in-place open truncated the input before the first
     read), and a crash mid-write never leaves a partial output behind.  File
     objects pass through untouched: the caller owns their lifecycle.
+
+    A symlink destination is resolved first, so the rename replaces the
+    link's *target* (what ``open(dst, "wb")`` would have written) and the
+    link itself survives.  One semantic difference from an in-place open
+    remains by design: a destination hardlinked under other names gets a
+    fresh inode, so the other names keep the old content — the price of
+    never exposing a partially written file at the final path.
     """
     if not isinstance(dst, (str, os.PathLike)):
         yield dst
         return
-    final = Path(dst)
+    final = Path(os.path.realpath(os.fspath(dst)))
     fd, tmp_name = tempfile.mkstemp(
         dir=final.parent or Path("."), prefix=final.name + ".", suffix=".tmp"
     )

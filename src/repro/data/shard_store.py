@@ -59,16 +59,18 @@ class CompressedShardStore:
         final = self.directory / f"shard_{idx:06d}"
         if final.exists():
             return
-        asides = [
-            d
-            for d in self.directory.glob(f"shard_{idx:06d}.old.*.tmp")
-            if d.is_dir()
-        ]
-        if not asides:
+        stamped = []
+        for d in self.directory.glob(f"shard_{idx:06d}.old.*.tmp"):
+            try:
+                if d.is_dir():
+                    stamped.append((d.stat().st_mtime, d))
+            except OSError:
+                pass  # vanished between glob and stat: concurrent cleanup
+        if not stamped:
             return
-        asides.sort(key=lambda d: d.stat().st_mtime)
+        newest = max(stamped, key=lambda t: t[0])[1]
         try:
-            os.replace(asides[-1], final)
+            os.replace(newest, final)
         except OSError:
             pass  # another process recovered first
 
@@ -82,8 +84,10 @@ class CompressedShardStore:
         (``os.replace`` cannot replace a non-empty directory), swaps the new
         dir in, then deletes the old one; a concurrent reader may observe the
         brief gap between the two renames as a missing dir (one writer per
-        shard is the contract — readers retry or tolerate), but a *crash* in
-        that gap is recovered: the aside copy is never swept while the
+        shard is the contract — readers retry or tolerate), and a reader
+        whose ``_recover_aside`` promotes the aside back *into* that gap is
+        handled by re-renaming it aside and retrying the swap (the writer's
+        new data always wins); a *crash* in that gap is recovered: the aside copy is never swept while the
         canonical dir is missing, and the next write or read promotes it
         back.  Stale tmps from crashed writers (age-gated, so a live
         concurrent writer's staging is untouched) are swept on the way out.
@@ -133,7 +137,24 @@ class CompressedShardStore:
                 )
                 os.rmdir(aside)
                 os.replace(final, aside)
-                os.replace(tmp, final)
+                for _ in range(16):
+                    try:
+                        os.replace(tmp, final)
+                        break
+                    except OSError:
+                        # a concurrent reader's _recover_aside can promote
+                        # the aside back into the rename gap, refilling
+                        # final: move it aside again and retry — the
+                        # writer's new data must win
+                        try:
+                            os.replace(final, aside)
+                        except OSError:
+                            pass
+                else:
+                    raise OSError(
+                        f"shard {idx}: canonical dir kept reappearing while"
+                        " swapping in the rewrite"
+                    )
                 shutil.rmtree(aside, ignore_errors=True)
             else:
                 os.replace(tmp, final)

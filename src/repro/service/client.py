@@ -2,10 +2,13 @@
 
 One :class:`ServiceClient` holds one persistent connection; every call is a
 complete request/response exchange, so a client object is safe to reuse for
-many operations (and cheap: connection setup happens once).  File payloads
-stream through in protocol blocks — the client never loads a file whole —
-and file outputs are written with the same temp-file + atomic-rename
-discipline as ``stream_io`` (``client compress F -o F`` is safe).
+many operations (and cheap: connection setup happens once).  A connection the
+server closed cleanly between exchanges (its idle timeout, or a restart) is
+re-established transparently: every verb is stateless on the server, so the
+request is simply resent once on a fresh connection.  File payloads stream
+through in protocol blocks — the client never loads a file whole — and file
+outputs are written with the same temp-file + atomic-rename discipline as
+``stream_io`` (``client compress F -o F`` is safe).
 
     with ServiceClient("unix:/tmp/ozl.sock") as c:
         frame, info = c.compress_bytes(b"...", plan="text")
@@ -17,7 +20,7 @@ from __future__ import annotations
 
 import os
 import socket
-from typing import Iterable, Optional, Tuple, Union
+from typing import Callable, Iterable, Optional, Tuple, Union
 
 from repro.core.stream_io import DEFAULT_CHUNK_BYTES, _atomic_sink, _open
 
@@ -26,6 +29,10 @@ from . import protocol as P
 __all__ = ["ServiceClient"]
 
 PathOrBytes = Union[bytes, bytearray, memoryview]
+
+# a request body is always passed as a zero-arg factory returning the block
+# iterable, so a transparent reconnect can rebuild (and resend) it
+BodyFactory = Callable[[], Iterable[bytes]]
 
 
 class ServiceClient:
@@ -36,11 +43,15 @@ class ServiceClient:
         timeout: float = 60.0,
         block_bytes: int = P.DEFAULT_BLOCK_BYTES,
     ):
-        family, target = P.parse_address(address)
         self.address = address
+        self.timeout = timeout
         self.block_bytes = block_bytes
+        self._connect()
+
+    def _connect(self) -> None:
+        family, target = P.parse_address(self.address)
         self._sock = socket.socket(family, socket.SOCK_STREAM)
-        self._sock.settimeout(timeout)
+        self._sock.settimeout(self.timeout)
         self._sock.connect(target)
         self._r = self._sock.makefile("rb")
         self._w = self._sock.makefile("wb")
@@ -50,22 +61,74 @@ class ServiceClient:
         self,
         verb: int,
         header: dict,
-        body: Optional[Iterable[bytes]] = None,
+        body: Optional[BodyFactory] = None,
     ) -> Tuple[dict, P.BlockReader]:
         """One request/response -> (response header, body reader).
 
         Raises RuntimeError on a server-reported error, ProtocolError on
         malformed traffic.  The caller must drain the returned body before
         issuing the next call.
+
+        A server that closed the connection cleanly before answering (idle
+        timeout, restart) gets one transparent retry on a fresh connection —
+        the protocol is stateless, so a resend is always safe.  A truncation
+        mid-response stays a hard error: fail closed, never guess.
         """
-        P.write_request(self._w, verb, header, body)
-        status, resp, rbody = P.read_response(self._r)
+        got = None
+        for attempt in (0, 1):
+            try:
+                P.write_request(
+                    self._w, verb, header, body() if body is not None else None
+                )
+                got = P.read_response_or_eof(self._r)
+            except (BrokenPipeError, ConnectionResetError):
+                got = None
+            if got is not None:
+                break
+            if attempt:
+                raise P.ProtocolError(
+                    "server closed the connection before responding"
+                )
+            self.close()
+            self._connect()
+        status, resp, rbody = got
         if status == P.STATUS_ERROR:
             rbody.drain()
             raise RuntimeError(
                 f"service error: {resp.get('error', 'unknown error')}"
             )
         return resp, rbody
+
+    @staticmethod
+    def _nbytes(data: PathOrBytes) -> int:
+        # len(memoryview) counts elements, not bytes, for itemsize > 1
+        return memoryview(data).nbytes
+
+    def _bytes_body(self, data: PathOrBytes) -> BodyFactory:
+        return lambda: P.iter_body_blocks(data, self.block_bytes)
+
+    def _file_body(self, fin) -> BodyFactory:
+        """Body factory over an open file; rewinds for a reconnect retry when
+        the source is seekable, and refuses the retry (fail closed, with the
+        real cause) when it is not."""
+        try:
+            pos = fin.tell() if fin.seekable() else None
+        except (AttributeError, OSError, ValueError):
+            pos = None
+        used = [False]
+
+        def factory() -> Iterable[bytes]:
+            if used[0]:
+                if pos is None:
+                    raise P.ProtocolError(
+                        "connection lost and the request body is not"
+                        " rewindable (non-seekable source)"
+                    )
+                fin.seek(pos)
+            used[0] = True
+            return P.iter_body_blocks(fin, self.block_bytes)
+
+        return factory
 
     # -------------------------------------------------------------- commands
     def ping(self) -> dict:
@@ -88,20 +151,16 @@ class ServiceClient:
         """Compress an in-memory payload -> (wire frame, server stats)."""
         header = {
             "plan": plan,
-            "size": len(data),
+            "size": self._nbytes(data),
             "chunk_bytes": int(chunk_bytes or 0),
         }
-        resp, body = self._call(
-            P.VERB_COMPRESS, header, P.iter_body_blocks(data, self.block_bytes)
-        )
+        resp, body = self._call(P.VERB_COMPRESS, header, self._bytes_body(data))
         return body.read(), resp
 
     def decompress_bytes(self, frame: PathOrBytes) -> Tuple[bytes, dict]:
         """Universal decode of an in-memory frame -> (content bytes, stats)."""
         resp, body = self._call(
-            P.VERB_DECOMPRESS,
-            {"size": len(frame)},
-            P.iter_body_blocks(frame, self.block_bytes),
+            P.VERB_DECOMPRESS, {"size": self._nbytes(frame)}, self._bytes_body(frame)
         )
         return body.read(), resp
 
@@ -119,9 +178,7 @@ class ServiceClient:
         if size is not None:
             header["size"] = size
         with _open(src, "rb") as fin:
-            resp, body = self._call(
-                P.VERB_COMPRESS, header, P.iter_body_blocks(fin, self.block_bytes)
-            )
+            resp, body = self._call(P.VERB_COMPRESS, header, self._file_body(fin))
         self._body_to_file(body, dst)
         return resp
 
@@ -131,7 +188,7 @@ class ServiceClient:
         header = {} if size is None else {"size": size}
         with _open(src, "rb") as fin:
             resp, body = self._call(
-                P.VERB_DECOMPRESS, header, P.iter_body_blocks(fin, self.block_bytes)
+                P.VERB_DECOMPRESS, header, self._file_body(fin)
             )
         self._body_to_file(body, dst)
         return resp

@@ -70,6 +70,7 @@ __all__ = [
     "read_request_rest",
     "write_request",
     "read_response",
+    "read_response_or_eof",
     "write_response",
     "iter_body_blocks",
     "parse_address",
@@ -204,6 +205,12 @@ def iter_body_blocks(
     """Cut a bytes-like or binary file into body blocks of ``block_bytes``."""
     if isinstance(src, (bytes, bytearray, memoryview)):
         view = memoryview(src)
+        if view.itemsize != 1 or view.ndim != 1:
+            # slice in *bytes*, not elements (e.g. an int64 array view)
+            try:
+                view = view.cast("B")
+            except TypeError:  # non-contiguous: fall back to one copy
+                view = memoryview(view.tobytes())
         for i in range(0, len(view), block_bytes):
             yield bytes(view[i : i + block_bytes])
         return
@@ -321,6 +328,21 @@ def write_response(
 
 def read_response(r: BinaryIO) -> Tuple[int, dict, BlockReader]:
     status, header, body = read_message(r, RESPONSE_MAGIC)
+    if status not in (STATUS_OK, STATUS_ERROR):
+        raise ProtocolError(f"unknown response status {status}")
+    return status, header, body
+
+
+def read_response_or_eof(r: BinaryIO) -> Optional[Tuple[int, dict, BlockReader]]:
+    """Like :func:`read_response`, but a clean EOF *before any response byte*
+    returns None instead of raising — the signature of a server that closed a
+    persistent connection (idle timeout, restart) between exchanges.  A
+    truncation after the first byte is still a hard :class:`ProtocolError`."""
+    first = r.read(1)
+    if not first:
+        return None
+    _check_magic(first + _read_exact(r, len(RESPONSE_MAGIC) - 1), RESPONSE_MAGIC)
+    status, header, body = _read_tail(r)
     if status not in (STATUS_OK, STATUS_ERROR):
         raise ProtocolError(f"unknown response status {status}")
     return status, header, body

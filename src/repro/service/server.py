@@ -71,6 +71,7 @@ class CompressionServer:
         n_workers: Optional[int] = None,
         window: Optional[int] = None,
         request_timeout: float = 60.0,
+        idle_timeout: float = 300.0,
         spool_bytes: int = 32 << 20,
         max_body_bytes: int = 1 << 30,
     ):
@@ -81,6 +82,10 @@ class CompressionServer:
         self.n_workers = n_workers
         self.window = window
         self.request_timeout = request_timeout
+        # a persistent client legitimately pauses between requests far longer
+        # than any single request takes; conflating the two timeouts silently
+        # severed idle-but-healthy connections
+        self.idle_timeout = idle_timeout
         self.spool_bytes = spool_bytes
         self.max_body_bytes = max_body_bytes
         self.pool = SessionPool(max_per_key=sessions_per_plan)
@@ -207,19 +212,23 @@ class CompressionServer:
         return entry.digest
 
     def _handle_conn(self, sock: socket.socket) -> None:
-        sock.settimeout(self.request_timeout)
         r = sock.makefile("rb")
         w = sock.makefile("wb")
         try:
             while not self._shutdown.is_set():
+                # between requests the connection may sit idle for a long
+                # time (idle_timeout); once a request has started, every
+                # read must make progress within request_timeout
+                sock.settimeout(self.idle_timeout)
                 try:
                     first = r.read(1)
                 except (OSError, socket.timeout):
-                    # idle past request_timeout, or hung up between requests:
+                    # idle past idle_timeout, or hung up between requests:
                     # not an error — reclaim the worker quietly
                     return
                 if not first:
                     return  # clean client hangup between requests
+                sock.settimeout(self.request_timeout)
                 try:
                     verb, header, body = P.read_request_rest(r, first)
                 except (P.ProtocolError, OSError, socket.timeout):
@@ -228,6 +237,11 @@ class CompressionServer:
                     self._bump(errors=1)
                     self._try_error(w, "malformed request (connection dropped)")
                     return
+                # hard cap installed before any dispatch or validation, so
+                # *every* later drain — including error paths that reject the
+                # request before its declared size is even looked at — is
+                # bounded; a flood hits the limit and drops the connection
+                body.limit = self.max_body_bytes
                 self._bump(verb=P.VERBS[verb])
                 try:
                     self._dispatch(verb, header, body, w)
@@ -295,6 +309,27 @@ class CompressionServer:
     def _spool(self):
         return _Spool(max_size=self.spool_bytes)
 
+    def _body_budget(self, body: P.BlockReader) -> Optional[int]:
+        """Narrow the body budget to the declared size -> that size (if any).
+
+        ``_handle_conn`` already installed ``max_body_bytes`` as the hard
+        ceiling; the client's declared ``size`` may only *narrow* it, never
+        widen it — a hostile ``size=2**60`` is rejected up front (and the
+        reject path's ``drain()`` stays bounded by the ceiling).
+        """
+        declared = body.size_hint
+        if declared is not None:
+            if declared > self.max_body_bytes:
+                raise ValueError(
+                    f"declared size {declared} exceeds the server's"
+                    f" per-request limit of {self.max_body_bytes} bytes"
+                )
+            # cut a lying sender off at the first over-budget block — before
+            # its body is buffered — on the bare-frame path too (which reads
+            # the whole payload at once)
+            body.limit = declared
+        return declared
+
     def _do_compress(self, header: dict, body: P.BlockReader, w) -> None:
         key = header.get("plan")
         if not key or not isinstance(key, str):
@@ -306,11 +341,7 @@ class CompressionServer:
         chunk_bytes = int(chunk_bytes)
         if chunk_bytes < 0 or chunk_bytes > MAX_CHUNK_BYTES:
             raise ValueError(f"bad chunk_bytes {chunk_bytes}")
-        declared = body.size_hint
-        # the limit cuts a lying/hostile sender off at the first over-budget
-        # block — before its body is buffered — keeping the bare-frame path
-        # (which reads the whole payload) bounded by what was declared
-        body.limit = declared if declared is not None else self.max_body_bytes
+        declared = self._body_budget(body)
         pool_key = self._session_key(entry)
         with self._spool() as out:
             with self.pool.acquire(pool_key, timeout=self.request_timeout) as sess:
@@ -348,8 +379,7 @@ class CompressionServer:
             )
 
     def _do_decompress(self, header: dict, body: P.BlockReader, w) -> None:
-        declared = body.size_hint
-        body.limit = declared if declared is not None else self.max_body_bytes
+        self._body_budget(body)
         with self._spool() as out:
             stats = stream_io.decompress_file(body, out, session=self._decoder)
             if body.drain():

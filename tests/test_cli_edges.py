@@ -76,6 +76,24 @@ def test_in_place_via_symlink_roundtrips(tmp_path):
     assert out.read_bytes() == DATA
 
 
+def test_atomic_sink_writes_through_symlink_destination(tmp_path):
+    """A symlink destination must behave like ``open(dst, "wb")`` did: the
+    link's *target* gets the new content and the link survives (regression:
+    the atomic rename replaced the symlink itself with a regular file)."""
+    real = tmp_path / "real.ozl"
+    real.write_bytes(b"old")
+    link = tmp_path / "alias.ozl"
+    link.symlink_to(real)
+    src = tmp_path / "in.bin"
+    src.write_bytes(DATA)
+    stream_io.compress_file(src, link, P.generic_profile(), chunk_bytes=0)
+    assert link.is_symlink()  # the link itself was not clobbered
+    assert real.read_bytes() == link.read_bytes() != b"old"
+    out = tmp_path / "out.bin"
+    stream_io.decompress_file(real, out)
+    assert out.read_bytes() == DATA
+
+
 def test_failed_compress_leaves_no_partial_output(tmp_path):
     src = tmp_path / "corpus.bin"
     src.write_bytes(DATA)
@@ -169,6 +187,18 @@ def test_serve_without_address_is_usage_error():
     for bad_tcp in ("localhost", "host:abc"):  # malformed HOST:PORT forms
         with pytest.raises(SystemExit):
             main(["serve", "--tcp", bad_tcp])
+
+
+def test_serve_registration_errors_are_clean(tmp_path):
+    """Bad --profile/--register values must exit with a message, not a raw
+    ValueError/FileNotFoundError traceback."""
+    sock = str(tmp_path / "x.sock")
+    with pytest.raises(SystemExit) as exc:
+        main(["serve", "--socket", sock, "--profile", "bogus"])
+    assert "unknown profile" in str(exc.value)
+    with pytest.raises(SystemExit) as exc:
+        main(["serve", "--socket", sock, "--register", str(tmp_path / "no.ozp")])
+    assert "serve:" in str(exc.value)
 
 
 def test_profile_spec_errors_are_clean():

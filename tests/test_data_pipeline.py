@@ -104,6 +104,77 @@ def test_shard_store_crash_between_renames_recovers(tmp_path):
     assert final.exists() and not aside.exists()
 
 
+def test_shard_store_recovery_tolerates_vanishing_asides(tmp_path, monkeypatch):
+    """An aside dir a concurrent process promotes or sweeps between glob and
+    stat must be skipped, not crash recovery (regression: the mtime sort
+    raised OSError on the vanished entry)."""
+    import os
+    from pathlib import Path
+
+    store = CompressedShardStore(tmp_path)
+    store.write_shard(0, {"a": np.arange(20, dtype=np.int64)})
+    final = tmp_path / "shard_000000"
+    keep = tmp_path / "shard_000000.old.keep.tmp"
+    os.replace(final, keep)  # crash-after-rename-aside, as in the test above
+    ghost = tmp_path / "shard_000000.old.ghost.tmp"
+    ghost.mkdir()
+    now = time.time()
+    os.utime(ghost, (now - 100, now - 100))  # keep is newest: it must win
+
+    real_stat = Path.stat
+    calls = {"n": 0}
+
+    def flaky_stat(self, *a, **kw):
+        if self.name == ghost.name:
+            calls["n"] += 1
+            if calls["n"] > 1:  # is_dir()'s stat sees it; the mtime stat doesn't
+                raise FileNotFoundError(str(self))
+        return real_stat(self, *a, **kw)
+
+    monkeypatch.setattr(Path, "stat", flaky_stat)
+    back = store.read_shard(0)  # recovery skips the ghost, promotes keep
+    assert np.array_equal(back["a"], np.arange(20, dtype=np.int64))
+    assert final.exists() and not keep.exists()
+    assert calls["n"] > 1  # the vanish was actually exercised
+
+
+def test_shard_store_rewrite_survives_reader_promoting_aside(tmp_path, monkeypatch):
+    """A reader whose _recover_aside promotes the aside back *into* the
+    rewrite's rename gap must not crash the writer or lose the staged data
+    (regression: os.replace onto the refilled dir raised ENOTEMPTY and the
+    cleanup deleted the new shard) — the writer re-renames and retries."""
+    import os
+
+    store = CompressedShardStore(tmp_path)
+    store.write_shard(0, {"a": np.arange(20, dtype=np.int64)})
+    final = tmp_path / "shard_000000"
+
+    real_replace = os.replace
+    raced = {"n": 0}
+
+    def racy_replace(src, dst, *a, **kw):
+        # first tmp -> final swap of the rewrite: simulate a concurrent
+        # reader promoting the aside back just before it lands
+        if (
+            str(dst) == str(final)
+            and str(src).endswith(".tmp")
+            and ".old." not in str(src)
+            and raced["n"] == 0
+        ):
+            raced["n"] = 1
+            aside = next(tmp_path.glob("shard_000000.old.*.tmp"))
+            real_replace(aside, final)
+        return real_replace(src, dst, *a, **kw)
+
+    monkeypatch.setattr(os, "replace", racy_replace)
+    meta = store.write_shard(0, {"b": np.arange(7, dtype=np.int64)})
+    assert raced["n"] == 1  # the race was actually injected
+    assert [e["name"] for e in meta["entries"]] == ["b"]
+    back = store.read_shard(0)  # the writer's new data won
+    assert set(back) == {"b"}
+    assert not list(tmp_path.glob("*.tmp"))  # no aside or staging left behind
+
+
 def test_shard_store_read_ignores_orphan_entries(tmp_path):
     """read_shard trusts meta.json, not the directory listing."""
     store = CompressedShardStore(tmp_path)

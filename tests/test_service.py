@@ -352,6 +352,49 @@ def test_service_size_lies_rejected(server):
         assert c.ping()["ok"]
 
 
+def test_service_multibyte_memoryview_payload(server):
+    """len(memoryview) counts elements, not bytes, for itemsize > 1 — the
+    declared size and block slicing must use byte counts (regression: an
+    int64 view declared 1/8th of its bytes and tripped the body limit)."""
+    arr = np.arange(1000, dtype=np.int64)
+    with ServiceClient(server.address) as c:
+        frame, info = c.compress_bytes(memoryview(arr), "generic", chunk_bytes=CHUNK)
+        assert info["bytes_in"] == arr.nbytes
+        back, _ = c.decompress_bytes(frame)
+        assert back == arr.tobytes()
+
+
+def test_idle_client_reconnects_transparently(tmp_path):
+    """The server drops connections idle past idle_timeout (a *separate*,
+    longer knob than request_timeout); a persistent client's next call must
+    succeed anyway via transparent reconnect — for in-memory and (seekable)
+    file bodies alike — instead of dying on 'connection closed mid-message'."""
+    import time
+
+    registry = PlanRegistry()
+    registry.register_profile("generic")
+    srv = CompressionServer(
+        registry,
+        socket_path=str(tmp_path / "idle.sock"),
+        request_timeout=20.0,
+        idle_timeout=0.3,
+    )
+    with srv:
+        src = tmp_path / "in.bin"
+        src.write_bytes(DATA)
+        with ServiceClient(srv.address, timeout=10.0) as c:
+            frame, _ = c.compress_bytes(DATA, "generic", chunk_bytes=CHUNK)
+            time.sleep(1.0)  # provably past the idle cutoff
+            frame2, _ = c.compress_bytes(DATA, "generic", chunk_bytes=CHUNK)
+            assert frame2 == frame
+            time.sleep(1.0)
+            dst = tmp_path / "out.ozl"
+            c.compress_file(src, dst, "generic", chunk_bytes=CHUNK)
+            assert dst.read_bytes() == frame
+        # each idle drop forced a fresh connection
+        assert srv.stats()["connections"] >= 3
+
+
 def test_service_decompress_garbage_rejected(server):
     with ServiceClient(server.address) as c:
         with pytest.raises(RuntimeError):

@@ -294,6 +294,98 @@ def test_compress_declared_size_caps_body(server):
     _assert_healthy(server)
 
 
+def _small_cap_server(tmp_path, cap: int = 64 << 10) -> CompressionServer:
+    registry = PlanRegistry()
+    registry.register_profile("generic")
+    return CompressionServer(
+        registry,
+        socket_path=str(tmp_path / "cap.sock"),
+        max_body_bytes=cap,
+        request_timeout=5.0,
+    )
+
+
+def test_declared_size_cannot_widen_the_cap(tmp_path):
+    """Regression (high severity): a declared ``size`` above max_body_bytes
+    used to *replace* the cap, so ``size=2**60`` unbounded the read.  The
+    declaration may only narrow the budget; over-declaring is rejected up
+    front, on both verbs."""
+    with _small_cap_server(tmp_path) as srv:
+        for verb, header in (
+            (SP.VERB_COMPRESS,
+             {"plan": "generic", "size": 1 << 60, "chunk_bytes": 0}),
+            (SP.VERB_DECOMPRESS, {"size": 1 << 60}),
+        ):
+            buf = io.BytesIO()
+            SP.write_request(buf, verb, header, [b"tiny"])
+            status, header = _response_status(
+                _send_then_close(srv, buf.getvalue())
+            )
+            assert status == SP.STATUS_ERROR
+            assert "limit" in header["error"]
+        _assert_healthy(srv)
+
+
+def test_oversized_declared_flood_is_cut_off(tmp_path):
+    """A hostile client that over-declares *and* keeps streaming is cut off
+    after at most max_body_bytes — the reject-path drain is capped too."""
+    with _small_cap_server(tmp_path) as srv:
+        flood = b"\xaa" * (4 * srv.max_body_bytes)
+        buf = io.BytesIO()
+        SP.write_request(
+            buf, SP.VERB_COMPRESS,
+            {"plan": "generic", "size": 1 << 60, "chunk_bytes": 0},
+            SP.iter_body_blocks(flood, 8192),
+        )
+        out = _send_then_close(srv, buf.getvalue())
+        if out:  # the server may also just drop us mid-flood
+            status, _ = _response_status(out)
+            assert status == SP.STATUS_ERROR
+        _assert_healthy(srv)
+
+
+def test_undeclared_size_still_capped(tmp_path):
+    """Omitting the size header must not lift the cap either (the original
+    guard only fired when the client *declared* a size)."""
+    with _small_cap_server(tmp_path) as srv:
+        flood = b"\xaa" * (4 * srv.max_body_bytes)
+        buf = io.BytesIO()
+        SP.write_request(
+            buf, SP.VERB_COMPRESS,
+            {"plan": "generic", "chunk_bytes": 0},
+            SP.iter_body_blocks(flood, 8192),
+        )
+        out = _send_then_close(srv, buf.getvalue())
+        if out:
+            status, _ = _response_status(out)
+            assert status == SP.STATUS_ERROR
+        _assert_healthy(srv)
+
+
+def test_reject_path_drain_is_bounded(tmp_path):
+    """A request rejected *before* its declared size is even looked at
+    (unknown plan here) must still drain under the hard cap: the over-cap
+    flood drops the connection, so a pipelined follow-up is never served
+    (an uncapped drain would swallow the flood and answer it)."""
+    with _small_cap_server(tmp_path) as srv:
+        flood = b"\xaa" * (4 * srv.max_body_bytes)
+        buf = io.BytesIO()
+        SP.write_request(
+            buf, SP.VERB_COMPRESS,
+            {"plan": "no-such-plan", "chunk_bytes": 0},
+            SP.iter_body_blocks(flood, 8192),
+        )
+        SP.write_request(buf, SP.VERB_PING, {})
+        out = _send_then_close(srv, buf.getvalue())
+        r = io.BytesIO(out)
+        if out:
+            status, _h, body = SP.read_response(r)
+            body.drain()
+            assert status == SP.STATUS_ERROR
+        assert not r.read(), "server drained an over-cap body and kept serving"
+        _assert_healthy(srv)
+
+
 def test_client_rejects_malformed_response():
     """The client side fails closed too: a fake server speaking garbage."""
     fake = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
