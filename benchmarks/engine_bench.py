@@ -119,8 +119,15 @@ def synth_log(nbytes: int, seed: int = 0) -> bytes:
     return b"".join(lines)[:nbytes]
 
 
-def run_codecs(sizes_mib=(1, 16), emit_json=False, print_rows=True):
-    """Benchmark the lz77/huffman/fse hot paths; optionally write JSON."""
+def run_codecs(sizes_mib=(1, 16, 64), emit_json=False, print_rows=True):
+    """Benchmark the lz77/huffman/fse hot paths; optionally write JSON.
+
+    Besides end-to-end MiB/s, each row carries a per-stage wall-clock
+    breakdown (match_find / table_build / bit_io, seconds) from one extra
+    instrumented rep, so a throughput cliff can be *attributed* to a stage
+    rather than just observed.
+    """
+    from repro.codecs import _stages
     from repro.codecs.coder_cache import coder_cache_clear
     from repro.core.codec import get_codec
     from repro.core.message import serial
@@ -150,10 +157,23 @@ def run_codecs(sizes_mib=(1, 16), emit_json=False, print_rows=True):
                     back = spec.run_decode(outs, header)
                     td.append(time.perf_counter() - t0)
                 assert back[0].content_bytes() == data, f"{codec} roundtrip"
+                # one instrumented rep attributes time to codec stages
+                coder_cache_clear()
+                with _stages.collect() as enc_stages:
+                    outs, header = spec.run_encode([s], {})
+                coder_cache_clear()
+                with _stages.collect() as dec_stages:
+                    spec.run_decode(outs, header)
                 key = f"{codec}/{flavor}/{mib}MiB"
                 entry = {
                     "encode_mib_s": round(mib / min(te), 3),
                     "decode_mib_s": round(mib / min(td), 3),
+                    "encode_stages": {
+                        k: round(v, 4) for k, v in sorted(enc_stages.items())
+                    },
+                    "decode_stages": {
+                        k: round(v, 4) for k, v in sorted(dec_stages.items())
+                    },
                 }
                 base = baseline.get(key)
                 if base:
@@ -164,11 +184,22 @@ def run_codecs(sizes_mib=(1, 16), emit_json=False, print_rows=True):
                         entry["decode_mib_s"] / base["decode_mib_s"], 2
                     )
                 results[key] = entry
-                derived = ";".join(f"{k}={v}" for k, v in entry.items())
-                rows.append(f"codecs/{key},{min(te)*1e6:.1f},{derived}")
+                derived = ";".join(
+                    f"{k}={v}"
+                    for k, v in entry.items()
+                    if not isinstance(v, dict)
+                )
+                stages_flat = "|".join(
+                    f"{which}.{k}={v:.4f}"
+                    for which, st in (("enc", enc_stages), ("dec", dec_stages))
+                    for k, v in sorted(st.items())
+                )
+                rows.append(
+                    f"codecs/{key},{min(te)*1e6:.1f},{derived};{stages_flat}"
+                )
     if emit_json:
         payload = {
-            "schema": "BENCH_codecs/v1",
+            "schema": "BENCH_codecs/v2",  # v2: per-stage breakdowns + 64 MiB
             "host_cpus": os.cpu_count(),
             "sizes_mib": list(sizes_mib),
             "baseline": str(baseline_path.name) if baseline else None,
@@ -660,7 +691,7 @@ if __name__ == "__main__":
     )
     ap.add_argument(
         "--sizes",
-        default="1,16",
+        default="1,16,64",
         help="comma-separated codec benchmark sizes in MiB (floats ok)",
     )
     ap.add_argument(

@@ -15,6 +15,7 @@ from . import basic  # noqa: F401
 from . import numeric  # noqa: F401
 from . import convert  # noqa: F401
 from . import entropy  # noqa: F401
+from . import entropy_device  # noqa: F401
 from . import lz  # noqa: F401
 from . import floats  # noqa: F401
 from . import parse  # noqa: F401

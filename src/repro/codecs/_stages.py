@@ -1,0 +1,48 @@
+"""Opt-in per-stage wall-clock attribution for codec hot paths.
+
+The codec bench (``engine_bench --codecs``) needs to *attribute* the
+throughput cliff — match finding vs coder-table builds vs bit I/O — not just
+measure it.  Codecs wrap their phases in ``with stage("name")``; unless a
+caller has an enclosing ``with collect() as timings`` on the same thread the
+stage body runs untimed (one thread-local read of overhead, nanoseconds
+against multi-millisecond passes), so the production path pays nothing.
+
+Stage names used by the suite: ``match_find`` (lz77 chain build + greedy
+walk), ``table_build`` (histogram + code lengths / normalization + coder
+tables), ``bit_io`` (bitstream pack/unpack and lane walks), ``match_replay``
+(lz77 decode-side copy replay).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from typing import Dict, Iterator, Optional
+
+_tls = threading.local()
+
+
+@contextlib.contextmanager
+def collect() -> Iterator[Dict[str, float]]:
+    """Collect stage timings (seconds, summed per name) on this thread."""
+    prev: Optional[Dict[str, float]] = getattr(_tls, "sink", None)
+    sink: Dict[str, float] = {}
+    _tls.sink = sink
+    try:
+        yield sink
+    finally:
+        _tls.sink = prev
+
+
+@contextlib.contextmanager
+def stage(name: str) -> Iterator[None]:
+    """Attribute the enclosed block to ``name`` when a collector is active."""
+    sink = getattr(_tls, "sink", None)
+    if sink is None:
+        yield
+        return
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        sink[name] = sink.get(name, 0.0) + (time.perf_counter() - t0)

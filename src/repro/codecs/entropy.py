@@ -49,11 +49,20 @@ import numpy as np
 from repro.core.codec import CodecSpec, register_codec
 from repro.core.message import Stream, SType
 
+from ._stages import stage as _stage
 from ._util import HeaderReader, HeaderWriter, numeric_stream
 from .coder_cache import active_cache
 
 BLOCK_LOG = 12  # 4096 symbols per lane-block
 MAX_CODE_LEN = 15
+
+# Cache blocking (same story as codecs/lz.py): the histogram, the bit-matrix
+# writer and the lane decoders chunk their passes so per-pass scratch stays
+# LLC-resident — at tens of MiB the unblocked versions streamed multi-hundred
+# MiB index/scratch arrays per pass and went DRAM-bound.
+_HIST_CHUNK = 1 << 20  # bytes per histogram pass (bincount's intp temp stays small)
+_WRITE_CHUNK = 1 << 18  # symbols per bit-writer pass
+_DEC_GROUP_BYTES = 1 << 22  # decoded bytes per lane-decoder group
 
 _U64_1 = np.uint64(1)
 _U64_7 = np.uint64(7)
@@ -80,6 +89,16 @@ def _freeze(*arrays: np.ndarray) -> Tuple[np.ndarray, ...]:
     for a in arrays:
         a.setflags(write=False)
     return arrays
+
+
+def _hist_u8(x: np.ndarray) -> np.ndarray:
+    """256-bin byte histogram, chunked.  ``np.bincount`` widens its input to
+    intp first; chunking keeps that 8-bytes-per-symbol temporary cache-sized
+    instead of materializing it for the whole stream."""
+    counts = np.zeros(256, dtype=np.int64)
+    for lo in range(0, x.size, _HIST_CHUNK):
+        counts += np.bincount(x[lo : lo + _HIST_CHUNK], minlength=256)
+    return counts
 
 
 # =====================================================================
@@ -214,23 +233,45 @@ def _write_bits_blocked(
     offs = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(nbits, out=offs[1:])
     total = int(offs[-1])
-    bits = np.zeros((total + 7) // 8 * 8, dtype=np.uint8)
-    start = offs[:-1]
-    max_nb = int(nbits.max()) if n else 0
-    for b in range(max_nb):
-        m = nbits > b
-        bits[start[m] + b] = (values[m] >> b) & 1
-    return np.packbits(bits, bitorder="little"), offs
+    out = np.zeros((total + 7) // 8, dtype=np.uint8)
+    # chunked by symbols: the unpacked bit matrix, gather indices and plane
+    # masks for one chunk stay cache-resident (the full-stream versions were
+    # the encode bottleneck at tens of MiB).  A chunk's bit range is aligned
+    # down to a byte; the shared boundary byte is OR-merged — exact, because
+    # every output bit is written by exactly one symbol.
+    for lo in range(0, n, _WRITE_CHUNK):
+        hi = min(lo + _WRITE_CHUNK, n)
+        base_bit = int(offs[lo]) & ~7
+        nbits_c = nbits[lo:hi]
+        values_c = values[lo:hi]
+        start = offs[lo:hi] - base_bit
+        local = int(offs[hi]) - base_bit
+        bits = np.zeros((local + 7) // 8 * 8, dtype=np.uint8)
+        min_nb = int(nbits_c.min()) if hi > lo else 0
+        for b in range(int(nbits_c.max()) if hi > lo else 0):
+            if b < min_nb:  # plane present in every symbol: mask-free
+                bits[start + b] = (values_c >> b) & 1
+            else:
+                m = nbits_c > b
+                bits[start[m] + b] = (values_c[m] >> b) & 1
+        packed = np.packbits(bits, bitorder="little")
+        byte0 = base_bit >> 3
+        if packed.size:
+            out[byte0] |= packed[0]
+            out[byte0 + 1 : byte0 + packed.size] = packed[1:]
+    return out, offs
 
 
 def _huffman_enc(streams, params):
     x = _as_u8(streams[0], "huffman")
     n = x.size
-    counts = np.bincount(x, minlength=256)
-    lens = _huffman_code_lengths(counts)
-    codes = _huffman_codes_cached(lens)
-    nbits = lens[x].astype(np.int64)
-    packed, offs = _write_bits_blocked(codes[x], nbits, 1 << BLOCK_LOG)
+    with _stage("table_build"):
+        counts = _hist_u8(x)
+        lens = _huffman_code_lengths(counts)
+        codes = _huffman_codes_cached(lens)
+    with _stage("bit_io"):
+        nbits = lens[x].astype(np.int64)
+        packed, offs = _write_bits_blocked(codes[x], nbits, 1 << BLOCK_LOG)
     block = 1 << BLOCK_LOG
     block_offs = offs[:-1:block] if n else np.zeros(0, np.int64)
     h = HeaderWriter().varint(n).u8(BLOCK_LOG).u8(int(streams[0].stype))
@@ -254,15 +295,16 @@ def _huffman_dec(outs, header):
     lens = np.zeros(256, dtype=np.uint8)
     lens[0::2] = nib & 0xF
     lens[1::2] = nib >> 4
-    lut_sym, lut_len = active_cache().get_or_build(
-        ("huff_dec", nib_raw if isinstance(nib_raw, bytes) else bytes(nib_raw)),
-        lambda: _huffman_decode_lut(lens),
-    )
+    with _stage("table_build"):
+        lut_sym, lut_len = active_cache().get_or_build(
+            ("huff_dec", nib_raw if isinstance(nib_raw, bytes) else bytes(nib_raw)),
+            lambda: _huffman_decode_lut(lens),
+        )
 
     block = 1 << block_log
     n_blocks = (n + block - 1) // block
-    pos = block_offs_s.data.astype(np.uint64).copy()
-    if pos.size != n_blocks:
+    pos_all = block_offs_s.data.astype(np.uint64).copy()
+    if pos_all.size != n_blocks:
         raise ValueError("huffman: block offset count mismatch")
     rem = np.minimum(n - np.arange(n_blocks, dtype=np.int64) * block, block)
     max_rem = int(rem.max()) if n_blocks else 0
@@ -275,33 +317,41 @@ def _huffman_dec(outs, header):
     sliding = np.lib.stride_tricks.sliding_window_view(buf, 8)
     out = np.empty((block, n_blocks), dtype=np.uint8)  # row-major hot stores
     low_mask = np.uint64((1 << MAX_CODE_LEN) - 1)
-    i = 0
-    while i < max_rem:
-        # one gather refills >= 57 valid bits -> up to 3 symbols per refill
-        w = sliding[(pos >> _U64_3)].view(np.uint64)[:, 0]
-        w >>= pos & _U64_7
-        low = w & low_mask
-        ln = lut_len[low]
-        out[i] = lut_sym[low]
-        if i + 1 < max_rem:
-            w >>= ln
-            low = w & low_mask
-            l2 = lut_len[low]
-            out[i + 1] = lut_sym[low]
-            ln += l2
-            if i + 2 < max_rem:
-                w >>= l2
+    # lanes decode in groups so one group's bitstream range and output
+    # columns stay cache-resident; small inputs are one group (no change)
+    G = max(1, _DEC_GROUP_BYTES // block)
+    with _stage("bit_io"):
+        for g0 in range(0, n_blocks, G):
+            g1 = min(g0 + G, n_blocks)
+            pos = pos_all[g0:g1].copy()
+            max_rem_g = int(rem[g0:g1].max())
+            i = 0
+            while i < max_rem_g:
+                # one gather refills >= 57 valid bits -> up to 3 symbols/refill
+                w = sliding[(pos >> _U64_3)].view(np.uint64)[:, 0]
+                w >>= pos & _U64_7
                 low = w & low_mask
-                out[i + 2] = lut_sym[low]
-                ln += lut_len[low]
+                ln = lut_len[low]
+                out[i, g0:g1] = lut_sym[low]
+                if i + 1 < max_rem_g:
+                    w >>= ln
+                    low = w & low_mask
+                    l2 = lut_len[low]
+                    out[i + 1, g0:g1] = lut_sym[low]
+                    ln += l2
+                    if i + 2 < max_rem_g:
+                        w >>= l2
+                        low = w & low_mask
+                        out[i + 2, g0:g1] = lut_sym[low]
+                        ln += lut_len[low]
+                        pos += ln
+                        i += 3
+                        continue
+                    pos += ln
+                    i += 2
+                    continue
                 pos += ln
-                i += 3
-                continue
-            pos += ln
-            i += 2
-            continue
-        pos += ln
-        i += 1
+                i += 1
     if n_blocks:
         lanes = out.T  # (n_blocks, block); full lanes except possibly the last
         result = np.concatenate(
@@ -432,11 +482,12 @@ def _fse_enc(streams, params):
             .u8(stype_tag).bytes_(b"").done()
         )
         return [Stream(np.zeros(0, np.uint8), SType.SERIAL, 1), numeric_stream(np.zeros(0, np.uint32))], h
-    counts = np.bincount(x, minlength=256)
-    norm = _normalize_counts(counts, table_log)
-    _dec_sym, _dec_nb, _dec_base, enc_table, nb0t, thrt, st0t = _fse_tables_cached(
-        norm, table_log
-    )
+    with _stage("table_build"):
+        counts = _hist_u8(x)
+        norm = _normalize_counts(counts, table_log)
+        (
+            _dec_sym, _dec_nb, _dec_base, enc_table, nb0t, thrt, st0t,
+        ) = _fse_tables_cached(norm, table_log)
     total = 1 << table_log
 
     block = 1 << FSE_BLOCK_LOG
@@ -463,48 +514,56 @@ def _fse_enc(streams, params):
     acc = np.zeros(n_blocks, dtype=np.uint64)  # pending bits, LSB = oldest
     cnt = np.zeros(n_blocks, dtype=np.int64)  # live bits in acc (< 8 + tl+1)
     bytepos = np.zeros(n_blocks, dtype=np.int64)
-    for i in range(max_rem - 1, -1, -1):
-        s = lanesT[i].astype(np.int64)
-        emit = rem > i + 1
-        X = state + total  # representative value in [total, 2*total)
-        nb = nb0t[s] - (X < thrt[s])
-        nbe = np.where(emit, nb, 0)
-        nbe_u = nbe.astype(np.uint64)
-        val = X.astype(np.uint64) & ((_U64_1 << nbe_u) - _U64_1)
-        acc |= val << cnt.astype(np.uint64)
-        cnt += nbe
-        nfl = cnt >> 3
-        m = nfl > 0
-        if m.any():
-            # cnt < 8 + (table_log+1), so a step flushes up to
-            # (8 + table_log) // 8 whole bytes — loop the slots, not just two
-            for slot in range(max_flush_bytes):
-                if slot and not (nfl > slot).any():
-                    break
-                ms = m if slot == 0 else nfl > slot
-                flat[lane_base[ms] + bytepos[ms] + slot] = (
-                    (acc[ms] >> np.uint64(8 * slot)) & np.uint64(0xFF)
-                ).astype(np.uint8)
-            acc >>= (nfl << 3).astype(np.uint64)
-            bytepos += nfl
-            cnt -= nfl << 3
-        # state transition (masked: emitting lanes step, new lanes initialize)
-        xprime = np.clip((X >> nb) - norm[s], 0, width - 1)
-        new_state = enc_flat[s * width + xprime]
-        state = np.where(emit, new_state, np.where(rem == i + 1, st0t[s], state))
-    # final partial byte per lane (zero-padded high bits, as the OR-writer did)
-    mfin = cnt > 0
-    if mfin.any():
-        flat[lane_base[mfin] + bytepos[mfin]] = acc[mfin].astype(np.uint8)
-    bitpos = (bytepos << 3) + cnt
+    with _stage("bit_io"):
+        for i in range(max_rem - 1, -1, -1):
+            s = lanesT[i].astype(np.int64)
+            emit = rem > i + 1
+            X = state + total  # representative value in [total, 2*total)
+            nb = nb0t[s] - (X < thrt[s])
+            nbe = np.where(emit, nb, 0)
+            nbe_u = nbe.astype(np.uint64)
+            val = X.astype(np.uint64) & ((_U64_1 << nbe_u) - _U64_1)
+            acc |= val << cnt.astype(np.uint64)
+            cnt += nbe
+            nfl = cnt >> 3
+            m = nfl > 0
+            if m.any():
+                # cnt < 8 + (table_log+1), so a step flushes up to
+                # (8 + table_log) // 8 whole bytes — loop the slots, not two
+                for slot in range(max_flush_bytes):
+                    if slot and not (nfl > slot).any():
+                        break
+                    ms = m if slot == 0 else nfl > slot
+                    flat[lane_base[ms] + bytepos[ms] + slot] = (
+                        (acc[ms] >> np.uint64(8 * slot)) & np.uint64(0xFF)
+                    ).astype(np.uint8)
+                acc >>= (nfl << 3).astype(np.uint64)
+                bytepos += nfl
+                cnt -= nfl << 3
+            # state transition (masked: emitting lanes step, new lanes init)
+            xprime = np.clip((X >> nb) - norm[s], 0, width - 1)
+            new_state = enc_flat[s * width + xprime]
+            state = np.where(
+                emit, new_state, np.where(rem == i + 1, st0t[s], state)
+            )
+        # final partial byte per lane (zero-padded high bits, as the
+        # OR-writer did)
+        mfin = cnt > 0
+        if mfin.any():
+            flat[lane_base[mfin] + bytepos[mfin]] = acc[mfin].astype(np.uint8)
+        bitpos = (bytepos << 3) + cnt
 
-    # concatenate lane bitstreams
-    nbytes = bytepos + (cnt > 0)
-    offsets = np.zeros(n_blocks + 1, dtype=np.int64)
-    np.cumsum(nbytes, out=offsets[1:])
-    stream_out = np.zeros(int(offsets[-1]), dtype=np.uint8)
-    for k in range(n_blocks):
-        stream_out[offsets[k] : offsets[k + 1]] = bitbuf[k, : nbytes[k]]
+        # concatenate lane bitstreams: one ragged gather instead of a
+        # per-lane Python loop (the loop was ~n/1024 iterations — real time
+        # at tens of MiB)
+        nbytes = bytepos + (cnt > 0)
+        offsets = np.zeros(n_blocks + 1, dtype=np.int64)
+        np.cumsum(nbytes, out=offsets[1:])
+        total_bytes = int(offsets[-1])
+        intra = np.arange(total_bytes, dtype=np.int64) - np.repeat(
+            offsets[:-1], nbytes
+        )
+        stream_out = flat[np.repeat(lane_base, nbytes) + intra]
     # block meta: (bit length, final state) as u32 pairs
     meta = np.empty(n_blocks * 2, dtype=np.uint32)
     meta[0::2] = bitpos.astype(np.uint32)
@@ -536,43 +595,56 @@ def _fse_dec(outs, header):
     for _ in range(tbl.varint()):
         s = tbl.varint()
         norm[s] = tbl.varint()
-    dec_sym, dec_nb, dec_base, _enc, _nb0, _thr, _st0 = _fse_tables_cached(
-        norm, table_log
-    )
+    with _stage("table_build"):
+        dec_sym, dec_nb, dec_base, _enc, _nb0, _thr, _st0 = _fse_tables_cached(
+            norm, table_log
+        )
 
     block = 1 << block_log
     n_blocks = (n + block - 1) // block
     meta = meta_s.data.astype(np.int64)
     bitlen = meta[0::2]
-    state = meta[1::2].copy()
+    state_all = meta[1::2]
     nbytes = (bitlen + 7) // 8
     offsets = np.zeros(n_blocks + 1, dtype=np.int64)
     np.cumsum(nbytes, out=offsets[1:])
-    # per-lane padded buffers for vectorized backward reads
+    # per-lane padded buffers for vectorized backward reads, filled with one
+    # ragged scatter (the historical per-lane Python loop was ~n/1024
+    # iterations — real time at tens of MiB)
     cap = int(nbytes.max()) + 16 if n_blocks else 16
     bitbuf = np.zeros((n_blocks, cap), dtype=np.uint8)
-    for k in range(n_blocks):
-        bitbuf[k, : nbytes[k]] = bitstream.data[offsets[k] : offsets[k + 1]]
     flat = bitbuf.reshape(-1)
-    sliding = np.lib.stride_tricks.sliding_window_view(flat, 8)
     lane_base = np.arange(n_blocks, dtype=np.int64) * cap
-    cursor = bitlen.copy()  # read backward from the end
+    total_bytes = int(offsets[-1])
+    intra = np.arange(total_bytes, dtype=np.int64) - np.repeat(
+        offsets[:-1], nbytes
+    )
+    flat[np.repeat(lane_base, nbytes) + intra] = bitstream.data
+    sliding = np.lib.stride_tricks.sliding_window_view(flat, 8)
     rem = np.minimum(n - np.arange(n_blocks, dtype=np.int64) * block, block)
-    max_rem = int(rem.max())
     out = np.empty((block, n_blocks), dtype=np.uint8)
     # mask-free: exhausted lanes walk garbage states over the zero pad —
     # always in-table (base+bits stays in [0, total)), trimmed at the end.
-    for i in range(max_rem):
-        out[i] = dec_sym[state]
-        nb = dec_nb[state]
-        base = dec_base[state]
-        cursor -= nb
-        byte0 = np.maximum(cursor >> 3, 0)
-        w = sliding[lane_base + byte0].view(np.uint64)[:, 0]
-        bits = (w >> (cursor & 7).astype(np.uint64)) & (
-            (_U64_1 << nb.astype(np.uint64)) - _U64_1
-        )
-        state = base + bits.astype(np.int64)
+    # Lanes decode in groups so one group's bitstream slice and output
+    # columns stay cache-resident; small inputs are one group (no change).
+    G = max(1, _DEC_GROUP_BYTES // block)
+    with _stage("bit_io"):
+        for g0 in range(0, n_blocks, G):
+            g1 = min(g0 + G, n_blocks)
+            state = state_all[g0:g1].copy()
+            cursor = bitlen[g0:g1].copy()  # read backward from the end
+            lb = lane_base[g0:g1]
+            for i in range(int(rem[g0:g1].max())):
+                out[i, g0:g1] = dec_sym[state]
+                nb = dec_nb[state]
+                base = dec_base[state]
+                cursor -= nb
+                byte0 = np.maximum(cursor >> 3, 0)
+                w = sliding[lb + byte0].view(np.uint64)[:, 0]
+                bits = (w >> (cursor & 7).astype(np.uint64)) & (
+                    (_U64_1 << nb.astype(np.uint64)) - _U64_1
+                )
+                state = base + bits.astype(np.int64)
     lanes = out.T
     result = np.concatenate(
         [np.ascontiguousarray(lanes[:-1]).reshape(-1), lanes[-1, : rem[-1]]]

@@ -45,6 +45,7 @@ import numpy as np
 from repro.core.codec import CodecSpec, register_codec
 from repro.core.message import Stream, SType
 
+from ._stages import stage as _stage
 from ._util import HeaderReader, HeaderWriter, numeric_stream
 
 MIN_MATCH = 4
@@ -52,6 +53,16 @@ MAX_MATCH = 1 << 16
 
 _HASH_MUL = np.uint32(2654435761)  # Knuth multiplicative hash -> 16 bits
 _EXT_CHUNK_MAX = 4096  # doubling cap for batched extension gathers
+
+# Cache blocking: the chain build, candidate validation and lockstep walk all
+# process the input in fixed-size windows so their index/metadata working set
+# (a handful of 4-8-byte-per-position arrays plus the window's bytes) stays
+# cache-resident instead of strided over the whole input.  Sizes were swept
+# empirically (2x gains on the chain build at 16 MiB); above ~16 MiB the
+# unblocked versions went DRAM/TLB-bound and lost >2x throughput.
+_PREV_BLOCK = 1 << 19  # positions per blocked chain-sort window
+_WALK_WINDOW = 1 << 21  # input bytes per lockstep walk window
+_SEG = 1024  # bytes per speculative lane segment inside a window
 
 
 def _grams(data: np.ndarray) -> np.ndarray:
@@ -94,31 +105,45 @@ def _chain_half(h: np.ndarray, prev: np.ndarray, lo: int, hi: int):
 def _build_prev(h: np.ndarray, n: int, ng: int) -> np.ndarray:
     """prev[i] = most recent j < i with h[j] == h[i] (else -1), int32.
 
-    Large inputs sort two halves concurrently (argsort and the gathers
-    release the GIL); a 2^16-entry last-occurrence table re-links the second
-    half's bucket-first positions to the first half — semantics identical to
-    one global stable sort.
+    Large inputs are chained in ``_PREV_BLOCK``-position windows (the blocked
+    generalization of the historical two-half split): each window is stably
+    sorted on its own — small enough that the sort indices and hash gathers
+    stay cache-resident — and a 2^16-entry last-occurrence table, updated
+    window by window, re-links each window's bucket-first positions to the
+    most recent same-hash position in any earlier window.  Semantics are
+    identical to one global stable sort; the next window's sort overlaps the
+    previous window's stitch on a 2-deep thread pipeline (argsort and the
+    gathers release the GIL).
     """
     prev = np.empty(n, dtype=np.int32)
     prev[ng:] = -1
-    if ng < (1 << 18):
+    if ng <= _PREV_BLOCK:
         _chain_half(h, prev, 0, ng)
         return prev
+    from collections import deque
     from concurrent.futures import ThreadPoolExecutor
 
-    mid = ng >> 1
-    with ThreadPoolExecutor(2) as pool:
-        fa = pool.submit(_chain_half, h, prev, 0, mid)
-        fb = pool.submit(_chain_half, h, prev, mid, ng)
-        oA, shA, _ = fa.result()
-        oB, _, sameB = fb.result()
-    lastA = np.full(1 << 16, -1, dtype=np.int32)
-    endA = np.empty(shA.size, dtype=bool)
-    endA[-1] = True
-    endA[:-1] = shA[1:] != shA[:-1]
-    lastA[shA[endA]] = oA[endA]  # unique hashes: guaranteed scatter
-    fpos = oB[~sameB]  # second-half positions with no in-half predecessor
-    prev[fpos] = lastA[h[fpos]]
+    last = np.full(1 << 16, -1, dtype=np.int32)
+
+    def _stitch(lo: int, fut) -> None:
+        o, sh, same = fut.result()
+        if lo:
+            fpos = o[~same]  # window positions with no in-window predecessor
+            prev[fpos] = last[h[fpos]]
+        end = np.empty(sh.size, dtype=bool)
+        end[-1] = True
+        end[:-1] = sh[1:] != sh[:-1]
+        last[sh[end]] = o[end]  # unique hashes: guaranteed scatter
+
+    with ThreadPoolExecutor(1) as pool:
+        pending = deque()
+        for lo in range(0, ng, _PREV_BLOCK):
+            hi = min(lo + _PREV_BLOCK, ng)
+            pending.append((lo, pool.submit(_chain_half, h, prev, lo, hi)))
+            if len(pending) > 1:
+                _stitch(*pending.popleft())
+        while pending:
+            _stitch(*pending.popleft())
     return prev
 
 
@@ -270,16 +295,8 @@ def _find_tokens(data: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         ok = (pv >= 0) & (g[pv] == g[lo:hi])  # negative pv wraps: masked out
         cand[lo:hi] = np.where(ok, np.arange(lo, hi, dtype=np.int32), BIG)
 
-    if ng >= (1 << 18):
-        from concurrent.futures import ThreadPoolExecutor
-
-        mid = ng >> 1
-        with ThreadPoolExecutor(2) as pool:
-            f = pool.submit(_cand_slice, 0, mid)
-            _cand_slice(mid, ng)
-            f.result()
-    else:
-        _cand_slice(0, ng)
+    for lo in range(0, ng, _PREV_BLOCK):  # blocked: slice stays LLC-resident
+        _cand_slice(lo, min(lo + _PREV_BLOCK, ng))
     nxt = np.empty(n + 1, dtype=np.int32)
     nxt[ng:] = BIG
     nxt[:ng] = np.minimum.accumulate(cand[::-1])[::-1]
@@ -291,53 +308,72 @@ def _find_tokens(data: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     # parks itself at p = n (where nxt is the sentinel), after which every
     # per-step op degenerates to a no-op for it (extension limit 0, state
     # writes gated by `has`).  No per-step lane compression.
-    S = int(np.clip(n // 1024, 1, 2048))
-    seg = -(-n // S)
+    #
+    # Cache-blocked: lanes run one _WALK_WINDOW of input at a time, so every
+    # per-step gather (nxt, prev, chain scatter, most extension reads) lands
+    # in that window's slice of the metadata arrays instead of striding the
+    # whole input.  Each window's chains are kept with a global base index;
+    # the splice below walks windows in parse order.  Inputs <= one window
+    # behave exactly like the historical unblocked walk.
+    S = -(-min(n, _WALK_WINDOW) // _SEG)  # lanes per window
     pad = np.zeros((n + _EXT_CHUNK_MAX + 23) & ~7, dtype=np.uint8)
     pad[:n] = data
     U = pad.view(np.uint64)
-    steps = np.zeros(S, dtype=np.int64)
-    cap = max(64, seg // 5)
-    chain_m = np.zeros((cap, S), dtype=np.int32)
-    chain_l = np.zeros((cap, S), dtype=np.int32)
-    # ceil(n/S) segments can overshoot n for the last lanes when S does not
-    # divide n: clamp their start to n — they begin parked (nxt[n] sentinel)
-    p = np.minimum(np.arange(S, dtype=np.int64) * seg, n)
-    lend = np.minimum(p + seg, n)
     n_i = np.int64(n)
-    t = 0
-    while True:
-        ma = nxt[p].astype(np.int64)
-        has = ma < ng
-        if not has.any():
-            break
-        if t == cap:
-            grow = np.zeros((cap, S), dtype=np.int32)
-            chain_m = np.concatenate([chain_m, grow])
-            chain_l = np.concatenate([chain_l, grow])
-            cap *= 2
-        np.minimum(ma, ng - 1, out=ma)  # clip parked/tail lanes for gathers
-        ja = prev[ma].astype(np.int64)
-        limit = np.where(has, np.minimum(n_i - ma, MAX_MATCH) - MIN_MATCH, 0)
-        L = MIN_MATCH + _batch_extend(
-            pad, U, ma + MIN_MATCH, ja + MIN_MATCH, limit
-        )
-        chain_m[t] = ma
-        chain_l[t] = L
-        steps = np.where(has, t + 1, steps)
-        np.copyto(p, ma + L, where=has)
-        np.copyto(p, n_i, where=p >= lend)  # park finished lanes
-        t += 1
-    # a lane still short of its segment end ran out of matches entirely
-    tail = p < lend
+    m2idx = np.full(ng, -1, dtype=np.int32)
+    windows = []  # (chain_m, chain_l, steps, tail) per walk window
+    bases = []  # global chain-index base per window
+    base = 0
+    for wlo in range(0, n, _WALK_WINDOW):
+        steps = np.zeros(S, dtype=np.int64)
+        cap = max(64, _SEG // 5)
+        chain_m = np.zeros((cap, S), dtype=np.int32)
+        chain_l = np.zeros((cap, S), dtype=np.int32)
+        # lane starts past n (last window) clamp to n — they begin parked
+        p = np.minimum(wlo + np.arange(S, dtype=np.int64) * _SEG, n)
+        lend = np.minimum(p + _SEG, n)
+        t = 0
+        while True:
+            ma = nxt[p].astype(np.int64)
+            has = ma < ng
+            if not has.any():
+                break
+            if t == cap:
+                grow = np.zeros((cap, S), dtype=np.int32)
+                chain_m = np.concatenate([chain_m, grow])
+                chain_l = np.concatenate([chain_l, grow])
+                cap *= 2
+            np.minimum(ma, ng - 1, out=ma)  # clip parked/tail lanes
+            ja = prev[ma].astype(np.int64)
+            limit = np.where(has, np.minimum(n_i - ma, MAX_MATCH) - MIN_MATCH, 0)
+            L = MIN_MATCH + _batch_extend(
+                pad, U, ma + MIN_MATCH, ja + MIN_MATCH, limit
+            )
+            chain_m[t] = ma
+            chain_l[t] = L
+            steps = np.where(has, t + 1, steps)
+            np.copyto(p, ma + L, where=has)
+            np.copyto(p, n_i, where=p >= lend)  # park finished lanes
+            t += 1
+        # a lane still short of its segment end ran out of matches entirely
+        tail = p < lend
+        if t == 0:  # no lane recorded a token: nothing to splice or index
+            continue
+        tt, ss = np.nonzero(np.arange(t)[:, None] < steps[None, :])
+        # later windows may revisit a match start an earlier window's lane
+        # overshot into; greedy parses are memoryless, so both record the
+        # same (start, length) token and either chain is a valid entry.
+        m2idx[chain_m[tt, ss]] = (base + tt * S + ss).astype(np.int32)
+        windows.append((chain_m, chain_l, steps, tail))
+        bases.append(base)
+        base += t * S
 
     # --- splice chains into the true parse -------------------------------
     # Indexed by *match start*, not walk position: every position in a
     # literal gap funnels to the same next match (nxt is a step function),
     # so entering any chain token by its match start resyncs immediately.
-    m2idx = np.full(ng, -1, dtype=np.int32)
-    tt, ss = np.nonzero(np.arange(t)[:, None] < steps[None, :])
-    m2idx[chain_m[tt, ss]] = (tt * S + ss).astype(np.int32)
+    from bisect import bisect_right
+
     buf = data.tobytes()
     parts_m: List[np.ndarray] = []
     parts_l: List[np.ndarray] = []
@@ -348,7 +384,9 @@ def _find_tokens(data: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
             break
         k = int(m2idx[m])
         if k >= 0:
-            t0, s = divmod(k, S)
+            w = bisect_right(bases, k) - 1
+            chain_m, chain_l, steps, tail = windows[w]
+            t0, s = divmod(k - bases[w], S)
             t1 = int(steps[s])
             parts_m.append(chain_m[t0:t1, s])
             parts_l.append(chain_l[t0:t1, s])
@@ -377,7 +415,8 @@ def _lz77_enc(streams, params):
         raise ValueError("lz77: fixed-width streams only (string_split first)")
     data = np.frombuffer(s.content_bytes(), dtype=np.uint8)
     n = data.size
-    M, L, offsets = _find_tokens(data)
+    with _stage("match_find"):
+        M, L, offsets = _find_tokens(data)
 
     if M.size:
         ends = M + L
@@ -424,38 +463,34 @@ def _lz77_dec(outs, header):
     np.cumsum(mls[:K], out=cum_mls[1:])
     if cum_runs[-1] + cum_mls[-1] != n or cum_runs[-1] != lit.size:
         raise ValueError("lz77: corrupt token streams")
-    # literal destinations: run k starts after k runs and min(k, K) matches
+    # literal destinations: run k starts after k runs and min(k, K) matches.
+    # Scatter by ragged ranges (the decode twin of the encoder's ragged
+    # gather): run starts are strictly increasing cumsums of non-negative
+    # lengths, so ranges are disjoint by construction — O(total literals),
+    # where the historical coverage-map scatter walked O(n) three times.
     lstart = cum_runs[:-1] + cum_mls[np.minimum(np.arange(runs.size), K)]
     out = np.empty(n, dtype=np.uint8)
-    if n:
-        cover = np.zeros(n + 1, dtype=np.int8)
-        nz = runs > 0
-        np.add.at(cover, lstart[nz], 1)
-        np.add.at(cover, (lstart + runs)[nz], -1)
-        inlit = np.cumsum(cover[:n]).astype(bool)
-        if int(inlit.sum()) != lit.size:
-            raise ValueError("lz77: corrupt token streams")
-        out[inlit] = lit
+    if lit.size:
+        intra = np.arange(lit.size, dtype=np.int64) - np.repeat(
+            cum_runs[:-1], runs
+        )
+        out[np.repeat(lstart, runs) + intra] = lit
     # match destinations, replayed in order at memcpy speed
     mstart = (cum_runs[1 : K + 1] + cum_mls[:-1]).tolist()
     if K and (offs[:K] <= 0).any():
         raise ValueError("lz77: corrupt token streams")
     ba = bytearray(out)
-    ml = mls[:K].tolist()
-    ol = offs[:K].tolist()
-    for k in range(K):
-        mp = mstart[k]
-        length = ml[k]
-        d = ol[k]
-        src = mp - d
-        if src < 0:
-            raise ValueError("lz77: corrupt token streams")
-        if d >= length:
-            ba[mp : mp + length] = ba[src : src + length]
-        else:  # overlapping copy: replicate the period
-            pattern = ba[src:mp]
-            reps = -(-length // d)
-            ba[mp : mp + length] = (pattern * reps)[:length]
+    with _stage("match_replay"):
+        for mp, length, d in zip(mstart, mls[:K].tolist(), offs[:K].tolist()):
+            src = mp - d
+            if src < 0:
+                raise ValueError("lz77: corrupt token streams")
+            if d >= length:
+                ba[mp : mp + length] = ba[src : src + length]
+            else:  # overlapping copy: replicate the period
+                pattern = ba[src:mp]
+                reps = -(-length // d)
+                ba[mp : mp + length] = (pattern * reps)[:length]
     from repro.core.message import from_wire
 
     return [from_wire(stype, width, bytes(ba), None)]

@@ -687,6 +687,9 @@ def _concat_decoded(parts: List[Stream]) -> Stream:
 
 
 # ------------------------------------------------------------------ sessions
+_DRAW_END = object()  # sentinel: the chunk source is exhausted
+
+
 class _SessionBase:
     """Shared pool/scratch plumbing for the two session classes."""
 
@@ -697,6 +700,7 @@ class _SessionBase:
         table_cache_size: int,
         pool_name: str,
         scratch: Optional[ExecScratch] = None,
+        prefetch: bool = True,
     ):
         self.n_workers = n_workers
         # a caller-provided scratch lets many sessions share one coder-table
@@ -704,15 +708,25 @@ class _SessionBase:
         self.scratch = scratch if scratch is not None else ExecScratch(table_cache_size)
         self._window = window
         self._pool: Optional[ThreadPoolExecutor] = None
+        self._draw_pool: Optional[ThreadPoolExecutor] = None
         self._pool_lock = threading.Lock()
         self._pool_name = pool_name
+        self.prefetch = prefetch
         self._stats_lock = threading.Lock()
-        self.stats: Dict[str, int] = {
+        self.stats: Dict[str, float] = {
             "calls": 0,
             "chunks": 0,
             "bytes_in": 0,
             "bytes_out": 0,
             "max_inflight": 0,
+            # double-buffer accounting: a *hit* is a source draw (split /
+            # read / host->device transfer) that finished entirely in the
+            # shadow of in-flight encodes; the _s counters are main-loop
+            # seconds blocked on each pipeline stage
+            "prefetch_hits": 0,
+            "prefetch_misses": 0,
+            "draw_wait_s": 0.0,
+            "encode_wait_s": 0.0,
         }
 
     def _bump(self, **deltas: int) -> None:
@@ -731,6 +745,17 @@ class _SessionBase:
                 )
             return self._pool
 
+    def _draw_pool_get(self) -> ThreadPoolExecutor:
+        """Dedicated single thread for source draws: the double buffer's host
+        stage must not queue behind encodes on the shared pool, or a busy
+        window would serialize exactly the work prefetch exists to hide."""
+        with self._pool_lock:
+            if self._draw_pool is None:
+                self._draw_pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix=self._pool_name + "-draw"
+                )
+            return self._draw_pool
+
     @property
     def window(self) -> int:
         """Max chunks in flight: bounds peak memory at ~window × chunk size."""
@@ -744,38 +769,73 @@ class _SessionBase:
         """Map ``fn`` over ``items`` on the pool, yielding results *in order*
         while keeping at most ``self.window`` tasks (and their inputs/outputs)
         alive.  ``head`` prepends already-drawn items without re-consuming the
-        iterator."""
+        iterator.
+
+        Double-buffered: with :attr:`prefetch` on, the next item is drawn
+        from the source *on the pool* while encodes are in flight, so chunk
+        N's encode overlaps chunk N+1's host stage (split, file read,
+        host->device transfer for a lazy source).  At most one draw is in
+        flight, preserving the source's single-consumer contract; the
+        prefetch_hits / draw_wait_s counters in :attr:`stats` report how much
+        of the host stage the overlap actually hid."""
         pool = self._pool_get()
         window = self.window
         it = iter(items)
         pending: "deque" = deque(pool.submit(fn, x) for x in (head or []))
+        drawer = self._draw_pool_get() if self.prefetch else None
+        draw = drawer.submit(next, it, _DRAW_END) if drawer is not None else None
         exhausted = False
         try:
             while pending or not exhausted:
                 while not exhausted and len(pending) < window:
-                    try:
-                        item = next(it)
-                    except StopIteration:
-                        exhausted = True
-                        break
-                    pending.append(pool.submit(fn, item))
+                    if draw is not None:
+                        hidden = bool(pending) and draw.done()
+                        t0 = time.perf_counter()
+                        item = draw.result()
+                        dt = time.perf_counter() - t0
+                        if item is _DRAW_END:
+                            exhausted = True
+                            draw = None
+                            break
+                        pending.append(pool.submit(fn, item))
+                        draw = drawer.submit(next, it, _DRAW_END)
+                        with self._stats_lock:
+                            key = "prefetch_hits" if hidden else "prefetch_misses"
+                            self.stats[key] += 1
+                            self.stats["draw_wait_s"] += dt
+                    else:
+                        try:
+                            item = next(it)
+                        except StopIteration:
+                            exhausted = True
+                            break
+                        pending.append(pool.submit(fn, item))
                 if not pending:
                     break
                 with self._stats_lock:
                     if len(pending) > self.stats["max_inflight"]:
                         self.stats["max_inflight"] = len(pending)
-                yield pending.popleft().result()
+                t0 = time.perf_counter()
+                result = pending.popleft().result()
+                with self._stats_lock:
+                    self.stats["encode_wait_s"] += time.perf_counter() - t0
+                yield result
         finally:
             for fut in pending:
                 fut.cancel()
+            if draw is not None:
+                draw.cancel()
 
     def close(self) -> None:
         """Release the pool.  The session object stays usable (a new pool is
         created on demand), so throwaway wrapper usage is cheap and idempotent."""
         with self._pool_lock:
             pool, self._pool = self._pool, None
+            draw_pool, self._draw_pool = self._draw_pool, None
         if pool is not None:
             pool.shutdown(wait=True)
+        if draw_pool is not None:
+            draw_pool.shutdown(wait=True)
 
     def __enter__(self):
         return self
@@ -800,6 +860,12 @@ class CompressorSession(_SessionBase):
     encode → in-order incremental write* behind a bounded in-flight window, so
     feeding it a lazy chunk iterator (``repro.core.stream_io``) compresses
     arbitrarily large inputs with peak memory ≈ ``window × chunk_bytes``.
+    The window is double-buffered (``prefetch=True``): chunk N+1's host
+    stage — split, file read, host->device transfer — is drawn on the pool
+    while chunk N encodes, and ``stats["prefetch_hits"]`` /
+    ``stats["draw_wait_s"]`` / ``stats["encode_wait_s"]`` report how much of
+    it the overlap hid.  Knobs: ``window`` bounds chunks in flight,
+    ``n_workers`` sizes the pool, ``prefetch`` disables the double buffer.
 
     Output is byte-identical to the module-level ``compress()`` with the same
     arguments — sessions change *when* work happens, never the wire format.
@@ -819,8 +885,11 @@ class CompressorSession(_SessionBase):
         use_resolve_cache: bool = True,
         table_cache_size: int = 256,
         scratch: Optional[ExecScratch] = None,
+        prefetch: bool = True,
     ):
-        super().__init__(n_workers, window, table_cache_size, "ozl-enc", scratch)
+        super().__init__(
+            n_workers, window, table_cache_size, "ozl-enc", scratch, prefetch
+        )
         self.plan = plan.validate()
         self.ctx = ctx or CompressionCtx()
         check_compress_version(self.ctx.format_version)
@@ -1021,8 +1090,11 @@ class DecompressorSession(_SessionBase):
         window: Optional[int] = None,
         table_cache_size: int = 256,
         scratch: Optional[ExecScratch] = None,
+        prefetch: bool = True,
     ):
-        super().__init__(n_workers, window, table_cache_size, "ozl-dec", scratch)
+        super().__init__(
+            n_workers, window, table_cache_size, "ozl-dec", scratch, prefetch
+        )
 
     def _one(self, frame: bytes) -> List[Stream]:
         with self.scratch.activate():

@@ -1,0 +1,201 @@
+"""Pallas TPU kernels: tANS (FSE) interleaved-state encode scan + decode.
+
+State machine after the SCL FSE exemplar and the host coder
+(``repro.codecs.entropy``): encode walks each lane *backward*, carrying an
+int32 state in [0, 2*2^table_log); a lane of length r initializes its state
+at position r-1 and, for every earlier position, emits the low
+``nb0[s] - (X < thr[s])`` bits of ``X = state + total`` before stepping
+through the flattened encode table.  The kernel produces the per-position
+(value, nbits) planes plus final states; bit I/O composition (suffix-sum
+offsets + the scatter-add packer) is XLA glue in ops.py — placing values
+directly into the concatenated wire layout.
+
+Decode is the forward walk: emit ``dec_sym[state]``, retreat the bit cursor,
+refill a 32-bit window from the per-lane padded buffer (lane_refill gather
+idiom) and gather the next state.  Exhausted lanes walk garbage states over
+the zero pad — always in-table, trimmed by the caller, exactly like the
+host's mask-free loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE_BLOCK = 256  # lanes per grid step
+
+
+def _encode_kernel(
+    lanesT_ref,
+    rem_ref,
+    nb0_ref,
+    thr_ref,
+    st0_ref,
+    norm_ref,
+    enc_ref,
+    val_ref,
+    nbs_ref,
+    state_ref,
+    *,
+    width,
+    total,
+    max_rem,
+):
+    rem = rem_ref[...].astype(jnp.int32)
+    nb0 = nb0_ref[...]
+    thr = thr_ref[...]
+    st0 = st0_ref[...]
+    norm = norm_ref[...]
+    enc = enc_ref[...]
+
+    def step(j, state):
+        i = max_rem - 1 - j
+        s = lanesT_ref[pl.ds(i, 1), :].reshape(-1).astype(jnp.int32)
+        emit = rem > i + 1
+        X = state + total
+        nb = jnp.take(nb0, s) - (X < jnp.take(thr, s)).astype(jnp.int32)
+        nbe = jnp.where(emit, nb, 0)
+        val = X.astype(jnp.uint32) & (
+            (jnp.uint32(1) << nbe.astype(jnp.uint32)) - jnp.uint32(1)
+        )
+        val_ref[pl.ds(i, 1), :] = val[None, :]
+        nbs_ref[pl.ds(i, 1), :] = nbe[None, :]
+        xprime = jnp.clip((X >> nb) - jnp.take(norm, s), 0, width - 1)
+        new_state = jnp.take(enc, s * width + xprime)
+        return jnp.where(
+            emit, new_state, jnp.where(rem == i + 1, jnp.take(st0, s), state)
+        )
+
+    state_ref[...] = jax.lax.fori_loop(
+        0, max_rem, step, jnp.zeros(rem.shape, jnp.int32)
+    )
+
+
+def fse_encode_pallas(
+    lanesT: jax.Array,
+    rem: jax.Array,
+    nb0: jax.Array,
+    thr: jax.Array,
+    st0: jax.Array,
+    norm: jax.Array,
+    enc_flat: jax.Array,
+    width: int,
+    total: int,
+    *,
+    interpret: bool = True,
+):
+    """(lanesT u8 (max_rem, n_lanes), rem i32, per-symbol tables i32[256],
+    enc_flat i32) -> (vals u32, nbits i32) planes + final lane states i32."""
+    max_rem, n = lanesT.shape
+    assert n % LANE_BLOCK == 0, "caller pads lanes to LANE_BLOCK multiple"
+    grid = (n // LANE_BLOCK,)
+    tab = lambda a: pl.BlockSpec(a.shape, lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(
+            _encode_kernel, width=width, total=total, max_rem=max_rem
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((max_rem, LANE_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((LANE_BLOCK,), lambda i: (i,)),
+            tab(nb0),
+            tab(thr),
+            tab(st0),
+            tab(norm),
+            tab(enc_flat),
+        ],
+        out_specs=[
+            pl.BlockSpec((max_rem, LANE_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((max_rem, LANE_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((LANE_BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((max_rem, n), jnp.uint32),
+            jax.ShapeDtypeStruct((max_rem, n), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lanesT, rem, nb0, thr, st0, norm, enc_flat)
+
+
+def _decode_kernel(
+    lane_base_ref,
+    bitlen_ref,
+    state0_ref,
+    flat_ref,
+    sym_ref,
+    nb_ref,
+    base_ref,
+    o_ref,
+    *,
+    max_rem,
+):
+    w32 = flat_ref[...].astype(jnp.uint32)
+    sym = sym_ref[...].astype(jnp.int32)
+    nbt = nb_ref[...]
+    bst = base_ref[...]
+    lane_base = lane_base_ref[...].astype(jnp.int32)
+
+    def step(i, carry):
+        state, cursor = carry
+        o_ref[pl.ds(i, 1), :] = jnp.take(sym, state).astype(jnp.uint8)[None, :]
+        nb = jnp.take(nbt, state)
+        base = jnp.take(bst, state)
+        cursor = cursor - nb
+        byte0 = lane_base + jnp.maximum(cursor >> 3, 0)
+        r = (cursor & 7).astype(jnp.uint32)
+        b0 = jnp.take(w32, byte0)
+        b1 = jnp.take(w32, byte0 + 1)
+        b2 = jnp.take(w32, byte0 + 2)
+        b3 = jnp.take(w32, byte0 + 3)
+        b4 = jnp.take(w32, byte0 + 4)
+        lo = b0 | (b1 << 8) | (b2 << 16) | (b3 << 24)
+        win = (lo >> r) | ((b4 << 1) << (jnp.uint32(31) - r))
+        bits = win & ((jnp.uint32(1) << nb.astype(jnp.uint32)) - jnp.uint32(1))
+        return base + bits.astype(jnp.int32), cursor
+
+    jax.lax.fori_loop(
+        0,
+        max_rem,
+        step,
+        (state0_ref[...].astype(jnp.int32), bitlen_ref[...].astype(jnp.int32)),
+    )
+
+
+def fse_decode_pallas(
+    flat: jax.Array,
+    lane_base: jax.Array,
+    bitlen: jax.Array,
+    state0: jax.Array,
+    dec_sym: jax.Array,
+    dec_nb: jax.Array,
+    dec_base: jax.Array,
+    max_rem: int,
+    *,
+    interpret: bool = True,
+):
+    """(flat u8 concatenated per-lane padded buffers, lane_base i32 byte
+    offsets, bitlen i32 bit lengths, state0 i32 final states, decode tables
+    2^table_log) -> (max_rem, n_lanes) u8 symbols."""
+    n = bitlen.shape[0]
+    assert n % LANE_BLOCK == 0, "caller pads lanes to LANE_BLOCK multiple"
+    grid = (n // LANE_BLOCK,)
+    tab = lambda a: pl.BlockSpec(a.shape, lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, max_rem=max_rem),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((LANE_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((LANE_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((LANE_BLOCK,), lambda i: (i,)),
+            tab(flat),
+            tab(dec_sym),
+            tab(dec_nb),
+            tab(dec_base),
+        ],
+        out_specs=pl.BlockSpec((max_rem, LANE_BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((max_rem, n), jnp.uint8),
+        interpret=interpret,
+    )(lane_base, bitlen, state0, flat, dec_sym, dec_nb, dec_base)

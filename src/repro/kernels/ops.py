@@ -205,6 +205,186 @@ def fused_delta_bitpack_decode(w: jax.Array, bits: int, n: int, *, use_pallas: b
     return out[:n]
 
 
+# ---------------------------------------------------------- entropy: huffman
+@functools.partial(jax.jit, static_argnames=())
+def histogram_exact(x: jax.Array) -> jax.Array:
+    """256-bin counts with integer accumulation — exact at any stream size.
+
+    The MXU ``histogram`` kernel is f32 and only exact below 2^24 per bin;
+    entropy-coder table construction needs exact counts, so the device twins
+    use this (scatter-add on both backends — no Pallas variant needed)."""
+    return ref.histogram_exact(x.astype(jnp.uint8))
+
+
+@functools.partial(jax.jit, static_argnames=("total_bytes",))
+def pack_bits(vals: jax.Array, offs: jax.Array, total_bytes: int) -> jax.Array:
+    """Scatter-add bit packer (see ref.pack_bits): bit-identical to the host
+    bit-matrix writer.  ``total_bytes`` is static — callers pass a bucketed
+    capacity and trim, so content-dependent sizes don't recompile."""
+    return ref.pack_bits(vals.astype(jnp.uint32), offs.astype(jnp.int32), total_bytes)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def huffman_map(x: jax.Array, codes: jax.Array, lens: jax.Array, *, use_pallas: bool = True):
+    """Symbols -> (canonical code u32, nbits i32, exclusive bit offs i32[n+1]).
+
+    ``offs[-1]`` is the total bit count; the cumsum stays int32, so callers
+    gate stream size at <= 2^27 symbols (15 bits/code max)."""
+    from .huffman import MAP_BLOCK, huffman_map_pallas
+
+    x = x.astype(jnp.uint8)
+    codes = codes.astype(jnp.uint32)
+    lens = lens.astype(jnp.int32)
+    n = x.shape[0]
+    if n == 0:
+        z = jnp.zeros((0,), jnp.uint32)
+        return z, z.astype(jnp.int32), jnp.zeros((1,), jnp.int32)
+    if use_pallas:
+        code, nb = huffman_map_pallas(
+            _pad_to(x, MAP_BLOCK), codes, lens, interpret=_interpret()
+        )
+        code, nb = code[:n], nb[:n]
+    else:
+        code, nb = ref.huffman_map(x, codes, lens)
+    offs = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(nb, dtype=jnp.int32)]
+    )
+    return code, nb, offs
+
+
+@functools.partial(jax.jit, static_argnames=("max_rem", "use_pallas"))
+def huffman_decode(
+    buf: jax.Array,
+    pos: jax.Array,
+    lut_sym: jax.Array,
+    lut_len: jax.Array,
+    max_rem: int,
+    *,
+    use_pallas: bool = True,
+):
+    """Lane-parallel Huffman decode -> (max_rem, n_lanes) u8 symbols.
+
+    ``buf`` must be padded so every cursor has the host decoder's overrun
+    room; surplus rows of short lanes are pad garbage the caller trims."""
+    from .huffman import LANE_BLOCK, huffman_decode_pallas
+
+    buf = buf.astype(jnp.uint8)
+    n = pos.shape[0]
+    if n == 0 or max_rem == 0:
+        return jnp.zeros((max_rem, n), jnp.uint8)
+    if not use_pallas:
+        return ref.huffman_decode_lanes(buf, pos, lut_sym, lut_len, max_rem)
+    out = huffman_decode_pallas(
+        buf,
+        _pad_to(pos.astype(jnp.int32), LANE_BLOCK),
+        lut_sym.astype(jnp.int32),
+        lut_len.astype(jnp.int32),
+        max_rem,
+        interpret=_interpret(),
+    )
+    return out[:, :n]
+
+
+# -------------------------------------------------------------- entropy: fse
+@functools.partial(jax.jit, static_argnames=("width", "total", "use_pallas"))
+def fse_encode(
+    lanesT: jax.Array,
+    rem: jax.Array,
+    nb0: jax.Array,
+    thr: jax.Array,
+    st0: jax.Array,
+    norm: jax.Array,
+    enc_flat: jax.Array,
+    width: int,
+    total: int,
+    *,
+    use_pallas: bool = True,
+):
+    """tANS backward scan + wire-layout bit offsets.
+
+    Returns (vals u32 planes, global bit offsets i32 planes, final states,
+    per-lane bit lengths, lane byte offsets i32[n+1]).  The offsets place
+    every emission directly into the *concatenated* per-lane bitstream
+    layout the host encoder produces, so one ``pack_bits`` call yields the
+    final wire bytes."""
+    from .fse import LANE_BLOCK, fse_encode_pallas
+
+    max_rem, n = lanesT.shape
+    rem = rem.astype(jnp.int32)
+    if use_pallas:
+        pad = (-n) % LANE_BLOCK
+        if pad:
+            lanesT = jnp.concatenate(
+                [lanesT, jnp.zeros((max_rem, pad), lanesT.dtype)], axis=1
+            )
+        vals, nbs, state = fse_encode_pallas(
+            lanesT,
+            _pad_to(rem, LANE_BLOCK),
+            nb0.astype(jnp.int32),
+            thr.astype(jnp.int32),
+            st0.astype(jnp.int32),
+            norm.astype(jnp.int32),
+            enc_flat.astype(jnp.int32),
+            width,
+            total,
+            interpret=_interpret(),
+        )
+        vals, nbs, state = vals[:, :n], nbs[:, :n], state[:n]
+    else:
+        vals, nbs, state = ref.fse_encode_lanes(
+            lanesT, rem, nb0, thr, st0, norm, enc_flat, width, total
+        )
+    bitpos = jnp.sum(nbs, axis=0, dtype=jnp.int32)
+    # emission order is decreasing position i, so the offset of emission i
+    # within its lane is the suffix sum of later positions' bit counts
+    suffix = jnp.cumsum(nbs[::-1], axis=0, dtype=jnp.int32)[::-1]
+    intra = suffix - nbs
+    nbytes = (bitpos + 7) >> 3
+    byte_off = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(nbytes, dtype=jnp.int32)]
+    )
+    goffs = byte_off[None, :-1] * 8 + intra
+    return vals, goffs, state, bitpos, byte_off
+
+
+@functools.partial(jax.jit, static_argnames=("max_rem", "use_pallas"))
+def fse_decode(
+    flat: jax.Array,
+    lane_base: jax.Array,
+    bitlen: jax.Array,
+    state0: jax.Array,
+    dec_sym: jax.Array,
+    dec_nb: jax.Array,
+    dec_base: jax.Array,
+    max_rem: int,
+    *,
+    use_pallas: bool = True,
+):
+    """Lane-parallel tANS decode -> (max_rem, n_lanes) u8 symbols."""
+    from .fse import LANE_BLOCK, fse_decode_pallas
+
+    flat = flat.astype(jnp.uint8)
+    n = bitlen.shape[0]
+    if n == 0 or max_rem == 0:
+        return jnp.zeros((max_rem, n), jnp.uint8)
+    if not use_pallas:
+        return ref.fse_decode_lanes(
+            flat, lane_base, bitlen, state0, dec_sym, dec_nb, dec_base, max_rem
+        )
+    out = fse_decode_pallas(
+        flat,
+        _pad_to(lane_base.astype(jnp.int32), LANE_BLOCK),
+        _pad_to(bitlen.astype(jnp.int32), LANE_BLOCK),
+        _pad_to(state0.astype(jnp.int32), LANE_BLOCK),
+        dec_sym.astype(jnp.int32),
+        dec_nb.astype(jnp.int32),
+        dec_base.astype(jnp.int32),
+        max_rem,
+        interpret=_interpret(),
+    )
+    return out[:, :n]
+
+
 # --------------------------------------------------------------- lane refill
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def lane_refill(buf: jax.Array, bitpos: jax.Array, *, use_pallas: bool = True):

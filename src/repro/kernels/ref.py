@@ -92,6 +92,175 @@ def fused_delta_bitpack_decode(w: jax.Array, bits: int) -> jax.Array:
     return delta_decode(bitpack_decode(w, bits))
 
 
+# ------------------------------------------------------------- exact histogram
+def histogram_exact(x: jax.Array) -> jax.Array:
+    """256-bin histogram with integer accumulation — exact at any count.
+
+    The MXU ``histogram`` kernel accumulates in f32 (exact only while every
+    bin stays below 2^24); entropy-coder *table construction* needs exact
+    counts at any stream size, so the device twins use this scatter-add."""
+    return jnp.bincount(x.astype(jnp.int32), length=256).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------- pack bits
+def pack_bits(vals: jax.Array, offs: jax.Array, total_bytes: int):
+    """Scatter pre-masked values to LSB-first packed bytes at bit offsets.
+
+    The device twin of the host codecs' bit-matrix writer: symbol i
+    contributes ``w = vals[i] << (offs[i] & 7)`` (<= 22 bits for 15-bit
+    codes) to the four bytes starting at ``offs[i] >> 3``.  Every output
+    *bit* has exactly one writer, so the per-byte scatter-**add** below can
+    never carry — addition equals bitwise OR, and the packed bytes are
+    bit-identical to the host writer's.  Values must be masked to their bit
+    count already (zero-width entries carry ``vals == 0`` and add nothing).
+    """
+    base = offs >> 3
+    w = vals.astype(jnp.uint32) << (offs & 7).astype(jnp.uint32)
+    out = jnp.zeros((total_bytes + 4,), jnp.uint32)  # +4: last symbol's spill
+    for t in range(4):
+        out = out.at[base + t].add((w >> jnp.uint32(8 * t)) & jnp.uint32(0xFF))
+    return out[:total_bytes].astype(jnp.uint8)
+
+
+# ------------------------------------------------------------ huffman kernels
+def huffman_map(x: jax.Array, codes: jax.Array, lens: jax.Array):
+    """Per-symbol (canonical code, code length) table gathers."""
+    xi = x.astype(jnp.int32)
+    return jnp.take(codes.astype(jnp.uint32), xi), jnp.take(
+        lens.astype(jnp.int32), xi
+    )
+
+
+def huffman_decode_lanes(
+    buf: jax.Array, pos: jax.Array, lut_sym: jax.Array, lut_len: jax.Array, max_rem: int
+):
+    """Lane-parallel Huffman decode: one symbol per 32-bit window refill.
+
+    ``buf`` is the bitstream padded >= 5 bytes past every cursor; ``pos``
+    holds each lane's starting bit offset.  The host decoder drains three
+    symbols per 64-bit refill; the device twin (no 64-bit lanes) refills per
+    symbol — the *decoded symbols* are identical, which is all decode
+    output is.  Returns (max_rem, n_lanes) u8; surplus rows of short lanes
+    decode pad zeros and are trimmed by the caller.
+    """
+    sym = lut_sym.astype(jnp.int32)
+    lnt = lut_len.astype(jnp.int32)
+    n_lanes = pos.shape[0]
+    out = jnp.zeros((max_rem, n_lanes), jnp.uint8)
+
+    def step(i, carry):
+        p, o = carry
+        win = lane_refill(buf, p)
+        low = (win & jnp.uint32(0x7FFF)).astype(jnp.int32)
+        o = o.at[i].set(jnp.take(sym, low).astype(jnp.uint8))
+        return p + jnp.take(lnt, low), o
+
+    _, out = jax.lax.fori_loop(0, max_rem, step, (pos.astype(jnp.int32), out))
+    return out
+
+
+# ---------------------------------------------------------------- fse kernels
+def fse_encode_lanes(
+    lanesT: jax.Array,
+    rem: jax.Array,
+    nb0: jax.Array,
+    thr: jax.Array,
+    st0: jax.Array,
+    norm: jax.Array,
+    enc_flat: jax.Array,
+    width: int,
+    total: int,
+):
+    """tANS backward state walk, one vector lane per block (paper §II-A;
+    state machine after the SCL FSE exemplar).
+
+    ``lanesT`` is (max_rem, n_lanes) symbols; a lane of length r initializes
+    its state at position r-1 and emits the low bits of its state for every
+    earlier position.  Returns per-position (vals u32, nbits i32) planes plus
+    the final per-lane states — the bit-I/O composition (offsets + packing)
+    happens in ``pack_bits`` on the same device.  Arithmetic is all int32:
+    states live in [0, 2*2^table_log).
+    """
+    max_rem, n_lanes = lanesT.shape
+    nb0 = nb0.astype(jnp.int32)
+    thr = thr.astype(jnp.int32)
+    st0 = st0.astype(jnp.int32)
+    norm = norm.astype(jnp.int32)
+    enc_flat = enc_flat.astype(jnp.int32)
+    rem = rem.astype(jnp.int32)
+    vals0 = jnp.zeros((max_rem, n_lanes), jnp.uint32)
+    nbs0 = jnp.zeros((max_rem, n_lanes), jnp.int32)
+
+    def step(j, carry):
+        state, vals, nbs = carry
+        i = max_rem - 1 - j
+        s = lanesT[i].astype(jnp.int32)
+        emit = rem > i + 1
+        X = state + total
+        nb = jnp.take(nb0, s) - (X < jnp.take(thr, s)).astype(jnp.int32)
+        nbe = jnp.where(emit, nb, 0)
+        val = X.astype(jnp.uint32) & (
+            (jnp.uint32(1) << nbe.astype(jnp.uint32)) - jnp.uint32(1)
+        )
+        vals = vals.at[i].set(val)
+        nbs = nbs.at[i].set(nbe)
+        xprime = jnp.clip((X >> nb) - jnp.take(norm, s), 0, width - 1)
+        new_state = jnp.take(enc_flat, s * width + xprime)
+        state = jnp.where(
+            emit, new_state, jnp.where(rem == i + 1, jnp.take(st0, s), state)
+        )
+        return state, vals, nbs
+
+    state, vals, nbs = jax.lax.fori_loop(
+        0, max_rem, step, (jnp.zeros(n_lanes, jnp.int32), vals0, nbs0)
+    )
+    return vals, nbs, state
+
+
+def fse_decode_lanes(
+    flat: jax.Array,
+    lane_base: jax.Array,
+    bitlen: jax.Array,
+    state0: jax.Array,
+    dec_sym: jax.Array,
+    dec_nb: jax.Array,
+    dec_base: jax.Array,
+    max_rem: int,
+):
+    """Lane-parallel tANS decode: forward symbol order, backward bit reads.
+
+    ``flat`` is the concatenation of per-lane padded buffers (``lane_base``
+    byte offsets); each lane's cursor starts at its bitstream length and
+    walks backward.  Exhausted lanes read pad zeros and walk garbage states
+    that stay in-table (base + bits < 2^table_log by construction); their
+    surplus rows are trimmed by the caller.
+    """
+    sym = dec_sym.astype(jnp.int32)
+    nbt = dec_nb.astype(jnp.int32)
+    bst = dec_base.astype(jnp.int32)
+    n_lanes = bitlen.shape[0]
+    out = jnp.zeros((max_rem, n_lanes), jnp.uint8)
+
+    def step(i, carry):
+        state, cursor, o = carry
+        o = o.at[i].set(jnp.take(sym, state).astype(jnp.uint8))
+        nb = jnp.take(nbt, state)
+        base = jnp.take(bst, state)
+        cursor = cursor - nb
+        byte0 = jnp.maximum(cursor >> 3, 0)
+        win = lane_refill(flat, (lane_base + byte0) * 8 + (cursor & 7))
+        bits = win & ((jnp.uint32(1) << nb.astype(jnp.uint32)) - jnp.uint32(1))
+        return base + bits.astype(jnp.int32), cursor, o
+
+    _, _, out = jax.lax.fori_loop(
+        0,
+        max_rem,
+        step,
+        (state0.astype(jnp.int32), bitlen.astype(jnp.int32), out),
+    )
+    return out
+
+
 # --------------------------------------------------------------- lane refill
 def lane_refill(buf: jax.Array, bitpos: jax.Array) -> jax.Array:
     """Entropy-lane window refill: next 32 bits at each lane's bit cursor.

@@ -31,7 +31,7 @@ from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import Optional
 
-from repro.core import DecompressorSession, SessionPool
+from repro.core import DecompressorSession, ExecScratch, SessionPool
 from repro.core import stream_io, wire
 from repro.core.stream_io import DEFAULT_CHUNK_BYTES
 
@@ -89,7 +89,13 @@ class CompressionServer:
         self.spool_bytes = spool_bytes
         self.max_body_bytes = max_body_bytes
         self.pool = SessionPool(max_per_key=sessions_per_plan)
-        self._decoder = DecompressorSession(n_workers=n_workers, window=window)
+        # one server-wide coder-table cache: every session (all plans, both
+        # directions) shares it, so the stats verb's hit/miss counters
+        # describe the whole daemon's table-build traffic
+        self._scratch = ExecScratch()
+        self._decoder = DecompressorSession(
+            n_workers=n_workers, window=window, scratch=self._scratch
+        )
         self._started = time.monotonic()
         self._shutdown = threading.Event()
         self._conn_lock = threading.Lock()
@@ -206,7 +212,10 @@ class CompressionServer:
             self.pool.register(
                 entry.digest,
                 lambda: comp.session(
-                    chunk_bytes=None, n_workers=self.n_workers, window=self.window
+                    chunk_bytes=None,
+                    n_workers=self.n_workers,
+                    window=self.window,
+                    scratch=self._scratch,
                 ),
             )
         return entry.digest
@@ -404,6 +413,8 @@ class CompressionServer:
                 "bytes_in": self._stats["bytes_in"],
                 "bytes_out": self._stats["bytes_out"],
             }
+        from repro.core.engine import resolve_cache_info
+
         return {
             **self._ping_header(),
             "address": self.address,
@@ -412,4 +423,10 @@ class CompressionServer:
             "registry": self.registry.entries(),
             "sessions": self.pool.stats(),
             "decoder": dict(self._decoder.stats),
+            # cache effectiveness: a cold resolve or coder-table rebuild per
+            # request is exactly the kind of throughput cliff the blocked hot
+            # paths exist to prevent — surface the counters so regressions
+            # are observable in production
+            "resolve_cache": resolve_cache_info(),
+            "coder_cache": self._scratch.table_cache_info(),
         }

@@ -181,3 +181,182 @@ def test_lane_refill_feeds_huffman_window():
     np.testing.assert_array_equal(
         win & np.uint32(0x7FFF), (w64 & np.uint64(0x7FFF)).astype(np.uint32)
     )
+
+
+# ------------------------------------------------- entropy: huffman (device)
+def _skewed(n, seed=7):
+    r = np.random.default_rng(seed)
+    return (r.zipf(1.4, n) % 256).astype(np.uint8)
+
+
+@pytest.mark.parametrize("n", [1, 100, 4096, 50000])
+def test_huffman_map_pack_matches_host_encoder(n):
+    """Device map + scatter-add packer == the host bit-matrix writer, byte
+    for byte (and the pallas map == the jnp oracle)."""
+    from repro.codecs import entropy as E
+
+    data = _skewed(n)
+    lens = E._huffman_code_lengths(E._hist_u8(data))
+    codes = E._canonical_codes(lens)
+    host_packed, host_offs = E._write_bits_blocked(
+        codes[data], lens[data].astype(np.int64), 1 << E.BLOCK_LOG
+    )
+    for up in (True, False):
+        code, nb, offs = ops.huffman_map(
+            jnp.asarray(data),
+            jnp.asarray(codes),
+            jnp.asarray(lens.astype(np.int32)),
+            use_pallas=up,
+        )
+        np.testing.assert_array_equal(np.asarray(offs), host_offs)
+        total_bytes = (int(offs[-1]) + 7) >> 3
+        packed = np.asarray(ops.pack_bits(code, offs[:-1], 1 << 17))[:total_bytes]
+        assert packed.tobytes() == host_packed.tobytes()
+
+
+@pytest.mark.parametrize("n", [1, 100, 4097, 50000])
+def test_huffman_decode_kernel_roundtrip(n):
+    """Device lane decode of a host-encoded bitstream recovers the input,
+    pallas and oracle paths identical."""
+    from repro.codecs import entropy as E
+
+    data = _skewed(n, seed=n)
+    lens = E._huffman_code_lengths(E._hist_u8(data))
+    codes = E._canonical_codes(lens)
+    packed, offs = E._write_bits_blocked(
+        codes[data], lens[data].astype(np.int64), 1 << E.BLOCK_LOG
+    )
+    lut_sym, lut_len = E._huffman_decode_lut(lens)
+    block = 1 << E.BLOCK_LOG
+    n_blocks = (n + block - 1) // block
+    rem = np.minimum(n - np.arange(n_blocks) * block, block)
+    max_rem = int(rem.max())
+    pad = 16 + ((E.MAX_CODE_LEN * max_rem + 7) >> 3)
+    buf = np.zeros(packed.size + pad, np.uint8)
+    buf[: packed.size] = packed
+    results = []
+    for up in (True, False):
+        out = np.asarray(
+            ops.huffman_decode(
+                jnp.asarray(buf),
+                jnp.asarray(offs[:-1:block].astype(np.int32)),
+                jnp.asarray(lut_sym.astype(np.int32)),
+                jnp.asarray(lut_len.astype(np.int32)),
+                max_rem,
+                use_pallas=up,
+            )
+        )
+        lanes = out.T
+        results.append(
+            np.concatenate([lanes[:-1].reshape(-1), lanes[-1, : rem[-1]]])
+        )
+    np.testing.assert_array_equal(results[0], data)
+    np.testing.assert_array_equal(results[1], data)
+
+
+# ----------------------------------------------------- entropy: fse (device)
+def _fse_fixture(n, table_log=11, seed=3):
+    from repro.codecs import entropy as E
+
+    data = _skewed(n, seed=seed)
+    norm = E._normalize_counts(E._hist_u8(data), table_log)
+    tabs = E._build_tables(norm, table_log)
+    return data, norm, tabs
+
+
+@pytest.mark.parametrize("n", [1, 100, 1025, 50000])
+def test_fse_encode_kernel_matches_host_encoder(n):
+    """Device backward scan + packer == the host tANS encoder's bitstream
+    and (bit length, final state) meta, byte for byte."""
+    from repro.codecs import entropy as E
+    from repro.core.message import Stream, SType
+
+    table_log = 11
+    data, norm, _ = _fse_fixture(n, table_log)
+    _ds, _dn, _db, enc_table, nb0t, thrt, st0t = E._fse_tables_cached(
+        norm, table_log
+    )
+    total = 1 << table_log
+    width = enc_table.shape[1]
+    block = 1 << E.FSE_BLOCK_LOG
+    n_blocks = (n + block - 1) // block
+    padded = np.zeros(n_blocks * block, np.uint8)
+    padded[:n] = data
+    lanesT = padded.reshape(n_blocks, block).T
+    rem = np.minimum(n - np.arange(n_blocks) * block, block).astype(np.int32)
+    host_outs, _ = E._fse_enc([Stream(data, SType.SERIAL, 1)], {})
+    for up in (True, False):
+        vals, goffs, state, bitpos, byte_off = ops.fse_encode(
+            jnp.asarray(lanesT),
+            jnp.asarray(rem),
+            jnp.asarray(nb0t.astype(np.int32)),
+            jnp.asarray(thrt.astype(np.int32)),
+            jnp.asarray(st0t.astype(np.int32)),
+            jnp.asarray(norm.astype(np.int32)),
+            jnp.asarray(enc_table.reshape(-1)),
+            width,
+            total,
+            use_pallas=up,
+        )
+        tb = int(byte_off[-1])
+        stream = np.asarray(
+            ops.pack_bits(vals.reshape(-1), goffs.reshape(-1), 1 << 17)
+        )[:tb]
+        assert stream.tobytes() == host_outs[0].content_bytes()
+        meta = np.empty(n_blocks * 2, np.uint32)
+        meta[0::2] = np.asarray(bitpos).astype(np.uint32)
+        meta[1::2] = np.asarray(state).astype(np.uint32)
+        assert meta.tobytes() == host_outs[1].content_bytes()
+
+
+@pytest.mark.parametrize("n", [1, 100, 1025, 50000])
+def test_fse_decode_kernel_roundtrip(n):
+    """Device forward walk over host-encoded lanes recovers the input."""
+    from repro.codecs import entropy as E
+    from repro.core.message import Stream, SType
+
+    table_log = 11
+    data, norm, (dec_sym, dec_nb, dec_base, _enc) = _fse_fixture(n, table_log)
+    host_outs, _ = E._fse_enc([Stream(data, SType.SERIAL, 1)], {})
+    meta = np.frombuffer(host_outs[1].content_bytes(), np.uint32)
+    bitlen = meta[0::2].astype(np.int64)
+    n_blocks = bitlen.size
+    block = 1 << E.FSE_BLOCK_LOG
+    nbytes = (bitlen + 7) // 8
+    offsets = np.zeros(n_blocks + 1, np.int64)
+    np.cumsum(nbytes, out=offsets[1:])
+    cap = int(nbytes.max()) + 16
+    flat = np.zeros(n_blocks * cap, np.uint8)
+    lane_base = np.arange(n_blocks, dtype=np.int64) * cap
+    intra = np.arange(int(offsets[-1]), dtype=np.int64) - np.repeat(
+        offsets[:-1], nbytes
+    )
+    flat[np.repeat(lane_base, nbytes) + intra] = np.frombuffer(
+        host_outs[0].content_bytes(), np.uint8
+    )
+    rem = np.minimum(n - np.arange(n_blocks) * block, block)
+    for up in (True, False):
+        out = np.asarray(
+            ops.fse_decode(
+                jnp.asarray(flat),
+                jnp.asarray(lane_base.astype(np.int32)),
+                jnp.asarray(bitlen.astype(np.int32)),
+                jnp.asarray(meta[1::2].astype(np.int32)),
+                jnp.asarray(dec_sym.astype(np.int32)),
+                jnp.asarray(dec_nb),
+                jnp.asarray(dec_base),
+                int(rem.max()),
+                use_pallas=up,
+            )
+        )
+        lanes = out.T
+        result = np.concatenate([lanes[:-1].reshape(-1), lanes[-1, : rem[-1]]])
+        np.testing.assert_array_equal(result, data)
+
+
+def test_histogram_exact_is_exact():
+    x = _skewed(200000)
+    np.testing.assert_array_equal(
+        np.asarray(ops.histogram_exact(jnp.asarray(x))),
+        np.bincount(x, minlength=256).astype(np.int32),
+    )

@@ -414,6 +414,31 @@ def test_service_stats_shape(server):
     assert st["bytes_in"] == len(DATA)
 
 
+def test_service_stats_expose_cache_counters(tmp_path):
+    """The stats verb surfaces resolve-cache and coder-table-cache hit/miss
+    counters, and repeated same-shape requests actually hit both caches."""
+    comp = Compressor(pipeline("huffman", "fse"), name="entropy")
+    ozp = tmp_path / "entropy.ozp"
+    ozp.write_bytes(comp.serialize())
+    registry = PlanRegistry()
+    registry.register_file(ozp)
+    with CompressionServer(
+        registry, socket_path=str(tmp_path / "ozl.sock")
+    ) as srv:
+        with ServiceClient(srv.address) as c:
+            c.compress_bytes(DATA, "entropy")
+            cold = c.stats()
+            c.compress_bytes(DATA, "entropy")
+            warm = c.stats()
+    for st in (cold, warm):
+        for key in ("resolve_cache", "coder_cache"):
+            assert {"hits", "misses"} <= set(st[key]), st[key]
+    # the second identical request re-uses the first one's resolution and
+    # coder tables: both hit counters must move
+    assert warm["resolve_cache"]["hits"] > cold["resolve_cache"]["hits"]
+    assert warm["coder_cache"]["hits"] > cold["coder_cache"]["hits"]
+
+
 def test_service_tcp_transport(tmp_path):
     registry = PlanRegistry()
     registry.register_profile("generic")

@@ -345,3 +345,40 @@ def test_cli_profiles_and_errors(tmp_path, capsys):
     bad.write_bytes(b"definitely not a frame")
     assert main(["decompress", str(bad), "-o", str(tmp_path / "x")]) == 2
     assert main(["inspect", str(bad)]) == 2
+
+
+def test_session_pipeline_overlap_stats_and_prefetch_knob():
+    """The double-buffered window reports overlap accounting, and disabling
+    prefetch changes scheduling only — frames stay byte-identical."""
+    plan = pipeline("delta", "range_pack")
+    data = numeric(np.arange(120000, dtype=np.uint32))
+    oneshot = compress(plan, data, chunk_bytes=4096)
+    with CompressorSession(plan, chunk_bytes=4096, n_workers=2) as sess:
+        assert sess.compress(data) == oneshot
+        st = sess.stats
+        assert st["prefetch_hits"] + st["prefetch_misses"] > 0
+        assert st["draw_wait_s"] >= 0.0 and st["encode_wait_s"] >= 0.0
+        assert st["max_inflight"] >= 1
+    with CompressorSession(
+        plan, chunk_bytes=4096, n_workers=2, prefetch=False
+    ) as sess:
+        assert sess.compress(data) == oneshot
+        st = sess.stats
+        assert st["prefetch_hits"] == 0 and st["prefetch_misses"] == 0
+
+
+def test_session_pipeline_prefetch_draws_overlap_lazy_source():
+    """A lazy chunk source is drawn on the draw thread while encodes run;
+    the in-order container output is unaffected."""
+    plan = pipeline("delta", "range_pack")
+    data = numeric(np.arange(120000, dtype=np.uint32))
+    chunks = _split_chunks(data, 4096)
+    oneshot = compress(plan, data, chunk_bytes=4096)
+    with CompressorSession(plan, n_workers=2) as sess:
+        buf = io.BytesIO()
+        sess.compress_chunks(iter(chunks), buf, n_chunks=len(chunks))
+        assert buf.getvalue() == oneshot
+        assert (
+            sess.stats["prefetch_hits"] + sess.stats["prefetch_misses"]
+            >= len(chunks) - 1
+        )
