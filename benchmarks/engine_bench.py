@@ -514,9 +514,127 @@ def run_serve(emit_json: bool = False, print_rows: bool = True):
                 f"hot sessions must beat per-invocation CLI throughput"
                 f" (got {speedup:.2f}x)"
             )
+
+        # -- degraded mode 1: overload shedding + client retries -------------
+        # a deliberately starved server (one pooled session, tiny admission
+        # window) under 8 clients: instead of queueing unboundedly, excess
+        # requests shed with retry-after and the clients' jittered retries
+        # land them all eventually — every frame still byte-identical, and
+        # the successful-request p99 stays bounded by work + backoff, not by
+        # an open-ended queue
+        import random
+
+        shed_reg = PlanRegistry()
+        shed_reg.register_profile("text")
+        with CompressionServer(
+            shed_reg, socket_path=os.path.join(tmp, "shed.sock"),
+            max_clients=8, sessions_per_plan=1, admission_timeout=0.02,
+        ) as srv:
+            with ServiceClient(srv.address) as c:
+                c.compress_bytes(corpus, "text", chunk_bytes=chunk)
+            latencies = [[] for _ in range(8)]
+            failures = []
+
+            def shed_body(i):
+                try:
+                    with ServiceClient(
+                        srv.address, timeout=120.0, retries=400,
+                        backoff_base=0.005, backoff_max=0.1,
+                        rng=random.Random(1000 + i),
+                    ) as c:
+                        for _ in range(SERVE_REQS):
+                            t0 = time.perf_counter()
+                            frame, _info = c.compress_bytes(
+                                corpus, "text", chunk_bytes=chunk
+                            )
+                            latencies[i].append(time.perf_counter() - t0)
+                            if frame != want:
+                                raise AssertionError(
+                                    "shed-mode frame diverged"
+                                )
+                except Exception as err:
+                    failures.append(err)
+
+            threads = [
+                threading.Thread(target=shed_body, args=(i,)) for i in range(8)
+            ]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            wall = time.perf_counter() - t0
+            if failures:
+                raise failures[0]
+            sheds = srv.stats()["shed"]
+            flat = [x for lane in latencies for x in lane]
+            entry = {
+                "clients": 8,
+                "sessions": 1,
+                "admission_timeout_ms": 20,
+                "req_s": round(len(flat) / wall, 3),
+                "p50_ms": round(_percentile(flat, 50) * 1e3, 1),
+                "p99_ms": round(_percentile(flat, 99) * 1e3, 1),
+                "sheds": sheds,
+                "completed": len(flat),
+            }
+            results["serve_shed_c8"] = entry
+            rows.append(
+                f"serve/shed_c8,{wall/len(flat)*1e6:.1f},"
+                + ";".join(f"{k}={v}" for k, v in entry.items())
+            )
+
+        # -- degraded mode 2: device-kernel faults, transparent failover -----
+        # a device-backend server with every device kernel invocation failing
+        # keeps serving via host re-execution; frames stay byte-identical to
+        # a host server's and the quarantine means the fault tax is paid once
+        from repro.reliability import FaultPlan
+
+        u32 = np.arange((SERVE_KIB << 10) // 4, dtype=np.uint32).tobytes()
+        from repro.codecs.profiles import resolve_profile_spec
+        from repro.core import serial as _serial
+
+        host_ref = compress(
+            resolve_profile_spec("struct:4,4"), _serial(u32), chunk_bytes=chunk
+        )
+        dev_reg = PlanRegistry()
+        dev_reg.register_profile("struct:4,4")
+        with CompressionServer(
+            dev_reg, socket_path=os.path.join(tmp, "dev.sock"),
+            max_clients=4, sessions_per_plan=2, backend="device",
+        ) as srv:
+            lat = []
+            with FaultPlan().at("device.encode.device.*", times=10**9).arm(
+                all_threads=True
+            ):
+                with ServiceClient(srv.address, timeout=120.0) as c:
+                    for _ in range(SERVE_REQS):
+                        t0 = time.perf_counter()
+                        frame, _info = c.compress_bytes(
+                            u32, "struct:4,4", chunk_bytes=chunk
+                        )
+                        lat.append(time.perf_counter() - t0)
+                        if frame != host_ref:
+                            raise AssertionError(
+                                "failover frame diverged from host path"
+                            )
+            health = srv.stats()["backend_health"].get("device", {})
+            entry = {
+                "requests": len(lat),
+                "req_s": round(len(lat) / max(sum(lat), 1e-9), 3),
+                "p50_ms": round(_percentile(lat, 50) * 1e3, 1),
+                "p99_ms": round(_percentile(lat, 99) * 1e3, 1),
+                "failovers": health.get("failovers", 0),
+                "device_quarantined": bool(health.get("quarantined")),
+            }
+            results["serve_device_failover"] = entry
+            rows.append(
+                f"serve/device_failover,{sum(lat)/len(lat)*1e6:.1f},"
+                + ";".join(f"{k}={v}" for k, v in entry.items())
+            )
     if emit_json:
         payload = {
-            "schema": "BENCH_serve/v1",
+            "schema": "BENCH_serve/v2",
             "host_cpus": os.cpu_count(),
             "rows": results,
         }

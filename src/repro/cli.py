@@ -125,12 +125,27 @@ def _cmd_decompress(args) -> int:
     else:
         dst = src.with_name(src.name + ".out")
     stats = stream_io.decompress_file(
-        src, dst, n_workers=args.workers, window=args.window
+        src, dst, n_workers=args.workers, window=args.window, salvage=args.salvage
     )
     print(
         f"{src} -> {dst}: {stats['bytes_in']} -> {stats['bytes_out']} bytes,"
         f" {stats['chunks']} chunk(s)"
     )
+    rep = stats.get("salvage")
+    if rep is not None:
+        report = wire.SalvageReport(
+            n_chunks=rep["n_chunks"],
+            recovered=list(rep["recovered"]),
+            recovered_unplaced=rep["recovered_unplaced"],
+            damaged=[tuple(r) for r in rep["damaged"]],
+            trailer_ok=rep["trailer_ok"],
+            notes=list(rep["notes"]),
+        )
+        print(f"salvage: {report.summary()}")
+        if not rep["intact"]:
+            # recovered-with-losses is distinguishable from a clean decode
+            print("salvage: output is PARTIAL (see damaged ranges)", file=sys.stderr)
+            return 1
     return 0
 
 
@@ -172,6 +187,13 @@ def _print_frame(frame: bytes, indent: str = "") -> None:
 
 def _cmd_inspect(args) -> int:
     path = Path(args.input)
+    if args.verify:
+        # per-chunk CRC walk without materializing any payload: damage is
+        # reported chunk-exact and the exit code is the verdict
+        with open(path, "rb") as f:
+            report = wire.verify_container(f)
+        print(f"{path}: {report.summary()}")
+        return 0 if report.intact else 1
     with open(path, "rb") as f:
         magic = f.read(4)
         f.seek(0)
@@ -409,6 +431,8 @@ def _cmd_serve(args) -> int:
         window=args.window,
         request_timeout=args.timeout,
         idle_timeout=args.idle_timeout,
+        admission_timeout=args.admission_timeout,
+        backend=args.backend,
     )
     if family == _socket.AF_UNIX:
         server = CompressionServer(registry, socket_path=target, **kw)
@@ -434,7 +458,7 @@ def _cmd_client(args) -> int:
     from repro.service import ServiceClient
 
     address = _service_address(args)
-    with ServiceClient(address, timeout=args.timeout) as client:
+    with ServiceClient(address, timeout=args.timeout, retries=args.retries) as client:
         if args.action == "stats":
             import json as _json
 
@@ -514,6 +538,10 @@ def build_parser() -> argparse.ArgumentParser:
     d.add_argument("--workers", type=int, default=None, help="decode threads")
     d.add_argument("--window", type=int, default=None,
                    help="max in-flight chunks (bounds peak memory)")
+    d.add_argument("--salvage", action="store_true",
+                   help="best-effort recovery of a damaged container: write"
+                   " every intact chunk, report lost ranges, exit 1 on losses"
+                   " (default: fail closed on any corruption)")
     d.set_defaults(fn=_cmd_decompress)
 
     i = sub.add_parser(
@@ -522,6 +550,9 @@ def build_parser() -> argparse.ArgumentParser:
     i.add_argument("input")
     i.add_argument("--chunks", type=int, default=1,
                    help="container chunks to print graphs for (default 1)")
+    i.add_argument("--verify", action="store_true",
+                   help="walk every chunk's CRC (no payload decode); nonzero"
+                   " exit + damage report when anything fails")
     i.set_defaults(fn=_cmd_inspect)
 
     t = sub.add_parser(
@@ -576,6 +607,13 @@ def build_parser() -> argparse.ArgumentParser:
     s.add_argument("--idle-timeout", type=float, default=300.0,
                    help="seconds a persistent connection may sit idle between"
                         " requests before the server drops it (default 300)")
+    s.add_argument("--admission-timeout", type=float, default=None,
+                   help="shed compress requests that cannot get a pooled"
+                        " session within this many seconds (error_kind="
+                        "overloaded + retry_after); default: block instead")
+    s.add_argument("--backend", default=None,
+                   help="execution backend for every pooled session (host/"
+                        "device); faulting device backends fail over to host")
     s.set_defaults(fn=_cmd_serve)
 
     cl = sub.add_parser("client", help="talk to a running compression daemon")
@@ -592,6 +630,9 @@ def build_parser() -> argparse.ArgumentParser:
                     " offline CLI)")
     cl.add_argument("--timeout", type=float, default=60.0,
                     help="client socket timeout seconds (default 60)")
+    cl.add_argument("--retries", type=int, default=0,
+                    help="bounded retries (backoff + jitter, honoring the"
+                         " server's retry_after) when the daemon sheds load")
     cl.set_defaults(fn=_cmd_client)
     return ap
 

@@ -27,6 +27,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.reliability.faults import fault_point
+
 from .message import Stream
 
 __all__ = [
@@ -175,6 +177,10 @@ def run_encode_via(
     if backend != HOST_BACKEND:
         impl = get_backend_codec(backend, spec.name)
         if impl is not None and impl.applies(streams, params):
+            # injectable device-kernel failure (repro.reliability): surfaces
+            # exactly where a real kernel crash would, so the session-level
+            # host failover sees the same thing either way
+            fault_point(f"device.encode.{backend}.{spec.name}")
             outs, header = impl.encode(list(streams), params)
             if spec.n_outputs >= 0 and len(outs) != spec.n_outputs:
                 raise AssertionError(

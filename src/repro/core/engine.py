@@ -45,7 +45,8 @@ import os
 import threading
 import time
 from collections import OrderedDict, deque
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor
+from concurrent.futures import wait as _futures_wait
 from dataclasses import dataclass, field
 from typing import (
     BinaryIO,
@@ -816,6 +817,23 @@ class _SessionBase:
                     if len(pending) > self.stats["max_inflight"]:
                         self.stats["max_inflight"] = len(pending)
                 t0 = time.perf_counter()
+                # wait on the oldest encode AND the in-flight draw: a source
+                # that dies drawing chunk N+1 fails the call as soon as the
+                # draw thread reports it, instead of hiding behind a full
+                # window of slow encodes
+                while True:
+                    waiters = [pending[0]]
+                    if draw is not None and not draw.done():
+                        waiters.append(draw)
+                    _futures_wait(waiters, return_when=FIRST_COMPLETED)
+                    if (
+                        draw is not None
+                        and draw.done()
+                        and draw.exception() is not None
+                    ):
+                        draw.result()  # raises the source's error promptly
+                    if pending[0].done():
+                        break
                 result = pending.popleft().result()
                 with self._stats_lock:
                     self.stats["encode_wait_s"] += time.perf_counter() - t0
@@ -833,9 +851,9 @@ class _SessionBase:
             pool, self._pool = self._pool, None
             draw_pool, self._draw_pool = self._draw_pool, None
         if pool is not None:
-            pool.shutdown(wait=True)
+            pool.shutdown(wait=True, cancel_futures=True)
         if draw_pool is not None:
-            draw_pool.shutdown(wait=True)
+            draw_pool.shutdown(wait=True, cancel_futures=True)
 
     def __enter__(self):
         return self
@@ -886,6 +904,7 @@ class CompressorSession(_SessionBase):
         table_cache_size: int = 256,
         scratch: Optional[ExecScratch] = None,
         prefetch: bool = True,
+        failover: Optional[object] = None,
     ):
         super().__init__(
             n_workers, window, table_cache_size, "ozl-enc", scratch, prefetch
@@ -900,6 +919,13 @@ class CompressorSession(_SessionBase):
         self.backend = backend
         self.chunk_bytes = chunk_bytes
         self.use_resolve_cache = use_resolve_cache
+        # duck-typed backend-health object (quarantined / record_failure /
+        # record_success — e.g. repro.reliability.BackendHealth).  With one
+        # installed, a chunk whose non-host backend raises is transparently
+        # re-executed on host (bit-identical frames by the backend-conformance
+        # guarantee) and the failure recorded; a quarantined backend is
+        # skipped outright.  None (the default) keeps errors fatal.
+        self.failover = failover
 
     # ------------------------------------------------------------ one-shot
     def compress(
@@ -936,6 +962,43 @@ class CompressorSession(_SessionBase):
         self._bump(bytes_out=len(frame))
         return frame
 
+    def _execute(
+        self,
+        resolved: ResolvedPlan,
+        streams: List[Stream],
+        backend: str,
+        trace: Optional[List[Tuple[str, int]]] = None,
+    ) -> bytes:
+        """``execute()`` with backend-health failover to host.
+
+        A quarantined backend is skipped before paying for the failure; an
+        unquarantined one that raises is retried on host with the *same*
+        resolution — only if host then succeeds is the error charged to the
+        backend (a data-dependent resolve failure fails on host too and
+        propagates to the caller's fresh-resolve retry, never poisoning the
+        backend's health record).
+        """
+        fo = self.failover
+        if backend != "host" and fo is not None and fo.quarantined(backend):
+            backend = "host"
+        try:
+            out = execute(
+                resolved, streams, backend=backend, scratch=self.scratch, trace=trace
+            )
+        except Exception as err:
+            if backend == "host" or fo is None:
+                raise
+            if trace is not None:
+                trace.clear()
+            out = execute(
+                resolved, streams, backend="host", scratch=self.scratch, trace=trace
+            )
+            fo.record_failure(backend, err)  # host succeeded: backend-specific
+            return out
+        if backend != "host" and fo is not None:
+            fo.record_success(backend)
+        return out
+
     def _compress_single(
         self,
         streams: List[Stream],
@@ -946,9 +1009,7 @@ class CompressorSession(_SessionBase):
             self.plan, streams, self.ctx, use_cache=self.use_resolve_cache
         )
         try:
-            return execute(
-                resolved, streams, backend=backend, scratch=self.scratch, trace=trace
-            )
+            return self._execute(resolved, streams, backend, trace)
         except Exception:
             # A cached resolution is keyed on stream *shape*, but a selector's
             # choice can be inapplicable to new *values* of the same shape
@@ -959,9 +1020,7 @@ class CompressorSession(_SessionBase):
             if trace is not None:
                 trace.clear()  # the failed attempt's steps are not part of it
             fresh, _ = _resolve_impl(self.plan, streams, self.ctx, use_cache=False)
-            return execute(
-                fresh, streams, backend=backend, scratch=self.scratch, trace=trace
-            )
+            return self._execute(fresh, streams, backend, trace)
 
     def compress_traced(
         self,
@@ -1027,10 +1086,10 @@ class CompressorSession(_SessionBase):
 
         def _one(ch: Stream) -> bytes:
             try:
-                return execute(resolved, [ch], backend=backend, scratch=self.scratch)
+                return self._execute(resolved, [ch], backend)
             except Exception:
                 fresh = resolve(self.plan, [ch], self.ctx, use_cache=False)
-                return execute(fresh, [ch], backend=backend, scratch=self.scratch)
+                return self._execute(fresh, [ch], backend)
 
         writer = wire.ContainerWriter(out, self.ctx.format_version, n_chunks)
         for frame in self._window_map(_one, it, head=[first]):
@@ -1177,6 +1236,74 @@ class DecompressorSession(_SessionBase):
             raise wire.FrameError("empty container")
         self.stats["calls"] += 1
         return [_concat_decoded(parts)]
+
+    # -------------------------------------------------------------- salvage
+    def decompress_salvage(
+        self, src: Union[bytes, BinaryIO]
+    ) -> Tuple[List[Stream], "wire.SalvageReport"]:
+        """Best-effort decode of a damaged frame/container (recovery path).
+
+        Returns ``(streams, report)``: one regenerated stream per recovered
+        container chunk, in chunk order, plus the
+        :class:`~repro.core.wire.SalvageReport` saying exactly which chunk
+        indices survived and which ranges were lost.  Unlike
+        :meth:`decompress` this never raises on damage — an unrecoverable
+        record simply returns no streams and a report explaining why.  The
+        whole record is held in memory; the default fail-closed readers
+        remain the right tool for intact data.
+        """
+        data = src if isinstance(src, (bytes, bytearray)) else src.read()
+        data = bytes(data)
+        self._bump(calls=1, bytes_in=len(data))
+        if not wire.is_container(data):
+            # a bare frame has no chunk redundancy: decode or report, per its
+            # own CRC — there is nothing to resynchronize on
+            report = wire.SalvageReport(n_chunks=1)
+            try:
+                out = self._one(data)
+                report.recovered.append(0)
+                report.trailer_ok = True
+                self._bump(chunks=1, bytes_out=sum(s.nbytes for s in out))
+                return out, report
+            except Exception as err:
+                report.damaged.append((0, 0))
+                report.trailer_ok = False
+                report.notes.append(f"bare frame unrecoverable: {err}")
+                return [], report
+        frames, report = wire.salvage_container(data)
+
+        def _try(frame: bytes) -> Optional[List[Stream]]:
+            try:
+                return self._one(frame)
+            except Exception:
+                return None
+
+        parts = list(self._window_map(_try, frames)) if frames else []
+        # when every recovered chunk has an exact index, frames and
+        # report.recovered align (both in chunk order): a CRC-valid chunk
+        # that still fails to decode moves from recovered to damaged
+        aligned = (
+            report.recovered_unplaced == 0
+            and len(parts) == len(report.recovered)
+        )
+        out = []
+        failed_idx: List[int] = []
+        failed = 0
+        for j, part in enumerate(parts):
+            if part is None or len(part) != 1:
+                failed += 1
+                if aligned:
+                    failed_idx.append(report.recovered[j])
+                continue
+            out.append(part[0])
+        if failed:
+            for i in failed_idx:
+                report.recovered.remove(i)
+                report.damaged.append((i, i))
+            report.damaged.sort(key=lambda r: r[0])
+            report.notes.append(f"{failed} recovered chunk(s) failed to decode")
+        self._bump(chunks=len(out), bytes_out=sum(s.nbytes for s in out))
+        return out, report
 
 
 class SessionPool:

@@ -25,6 +25,8 @@ from typing import BinaryIO, Iterator, Optional, Union
 
 import numpy as np
 
+from repro.reliability.faults import crash_point, wrap_io
+
 from . import wire
 from .engine import (
     CompressionCtx,
@@ -114,10 +116,12 @@ def _atomic_sink(dst: PathOrFile):
         # "w+b"-equivalent: mkstemp opens O_RDWR, which the unknown-length
         # container path needs for its backpatch + CRC re-read
         with os.fdopen(fd, "r+b") as f:
-            yield f
+            yield wrap_io(f, "io.sink")
             f.flush()
             os.fsync(f.fileno())
+        crash_point("sink.replace.before")
         os.replace(tmp, final)
+        crash_point("sink.replace.after")
     except BaseException:
         try:
             tmp.unlink()
@@ -212,6 +216,7 @@ def compress_file(
         # the sink must be read/writable: the unknown-length container path
         # backpatches its chunk count and re-reads the body for the CRC trailer
         with _open(src, "rb") as fin, _atomic_sink(dst) as fout:
+            fin = wrap_io(fin, "io.src")
             if not chunk_bytes:
                 data = fin.read()
                 frame = session.compress(serial(data), chunk_bytes=0)
@@ -287,6 +292,7 @@ def decompress_file(
     n_workers: Optional[int] = None,
     window: Optional[int] = None,
     session: Optional[DecompressorSession] = None,
+    salvage: bool = False,
 ) -> dict:
     """Universal streaming decode: any frame/container -> raw content bytes.
 
@@ -295,6 +301,12 @@ def decompress_file(
     written bytes are each regenerated stream's ``content_bytes()`` (for data
     compressed by ``compress_file`` / the CLI, exactly the original file).
     Returns ``{"bytes_in", "bytes_out", "chunks"}``.
+
+    ``salvage=True`` switches to the best-effort recovery decoder
+    (:meth:`DecompressorSession.decompress_salvage`): every intact chunk of a
+    damaged container is written (byte-exact, in chunk order; lost chunks are
+    simply absent from the output) and the returned stats carry the damage
+    report under ``"salvage"``.  The default path stays fail-closed.
     """
     own_session = session is None
     if session is None:
@@ -302,6 +314,21 @@ def decompress_file(
     try:
         bytes_in = bytes_out = chunks = 0
         with _open(src, "rb") as fin, _atomic_sink(dst) as fout:
+            fin = wrap_io(fin, "io.src")
+            if salvage:
+                data = fin.read()
+                streams, report = session.decompress_salvage(data)
+                for s in streams:
+                    payload = s.content_bytes()
+                    fout.write(payload)
+                    bytes_out += len(payload)
+                    chunks += 1
+                return {
+                    "bytes_in": len(data),
+                    "bytes_out": bytes_out,
+                    "chunks": chunks,
+                    "salvage": report.to_dict(),
+                }
             counted = _CountingReader(fin)
             for s in session.iter_frames(counted):
                 payload = s.content_bytes()

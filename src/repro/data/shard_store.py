@@ -18,6 +18,7 @@ from typing import Dict, Iterator, List, Optional
 import numpy as np
 
 from repro.distributed.checkpoint import compress_leaf, decompress_leaf
+from repro.reliability.faults import crash_point
 
 
 class CompressedShardStore:
@@ -99,6 +100,7 @@ class CompressedShardStore:
                 dir=self.directory, prefix=f"shard_{idx:06d}.", suffix=".tmp"
             )
         )
+        crash_point("shard.staged")
         try:
             entries = []
             raw = comp = 0
@@ -106,6 +108,7 @@ class CompressedShardStore:
                 arr = np.asarray(arr)
                 frame = compress_leaf(arr)
                 (tmp / f"{name}.ozl").write_bytes(frame)
+                crash_point("shard.entry")
                 raw += arr.nbytes
                 comp += len(frame)
                 entries.append(
@@ -125,6 +128,7 @@ class CompressedShardStore:
                 "compressed_bytes": comp,
             }
             (tmp / "meta.json").write_text(json.dumps(meta))
+            crash_point("shard.meta")
             if final.exists():
                 # rename-aside-then-replace: readers only ever see a complete
                 # shard dir (old or new), never a partially deleted one
@@ -136,7 +140,9 @@ class CompressedShardStore:
                     )
                 )
                 os.rmdir(aside)
+                crash_point("shard.aside.before")
                 os.replace(final, aside)
+                crash_point("shard.aside.after")
                 for _ in range(16):
                     try:
                         os.replace(tmp, final)
@@ -155,14 +161,19 @@ class CompressedShardStore:
                         f"shard {idx}: canonical dir kept reappearing while"
                         " swapping in the rewrite"
                     )
+                crash_point("shard.swap.after")
                 shutil.rmtree(aside, ignore_errors=True)
+                crash_point("shard.cleanup")
             else:
+                crash_point("shard.publish.before")
                 os.replace(tmp, final)
+                crash_point("shard.publish.after")
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
         for stale in self._stale_tmps(idx):
             shutil.rmtree(stale, ignore_errors=True)
+        crash_point("shard.done")
         return meta
 
     def read_shard(self, idx: int) -> Dict[str, np.ndarray]:

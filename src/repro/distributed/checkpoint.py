@@ -38,6 +38,7 @@ from repro.codecs import (
 )
 from repro.core import CompressorSession, DecompressorSession, numeric
 from repro.core.graph import Plan, pipeline as plan_pipeline
+from repro.reliability.faults import crash_point
 
 MANIFEST = "manifest.json"
 
@@ -190,6 +191,7 @@ def save_checkpoint(
         frame = compress_leaf(arr)
         fname = f"leaf_{i:05d}.ozl"
         (tmp / fname).write_bytes(frame)
+        crash_point("ckpt.leaf")
         raw_total += arr.nbytes
         comp_total += len(frame)
         leaves.append(
@@ -214,7 +216,9 @@ def save_checkpoint(
         "leaves": leaves,
     }
     (tmp / MANIFEST).write_text(json.dumps(manifest, indent=1))
+    crash_point("ckpt.manifest")
     os.replace(tmp, final)  # atomic publish
+    crash_point("ckpt.publish.after")
     return manifest
 
 

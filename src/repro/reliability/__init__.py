@@ -1,0 +1,21 @@
+"""repro.reliability — deterministic fault injection and the resilience it
+proves.
+
+    Fault plane ......... repro.reliability.faults    (FaultPlan, fault_point)
+    Degradation ......... repro.reliability.failover  (BackendHealth, Quarantine)
+    Crash-kill sweeps ... repro.reliability.crashkill (subprocess SIGKILL harness)
+
+Everything here is disarmed by default: with no :class:`FaultPlan` armed the
+hooks cost one contextvar read and production behavior is untouched.
+"""
+from .faults import (  # noqa: F401
+    FaultPlan,
+    FaultRule,
+    FaultyIO,
+    InjectedFault,
+    crash_point,
+    current_plan,
+    fault_point,
+    wrap_io,
+)
+from .failover import BackendHealth, Quarantine  # noqa: F401

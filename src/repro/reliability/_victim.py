@@ -1,0 +1,27 @@
+"""Crash-kill victim entry point (subprocess target — see ``crashkill.py``).
+
+Runs one scenario in *this* process with the fault plan from the
+``REPRO_FAULT_PLAN`` environment variable armed.  A ``kill`` rule terminates
+the process with a real ``SIGKILL`` mid-operation; a ``record`` plan instead
+completes cleanly and writes the enumerated kill sites for the harness.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print(
+            "usage: python -m repro.reliability._victim SCENARIO WORKDIR",
+            file=sys.stderr,
+        )
+        return 2
+    from .crashkill import run_victim
+
+    run_victim(argv[0], argv[1])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

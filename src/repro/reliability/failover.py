@@ -1,0 +1,163 @@
+"""Backend quarantine and plan-digest quarantine for graceful degradation.
+
+:class:`BackendHealth` is the duck-typed health object a
+:class:`~repro.core.engine.CompressorSession` consults when an execution
+backend fails mid-chunk: the failing chunk is transparently re-executed on
+``host`` (bit-identical frames — the PR 6 conformance guarantee makes the
+failover invisible on the wire), the failure is recorded here, and once the
+failure count reaches ``threshold`` the backend is quarantined so later
+chunks skip it without paying the failure.  After ``cooldown_s`` one probe
+request is let through (half-open); a success re-opens the backend, another
+failure re-quarantines it.
+
+:class:`Quarantine` is the serving layer's per-key circuit breaker: a plan
+digest whose sessions keep getting poisoned (``consecutive failures >=
+threshold``) is quarantined for ``cooldown_s`` and requests for it get a
+structured error instead of feeding a crash loop.  Any success resets the
+count.
+
+Both classes are self-contained (stdlib only) so the engine can accept them
+without importing the service layer, and both take an injectable ``clock``
+for deterministic tests.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+__all__ = ["BackendHealth", "Quarantine"]
+
+
+class BackendHealth:
+    """Failure accounting + quarantine per execution backend."""
+
+    def __init__(
+        self,
+        *,
+        threshold: int = 1,
+        cooldown_s: float = 30.0,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if threshold < 1:
+            raise ValueError("threshold must be >= 1")
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._failures: Dict[str, int] = {}
+        self._successes: Dict[str, int] = {}
+        self._failovers: Dict[str, int] = {}
+        self._quarantined_at: Dict[str, float] = {}
+        self._probing: Dict[str, bool] = {}
+
+    def quarantined(self, backend: str) -> bool:
+        """True when chunks should skip ``backend`` and go straight to host.
+
+        After ``cooldown_s`` the first caller gets one probe (returns False
+        once); the probe's outcome decides whether the quarantine lifts.
+        """
+        with self._lock:
+            since = self._quarantined_at.get(backend)
+            if since is None:
+                return False
+            if self._clock() - since < self.cooldown_s:
+                return True
+            if self._probing.get(backend):
+                return True  # someone else holds the probe slot
+            self._probing[backend] = True
+            return False
+
+    def record_failure(self, backend: str, exc: Optional[BaseException] = None) -> None:
+        with self._lock:
+            self._failures[backend] = self._failures.get(backend, 0) + 1
+            self._failovers[backend] = self._failovers.get(backend, 0) + 1
+            if self._probing.pop(backend, None):
+                self._quarantined_at[backend] = self._clock()  # failed probe
+            elif self._failures[backend] >= self.threshold:
+                self._quarantined_at[backend] = self._clock()
+
+    def record_success(self, backend: str) -> None:
+        with self._lock:
+            self._successes[backend] = self._successes.get(backend, 0) + 1
+            if self._probing.pop(backend, None):
+                self._quarantined_at.pop(backend, None)  # probe succeeded
+                self._failures[backend] = 0
+
+    def stats(self) -> Dict[str, dict]:
+        with self._lock:
+            backends = set(self._failures) | set(self._successes)
+            return {
+                b: {
+                    "failures": self._failures.get(b, 0),
+                    "successes": self._successes.get(b, 0),
+                    "failovers": self._failovers.get(b, 0),
+                    "quarantined": b in self._quarantined_at,
+                }
+                for b in sorted(backends)
+            }
+
+
+class Quarantine:
+    """Circuit breaker keyed by an arbitrary string (the plan digest)."""
+
+    def __init__(
+        self,
+        *,
+        threshold: int = 3,
+        cooldown_s: float = 10.0,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if threshold < 1:
+            raise ValueError("threshold must be >= 1")
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._consecutive: Dict[str, int] = {}
+        self._opened_at: Dict[str, float] = {}
+        self._trips: Dict[str, int] = {}
+
+    def blocked(self, key: str) -> Optional[float]:
+        """Seconds until the quarantine on ``key`` lifts, or None when open.
+
+        Expiry admits the next request as a probe: its outcome (via
+        :meth:`record_failure` / :meth:`record_success`) re-trips or clears.
+        """
+        with self._lock:
+            opened = self._opened_at.get(key)
+            if opened is None:
+                return None
+            remaining = self.cooldown_s - (self._clock() - opened)
+            if remaining <= 0:
+                del self._opened_at[key]
+                # leave the consecutive count at threshold-1: one more
+                # failure re-trips immediately, one success clears
+                self._consecutive[key] = self.threshold - 1
+                return None
+            return remaining
+
+    def record_failure(self, key: str) -> None:
+        with self._lock:
+            n = self._consecutive.get(key, 0) + 1
+            self._consecutive[key] = n
+            if n >= self.threshold and key not in self._opened_at:
+                self._opened_at[key] = self._clock()
+                self._trips[key] = self._trips.get(key, 0) + 1
+
+    def record_success(self, key: str) -> None:
+        with self._lock:
+            self._consecutive.pop(key, None)
+            self._opened_at.pop(key, None)
+
+    def stats(self) -> Dict[str, dict]:
+        with self._lock:
+            keys = set(self._consecutive) | set(self._trips)
+            return {
+                k: {
+                    "consecutive_failures": self._consecutive.get(k, 0),
+                    "quarantined": k in self._opened_at,
+                    "trips": self._trips.get(k, 0),
+                }
+                for k in sorted(keys)
+            }

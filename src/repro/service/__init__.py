@@ -22,4 +22,4 @@ from .protocol import (  # noqa: F401
 )
 from .registry import PlanRegistry, RegisteredPlan  # noqa: F401
 from .server import CompressionServer  # noqa: F401
-from .client import ServiceClient  # noqa: F401
+from .client import ServiceClient, ServiceUnavailable  # noqa: F401

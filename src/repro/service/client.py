@@ -19,20 +19,43 @@ outputs are written with the same temp-file + atomic-rename discipline as
 from __future__ import annotations
 
 import os
+import random
 import socket
+import time
 from typing import Callable, Iterable, Optional, Tuple, Union
 
 from repro.core.stream_io import DEFAULT_CHUNK_BYTES, _atomic_sink, _open
 
 from . import protocol as P
 
-__all__ = ["ServiceClient"]
+__all__ = ["ServiceClient", "ServiceUnavailable"]
 
 PathOrBytes = Union[bytes, bytearray, memoryview]
 
 # a request body is always passed as a zero-arg factory returning the block
 # iterable, so a transparent reconnect can rebuild (and resend) it
 BodyFactory = Callable[[], Iterable[bytes]]
+
+# server-reported error kinds that mean "try again later", not "your request
+# is wrong" — the bounded-retry loop only ever retries these
+RETRYABLE_ERROR_KINDS = frozenset({"overloaded", "plan_quarantined"})
+
+
+class ServiceUnavailable(RuntimeError):
+    """The server answered, but declined the request for now (shedding under
+    overload, or the plan's circuit breaker is open).  Carries the server's
+    ``retry_after`` hint in seconds when one was sent."""
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        kind: Optional[str] = None,
+        retry_after: Optional[float] = None,
+    ):
+        super().__init__(message)
+        self.kind = kind
+        self.retry_after = retry_after
 
 
 class ServiceClient:
@@ -42,10 +65,24 @@ class ServiceClient:
         *,
         timeout: float = 60.0,
         block_bytes: int = P.DEFAULT_BLOCK_BYTES,
+        retries: int = 0,
+        backoff_base: float = 0.05,
+        backoff_max: float = 2.0,
+        rng: Optional[random.Random] = None,
     ):
         self.address = address
         self.timeout = timeout
         self.block_bytes = block_bytes
+        # bounded retries for *retryable* server refusals (overload shedding,
+        # plan quarantine): exponential backoff with full jitter, floored at
+        # the server's retry_after hint.  retries=0 (default) keeps every
+        # refusal a hard ServiceUnavailable.
+        if retries < 0:
+            raise ValueError("retries must be >= 0")
+        self.retries = retries
+        self.backoff_base = backoff_base
+        self.backoff_max = backoff_max
+        self._rng = rng if rng is not None else random.Random()
         self._connect()
 
     def _connect(self) -> None:
@@ -63,11 +100,39 @@ class ServiceClient:
         header: dict,
         body: Optional[BodyFactory] = None,
     ) -> Tuple[dict, P.BlockReader]:
-        """One request/response -> (response header, body reader).
+        """One request/response (with bounded retries) -> (header, body).
 
-        Raises RuntimeError on a server-reported error, ProtocolError on
-        malformed traffic.  The caller must drain the returned body before
-        issuing the next call.
+        Raises :class:`ServiceUnavailable` when the server sheds or the
+        plan is quarantined and the retry budget is spent, RuntimeError on any
+        other server-reported error, ProtocolError on malformed traffic.  The
+        caller must drain the returned body before issuing the next call.
+        """
+        for attempt in range(self.retries + 1):
+            try:
+                return self._call_once(verb, header, body)
+            except ServiceUnavailable as err:
+                if attempt >= self.retries:
+                    raise
+                self._backoff(attempt, err.retry_after)
+        raise AssertionError("unreachable")
+
+    def _backoff(self, attempt: int, retry_after: Optional[float]) -> None:
+        # full jitter (uniform over [0, cap]) decorrelates a thundering herd
+        # of shed clients; the server's retry_after hint is a *floor* — it
+        # knows how long the congestion it saw actually lasts
+        cap = min(self.backoff_max, self.backoff_base * (2 ** attempt))
+        delay = self._rng.uniform(0.0, cap)
+        if retry_after:
+            delay = max(delay, float(retry_after))
+        time.sleep(delay)
+
+    def _call_once(
+        self,
+        verb: int,
+        header: dict,
+        body: Optional[BodyFactory] = None,
+    ) -> Tuple[dict, P.BlockReader]:
+        """A single exchange on the wire.
 
         A server that closed the connection cleanly before answering (idle
         timeout, restart) gets one transparent retry on a fresh connection —
@@ -94,9 +159,16 @@ class ServiceClient:
         status, resp, rbody = got
         if status == P.STATUS_ERROR:
             rbody.drain()
-            raise RuntimeError(
-                f"service error: {resp.get('error', 'unknown error')}"
-            )
+            message = f"service error: {resp.get('error', 'unknown error')}"
+            kind = resp.get("error_kind")
+            if kind in RETRYABLE_ERROR_KINDS:
+                retry_after = resp.get("retry_after")
+                raise ServiceUnavailable(
+                    message,
+                    kind=kind,
+                    retry_after=None if retry_after is None else float(retry_after),
+                )
+            raise RuntimeError(message)
         return resp, rbody
 
     @staticmethod

@@ -28,6 +28,7 @@ from typing import BinaryIO, Dict, Iterable, Iterator, Optional, Tuple, Union
 import msgpack
 
 from repro.core.wire import FrameError, write_varint
+from repro.reliability.faults import fault_point, wrap_io
 
 PROTOCOL_VERSION = 1
 REQUEST_MAGIC = b"OZS1"
@@ -246,6 +247,8 @@ def write_message(
     body: Optional[Iterable[bytes]] = None,
 ) -> int:
     """Emit one framed message -> body bytes written (flushes the sink)."""
+    fault_point("proto.send")  # injectable connection drop / torn frame
+    w = wrap_io(w, "proto.io")
     blob = _pack_header(header)
     head = bytearray()
     head += magic
@@ -267,6 +270,7 @@ def _check_magic(got: bytes, magic: bytes) -> None:
 
 
 def _read_tail(r: BinaryIO) -> Tuple[int, dict, BlockReader]:
+    fault_point("proto.recv")  # injectable mid-message connection loss
     tag = _read_exact(r, 1)[0]
     hlen = _read_varint(r)
     if hlen > MAX_HEADER_BYTES:

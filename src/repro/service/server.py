@@ -34,6 +34,7 @@ from typing import Optional
 from repro.core import DecompressorSession, ExecScratch, SessionPool
 from repro.core import stream_io, wire
 from repro.core.stream_io import DEFAULT_CHUNK_BYTES
+from repro.reliability import BackendHealth, Quarantine
 
 from . import protocol as P
 from .registry import PlanRegistry, RegisteredPlan
@@ -41,6 +42,19 @@ from .registry import PlanRegistry, RegisteredPlan
 __all__ = ["CompressionServer"]
 
 MAX_CHUNK_BYTES = 256 << 20
+
+
+class _RequestError(Exception):
+    """Request-level failure that carries structured response-header fields.
+
+    ``extra`` is merged into the error response header — the transport for
+    machine-readable degradation signals (``error_kind``, ``retry_after``)
+    without touching the version-locked protocol framing.
+    """
+
+    def __init__(self, message: str, **extra):
+        super().__init__(message)
+        self.extra = dict(extra)
 
 
 class _Spool(tempfile.SpooledTemporaryFile):
@@ -74,6 +88,10 @@ class CompressionServer:
         idle_timeout: float = 300.0,
         spool_bytes: int = 32 << 20,
         max_body_bytes: int = 1 << 30,
+        admission_timeout: Optional[float] = None,
+        backend: Optional[str] = None,
+        quarantine_threshold: int = 3,
+        quarantine_cooldown_s: float = 10.0,
     ):
         if (socket_path is None) == (host is None):
             raise ValueError("pass exactly one of socket_path= or host=")
@@ -88,6 +106,22 @@ class CompressionServer:
         self.idle_timeout = idle_timeout
         self.spool_bytes = spool_bytes
         self.max_body_bytes = max_body_bytes
+        # admission control: None keeps the original backpressure behavior
+        # (block up to request_timeout for a pooled session); a float sheds
+        # instead — waiters past the deadline get a structured "overloaded"
+        # error with a retry_after hint rather than a connection drop
+        self.admission_timeout = admission_timeout
+        # backend override for every pooled compression session (None keeps
+        # each registered compressor's own choice); the shared BackendHealth
+        # quarantines a faulting device backend daemon-wide so one bad kernel
+        # flips all sessions to bit-identical host execution at once
+        self.backend = backend
+        self.backend_health = BackendHealth()
+        # per-plan-digest circuit breaker: a plan whose sessions keep dying
+        # mid-request stops eating pool capacity until its cooldown expires
+        self.quarantine = Quarantine(
+            threshold=quarantine_threshold, cooldown_s=quarantine_cooldown_s
+        )
         self.pool = SessionPool(max_per_key=sessions_per_plan)
         # one server-wide coder-table cache: every session (all plans, both
         # directions) shares it, so the stats verb's hit/miss counters
@@ -106,6 +140,7 @@ class CompressionServer:
             "connections": 0,
             "active_connections": 0,
             "errors": 0,
+            "shed": 0,
             "requests": {name: 0 for name in P.VERBS.values()},
             "bytes_in": 0,
             "bytes_out": 0,
@@ -209,15 +244,16 @@ class CompressionServer:
         """Ensure a pool factory exists for this plan -> its digest key."""
         if entry.digest not in self.pool.keys():
             comp = entry.compressor
-            self.pool.register(
-                entry.digest,
-                lambda: comp.session(
-                    chunk_bytes=None,
-                    n_workers=self.n_workers,
-                    window=self.window,
-                    scratch=self._scratch,
-                ),
+            kw = dict(
+                chunk_bytes=None,
+                n_workers=self.n_workers,
+                window=self.window,
+                scratch=self._scratch,
+                failover=self.backend_health,
             )
+            if self.backend is not None:
+                kw["backend"] = self.backend
+            self.pool.register(entry.digest, lambda: comp.session(**kw))
         return entry.digest
 
     def _handle_conn(self, sock: socket.socket) -> None:
@@ -264,12 +300,16 @@ class CompressionServer:
                     # request-level failure with intact framing: report and
                     # keep serving this connection
                     self._bump(errors=1)
+                    if isinstance(err, _RequestError):
+                        msg, extra = str(err), err.extra
+                    else:
+                        msg, extra = f"{type(err).__name__}: {err}", None
                     try:
                         body.drain()
                     except (P.ProtocolError, OSError, socket.timeout):
-                        self._try_error(w, f"{type(err).__name__}: {err}")
+                        self._try_error(w, msg, extra)
                         return
-                    if not self._try_error(w, f"{type(err).__name__}: {err}"):
+                    if not self._try_error(w, msg, extra):
                         return
         finally:
             for f in (w, r):
@@ -285,9 +325,9 @@ class CompressionServer:
                 self._conns.discard(sock)
             self._bump(active_connections=-1)
 
-    def _try_error(self, w, message: str) -> bool:
+    def _try_error(self, w, message: str, extra: Optional[dict] = None) -> bool:
         try:
-            P.write_response(w, P.STATUS_ERROR, {"error": message})
+            P.write_response(w, P.STATUS_ERROR, {"error": message, **(extra or {})})
             return True
         except (OSError, ValueError):
             return False
@@ -351,16 +391,51 @@ class CompressionServer:
         if chunk_bytes < 0 or chunk_bytes > MAX_CHUNK_BYTES:
             raise ValueError(f"bad chunk_bytes {chunk_bytes}")
         declared = self._body_budget(body)
+        remaining = self.quarantine.blocked(entry.digest)
+        if remaining is not None:
+            raise _RequestError(
+                f"plan {key!r} is quarantined after repeated failures",
+                error_kind="plan_quarantined",
+                retry_after=round(remaining, 3),
+            )
         pool_key = self._session_key(entry)
+        admission = (
+            self.request_timeout
+            if self.admission_timeout is None
+            else self.admission_timeout
+        )
         with self._spool() as out:
-            with self.pool.acquire(pool_key, timeout=self.request_timeout) as sess:
-                stats = stream_io.compress_file(
-                    body,
-                    out,
-                    entry.compressor.plan,
-                    chunk_bytes=chunk_bytes or None,
-                    session=sess,
-                )
+            try:
+                with self.pool.acquire(pool_key, timeout=admission) as sess:
+                    stats = stream_io.compress_file(
+                        body,
+                        out,
+                        entry.compressor.plan,
+                        chunk_bytes=chunk_bytes or None,
+                        session=sess,
+                    )
+            except TimeoutError:
+                # every pooled session busy past the admission deadline: shed
+                # with a structured signal instead of tying up the worker (or,
+                # with shedding disabled, keep the historical generic error)
+                if self.admission_timeout is None:
+                    raise
+                self._bump(shed=1)
+                raise _RequestError(
+                    f"server overloaded: no free session for plan {key!r}"
+                    f" within {admission:.3g}s",
+                    error_kind="overloaded",
+                    retry_after=round(max(admission, 0.05), 3),
+                ) from None
+            except (P.ProtocolError, OSError, socket.timeout):
+                raise  # transport trouble, not the plan's fault
+            except Exception:
+                # the session died mid-request: charge the plan digest so a
+                # poisoned plan trips its breaker instead of burning through
+                # fresh pool sessions forever
+                self.quarantine.record_failure(entry.digest)
+                raise
+            self.quarantine.record_success(entry.digest)
             # fail closed on size lies: compare the bytes that actually
             # arrived (not stats["bytes_in"], which on the known-size chunked
             # path *is* the declared value) against the declaration — a short
@@ -409,6 +484,7 @@ class CompressionServer:
                 "connections": self._stats["connections"],
                 "active_connections": self._stats["active_connections"],
                 "errors": self._stats["errors"],
+                "shed": self._stats["shed"],
                 "requests": dict(self._stats["requests"]),
                 "bytes_in": self._stats["bytes_in"],
                 "bytes_out": self._stats["bytes_out"],
@@ -429,4 +505,8 @@ class CompressionServer:
             # are observable in production
             "resolve_cache": resolve_cache_info(),
             "coder_cache": self._scratch.table_cache_info(),
+            # degradation state: which device backends are benched, which plan
+            # digests tripped their breaker, and how many requests were shed
+            "backend_health": self.backend_health.stats(),
+            "quarantine": self.quarantine.stats(),
         }

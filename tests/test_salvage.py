@@ -1,0 +1,194 @@
+"""Salvage decoding: best-effort recovery of damaged containers.
+
+The contract: the default decode path stays **fail-closed** (any corruption
+raises), while the explicit salvage path recovers every intact chunk
+byte-exactly and reports the lost chunk indices — never silently wrong
+data, never a guess presented as a clean decode.
+"""
+import io
+
+import numpy as np
+import pytest
+
+from repro.cli import main as cli_main
+from repro.codecs.profiles import resolve_profile_spec
+from repro.core import compress, decompress
+from repro.core.engine import DecompressorSession
+from repro.core.message import serial
+from repro.core.wire import (
+    FrameError,
+    read_varint,
+    salvage_container,
+    verify_container,
+)
+
+CHUNK = 2048
+N_CHUNKS = 64
+
+
+def _payload() -> bytes:
+    rng = np.random.default_rng(42)
+    # compressible but chunk-distinct content
+    base = rng.integers(0, 8, size=N_CHUNKS * CHUNK, dtype=np.uint8)
+    return (base + np.arange(N_CHUNKS * CHUNK, dtype=np.uint64) // CHUNK % 8).astype(
+        np.uint8
+    ).tobytes()
+
+
+def _container(payload: bytes) -> bytes:
+    return compress(resolve_profile_spec("generic"), serial(payload), chunk_bytes=CHUNK)
+
+
+def _chunk_spans(blob: bytes):
+    """[(frame_start, frame_end)] for each chunk, plus each length-varint pos."""
+    n, pos = read_varint(blob, 5)
+    spans, lens = [], []
+    for _ in range(n):
+        lens.append(pos)
+        ln, pos = read_varint(blob, pos)
+        spans.append((pos, pos + ln))
+        pos += ln
+    return spans, lens
+
+
+@pytest.fixture(scope="module")
+def intact():
+    payload = _payload()
+    blob = _container(payload)
+    return payload, blob
+
+
+# ------------------------------------------------------------------ the demo
+def test_salvage_recovers_61_of_64_chunks_byte_exact(intact):
+    payload, blob = intact
+    spans, _ = _chunk_spans(blob)
+    assert len(spans) == N_CHUNKS
+    bad = bytearray(blob)
+    for i in (7, 8, 40):  # corrupt three chunk payloads (structure intact)
+        lo, hi = spans[i]
+        bad[(lo + hi) // 2] ^= 0xFF
+    bad = bytes(bad)
+
+    # default path: fail closed
+    with pytest.raises((FrameError, ValueError)):
+        decompress(bad)
+
+    with DecompressorSession() as sess:
+        streams, report = sess.decompress_salvage(bad)
+    assert report.n_chunks == N_CHUNKS
+    assert len(streams) == len(report.recovered) == N_CHUNKS - 3
+    assert report.recovered_unplaced == 0
+    assert report.damaged == [(7, 8), (40, 40)]
+    assert not report.trailer_ok and not report.intact
+    for s, idx in zip(streams, report.recovered):
+        assert s.content_bytes() == payload[idx * CHUNK : (idx + 1) * CHUNK]
+
+
+def test_destroyed_length_varint_resyncs_all_chunks(intact):
+    payload, blob = intact
+    _, lens = _chunk_spans(blob)
+    bad = bytearray(blob)
+    bad[lens[20]] ^= 0x80  # chunk 20's length varint: structure destroyed
+    with pytest.raises((FrameError, ValueError)):
+        decompress(bytes(bad))
+    with DecompressorSession() as sess:
+        streams, report = sess.decompress_salvage(bytes(bad))
+    # resync on the next frame magic + per-frame CRC recovers everything:
+    # chunk 20's frame itself is undamaged, only the container framing was
+    assert len(streams) == N_CHUNKS and report.recovered == list(range(N_CHUNKS))
+    for i, s in enumerate(streams):
+        assert s.content_bytes() == payload[i * CHUNK : (i + 1) * CHUNK]
+
+
+def test_truncated_tail_recovers_prefix(intact):
+    payload, blob = intact
+    spans, _ = _chunk_spans(blob)
+    cut = (spans[-1][0] + spans[-1][1]) // 2  # mid-way through the last frame
+    with DecompressorSession() as sess:
+        streams, report = sess.decompress_salvage(blob[:cut])
+    assert report.recovered == list(range(N_CHUNKS - 1))
+    assert any(lo == N_CHUNKS - 1 for lo, _hi in report.damaged)
+    for i, s in enumerate(streams):
+        assert s.content_bytes() == payload[i * CHUNK : (i + 1) * CHUNK]
+
+
+def test_intact_container_salvages_clean(intact):
+    payload, blob = intact
+    with DecompressorSession() as sess:
+        streams, report = sess.decompress_salvage(blob)
+    assert report.intact and report.trailer_ok
+    assert b"".join(s.content_bytes() for s in streams) == payload
+
+
+def test_salvage_bare_frame_paths():
+    frame = compress(resolve_profile_spec("generic"), serial(b"hello " * 400))
+    with DecompressorSession() as sess:
+        streams, report = sess.decompress_salvage(frame)
+        assert report.intact and len(streams) == 1
+        bad = bytearray(frame)
+        bad[len(bad) // 2] ^= 0xFF
+        streams, report = sess.decompress_salvage(bytes(bad))
+    # a bare frame has no chunk redundancy: nothing recoverable, says so
+    assert streams == [] and report.damaged == [(0, 0)] and not report.intact
+
+
+def test_verify_container_reports_damage_without_decoding(intact):
+    _payload_, blob = intact
+    assert verify_container(io.BytesIO(blob)).intact
+    spans, _ = _chunk_spans(blob)
+    bad = bytearray(blob)
+    lo, hi = spans[3]
+    bad[(lo + hi) // 2] ^= 0x01
+    report = verify_container(io.BytesIO(bytes(bad)))
+    assert not report.intact
+    assert (3, 3) in report.damaged
+    assert report.trailer_ok is False
+
+
+def test_salvage_container_matches_session_report(intact):
+    payload, blob = intact
+    spans, _ = _chunk_spans(blob)
+    bad = bytearray(blob)
+    bad[sum(spans[11]) // 2] ^= 0x10
+    frames, report = salvage_container(bytes(bad))
+    assert report.damaged == [(11, 11)]
+    assert len(frames) == N_CHUNKS - 1
+
+
+# ------------------------------------------------------------------ CLI e2e
+def test_cli_salvage_and_verify(tmp_path, intact, capsys):
+    payload, blob = intact
+    spans, _ = _chunk_spans(blob)
+    bad = bytearray(blob)
+    for i in (7, 8, 40):
+        lo, hi = spans[i]
+        bad[(lo + hi) // 2] ^= 0xFF
+    good_f = tmp_path / "good.ozl"
+    bad_f = tmp_path / "bad.ozl"
+    good_f.write_bytes(blob)
+    bad_f.write_bytes(bytes(bad))
+
+    # inspect --verify: exit 0 on pristine, nonzero + damage report on corrupt
+    assert cli_main(["inspect", str(good_f), "--verify"]) == 0
+    assert cli_main(["inspect", str(bad_f), "--verify"]) == 1
+    out = capsys.readouterr().out
+    assert "61/64 recovered" in out and "7..8, 40" in out
+
+    # default decompress: fail closed (CLI error exit), no output file
+    dst = tmp_path / "out.bin"
+    assert cli_main(["decompress", str(bad_f), "-o", str(dst)]) == 2
+    assert not dst.exists()
+
+    # salvage decompress: exit 1 (recovered with losses), intact chunks only
+    assert cli_main(["decompress", str(bad_f), "-o", str(dst), "--salvage"]) == 1
+    want = b"".join(
+        payload[i * CHUNK : (i + 1) * CHUNK]
+        for i in range(N_CHUNKS)
+        if i not in (7, 8, 40)
+    )
+    assert dst.read_bytes() == want
+
+    # salvage of an intact container: clean exit, full roundtrip
+    dst2 = tmp_path / "out2.bin"
+    assert cli_main(["decompress", str(good_f), "-o", str(dst2), "--salvage"]) == 0
+    assert dst2.read_bytes() == payload

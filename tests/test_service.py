@@ -318,35 +318,50 @@ def test_service_unknown_plan_keeps_connection(server):
     assert server.stats()["errors"] == 1
 
 
+def _hostile_compress(c, header):
+    """Send a size-lying request; return the error response header, or None
+    when the server dropped the connection instead (an equally valid
+    rejection — and a race the client must tolerate: a fast-failing server
+    may slam the door while our body is still in flight, surfacing as
+    EPIPE/ECONNRESET on the *write* side)."""
+    import repro.service.protocol as P_
+
+    try:
+        P_.write_request(c._w, P_.VERB_COMPRESS, header, P_.iter_body_blocks(DATA))
+    except (BrokenPipeError, ConnectionResetError):
+        return None
+    try:
+        got = P_.read_response_or_eof(c._r)
+    except (BrokenPipeError, ConnectionResetError):
+        return None
+    if got is None:
+        return None
+    status, resp, body = got
+    body.drain()
+    assert status == P_.STATUS_ERROR
+    return resp
+
+
 def test_service_size_lies_rejected(server):
     """A declared size that disagrees with the body must fail, not silently
     compress a truncated or padded payload."""
-    import repro.service.protocol as P_
-
     with ServiceClient(server.address) as c:
         # understate: extra bytes beyond the declared size
-        header = {"plan": "text", "size": 10, "chunk_bytes": 0}
-        P_.write_request(c._w, P_.VERB_COMPRESS, header, P_.iter_body_blocks(DATA))
-        status, resp, body = P_.read_response(c._r)
-        body.drain()
-        assert status == P_.STATUS_ERROR
+        _hostile_compress(c, {"plan": "text", "size": 10, "chunk_bytes": 0})
     with ServiceClient(server.address) as c:
         # overstate: body ends before the declared size
-        header = {"plan": "text", "size": len(DATA) * 2, "chunk_bytes": CHUNK}
-        P_.write_request(c._w, P_.VERB_COMPRESS, header, P_.iter_body_blocks(DATA))
-        status, resp, body = P_.read_response(c._r)
-        body.drain()
-        assert status == P_.STATUS_ERROR
+        _hostile_compress(
+            c, {"plan": "text", "size": len(DATA) * 2, "chunk_bytes": CHUNK}
+        )
     with ServiceClient(server.address) as c:
         # overstate by so little that the promised chunk count still matches:
         # only true byte accounting (not the chunk-count check) catches this
         assert len(DATA) % CHUNK != 0
-        header = {"plan": "text", "size": len(DATA) + 1, "chunk_bytes": CHUNK}
-        P_.write_request(c._w, P_.VERB_COMPRESS, header, P_.iter_body_blocks(DATA))
-        status, resp, body = P_.read_response(c._r)
-        body.drain()
-        assert status == P_.STATUS_ERROR
-        assert "declared size" in resp.get("error", "")
+        resp = _hostile_compress(
+            c, {"plan": "text", "size": len(DATA) + 1, "chunk_bytes": CHUNK}
+        )
+        if resp is not None:
+            assert "declared size" in resp.get("error", "")
     # the daemon is still healthy
     with ServiceClient(server.address) as c:
         assert c.ping()["ok"]

@@ -1,0 +1,162 @@
+"""Daemon degradation under faults and overload.
+
+The service keeps its byte-identity guarantee while degrading *gracefully*:
+saturated pools shed with a structured retry-after signal instead of
+stalling the accept loop, a plan that keeps poisoning sessions trips a
+per-digest breaker without touching its neighbours, device-kernel failures
+fail over to host re-execution transparently, and the client's bounded
+jittered retries turn transient shedding into eventual success.
+"""
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.reliability import FaultPlan
+from repro.service import (
+    CompressionServer,
+    PlanRegistry,
+    ServiceClient,
+    ServiceUnavailable,
+)
+
+DATA = b"req=deadbeef level=INFO svc=auth handled in 42us\n" * 800
+CHUNK = 8 << 10
+
+
+def _server(tmp_path, **kw):
+    registry = PlanRegistry()
+    registry.register_profile("text")
+    registry.register_profile("struct:3,5")
+    return CompressionServer(
+        registry,
+        socket_path=str(tmp_path / "ozl.sock"),
+        max_clients=8,
+        sessions_per_plan=1,
+        request_timeout=20.0,
+        **kw,
+    )
+
+
+# ------------------------------------------------------------------ shedding
+def test_overload_sheds_with_retry_after(tmp_path):
+    with _server(tmp_path, admission_timeout=0.05) as srv:
+        with ServiceClient(srv.address) as c:
+            ref, _ = c.compress_bytes(DATA, plan="text", chunk_bytes=CHUNK)
+            digest = srv.registry.resolve("text").digest
+            lease = srv.pool.acquire(digest)  # hold the only session hostage
+            lease.__enter__()
+            try:
+                with pytest.raises(ServiceUnavailable) as ei:
+                    c.compress_bytes(DATA, plan="text", chunk_bytes=CHUNK)
+            finally:
+                lease.__exit__(None, None, None)
+            assert ei.value.kind == "overloaded"
+            assert ei.value.retry_after and ei.value.retry_after > 0
+            # shedding is per-request, not per-connection: the same client
+            # succeeds once capacity frees, with byte-identical output
+            frame, _ = c.compress_bytes(DATA, plan="text", chunk_bytes=CHUNK)
+            assert frame == ref
+        assert srv.stats()["shed"] >= 1
+
+
+def test_blocking_admission_is_the_default(tmp_path):
+    # admission_timeout=None keeps the historical behavior: waiters block
+    # (bounded by request_timeout) instead of shedding
+    with _server(tmp_path) as srv:
+        with ServiceClient(srv.address) as c:
+            ref, _ = c.compress_bytes(DATA, plan="text", chunk_bytes=CHUNK)
+            digest = srv.registry.resolve("text").digest
+            lease = srv.pool.acquire(digest)
+            lease.__enter__()
+            timer = threading.Timer(0.2, lease.__exit__, (None, None, None))
+            timer.start()
+            try:
+                frame, _ = c.compress_bytes(DATA, plan="text", chunk_bytes=CHUNK)
+            finally:
+                timer.join()
+            assert frame == ref
+        assert srv.stats()["shed"] == 0
+
+
+def test_client_retries_through_transient_overload(tmp_path):
+    with _server(tmp_path, admission_timeout=0.05) as srv:
+        with ServiceClient(
+            srv.address, retries=8, backoff_base=0.05, rng=random.Random(0)
+        ) as c:
+            ref, _ = c.compress_bytes(DATA, plan="text", chunk_bytes=CHUNK)
+            digest = srv.registry.resolve("text").digest
+            lease = srv.pool.acquire(digest)
+            lease.__enter__()
+            timer = threading.Timer(0.25, lease.__exit__, (None, None, None))
+            timer.start()
+            try:
+                # sheds a few times, backs off with jitter, then lands
+                frame, _ = c.compress_bytes(DATA, plan="text", chunk_bytes=CHUNK)
+            finally:
+                timer.join()
+            assert frame == ref
+        assert srv.stats()["shed"] >= 1
+
+
+def test_client_rejects_negative_retries():
+    with pytest.raises(ValueError):
+        ServiceClient("/nonexistent.sock", retries=-1)
+
+
+# ---------------------------------------------------------------- quarantine
+def test_poison_plan_trips_breaker_without_hurting_neighbours(tmp_path):
+    with _server(
+        tmp_path, quarantine_threshold=3, quarantine_cooldown_s=0.2
+    ) as srv:
+        with ServiceClient(srv.address) as c:
+            bad = b"x" * 1001  # not a whole number of 8-byte records
+            for _ in range(3):
+                with pytest.raises(RuntimeError, match="whole number of records"):
+                    c.compress_bytes(bad, plan="struct:3,5", chunk_bytes=0)
+            with pytest.raises(ServiceUnavailable) as ei:
+                c.compress_bytes(bad, plan="struct:3,5", chunk_bytes=0)
+            assert ei.value.kind == "plan_quarantined"
+            assert ei.value.retry_after and ei.value.retry_after > 0
+            # the breaker is per plan digest: a healthy neighbour still serves
+            c.compress_bytes(DATA, plan="text", chunk_bytes=CHUNK)
+            digest = srv.registry.resolve("struct:3,5").digest
+            q = srv.stats()["quarantine"][digest]
+            assert q["quarantined"] and q["trips"] == 1
+            # cooldown expiry admits a probe; a well-formed request clears it
+            time.sleep(0.25)
+            c.compress_bytes(b"x" * 1000, plan="struct:3,5", chunk_bytes=0)
+            assert not srv.stats()["quarantine"][digest]["quarantined"]
+
+
+# ------------------------------------------------------------ device failover
+def test_device_fault_fails_over_to_byte_identical_host_frames(tmp_path):
+    payload = np.arange(8192, dtype=np.uint32).tobytes()
+    kw = dict(max_clients=4, sessions_per_plan=1, request_timeout=20.0)
+    host_reg = PlanRegistry()
+    host_reg.register_profile("struct:4,4")
+    dev_reg = PlanRegistry()
+    dev_reg.register_profile("struct:4,4")
+    with CompressionServer(
+        host_reg, socket_path=str(tmp_path / "host.sock"), backend="host", **kw
+    ) as host_srv, CompressionServer(
+        dev_reg, socket_path=str(tmp_path / "dev.sock"), backend="device", **kw
+    ) as dev_srv:
+        with ServiceClient(host_srv.address) as c:
+            host_frame, _ = c.compress_bytes(
+                payload, plan="struct:4,4", chunk_bytes=CHUNK
+            )
+        # every device kernel invocation fails for the rest of the block:
+        # the device server must keep serving via transparent host retries
+        with FaultPlan().at("device.encode.device.*", times=10**6).arm(
+            all_threads=True
+        ):
+            with ServiceClient(dev_srv.address) as c:
+                f1, _ = c.compress_bytes(payload, plan="struct:4,4", chunk_bytes=CHUNK)
+                f2, _ = c.compress_bytes(payload, plan="struct:4,4", chunk_bytes=CHUNK)
+        assert f1 == host_frame and f2 == host_frame
+        health = dev_srv.stats()["backend_health"]["device"]
+        assert health["failovers"] >= 1 and health["quarantined"]
+        assert host_srv.stats()["backend_health"] == {}  # host server untouched

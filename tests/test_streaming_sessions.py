@@ -382,3 +382,31 @@ def test_session_pipeline_prefetch_draws_overlap_lazy_source():
             sess.stats["prefetch_hits"] + sess.stats["prefetch_misses"]
             >= len(chunks) - 1
         )
+
+
+def test_prefetch_source_error_propagates_promptly():
+    """A lazy source that dies mid-stream fails the call with its own error
+    as soon as the draw thread reports it — it must not hide behind a full
+    window of in-flight encodes — and the session stays usable after."""
+    import time
+
+    plan = pipeline("delta", "range_pack")
+    data = numeric(np.arange(120000, dtype=np.uint32))
+    chunks = _split_chunks(data, 4096)
+
+    class SourceDied(Exception):
+        pass
+
+    def source():
+        for c in chunks[:3]:
+            yield c
+        raise SourceDied("lazy source died mid-stream")
+
+    with CompressorSession(plan, chunk_bytes=4096, n_workers=2) as sess:
+        buf = io.BytesIO()
+        t0 = time.perf_counter()
+        with pytest.raises(SourceDied, match="died mid-stream"):
+            sess.compress_chunks(source(), buf, n_chunks=len(chunks))
+        assert time.perf_counter() - t0 < 5.0  # surfaced, not deadlocked
+        # the pool survives a poisoned source: the next request is clean
+        assert sess.compress(data) == compress(plan, data, chunk_bytes=4096)
