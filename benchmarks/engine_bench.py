@@ -201,6 +201,7 @@ def run_codecs(sizes_mib=(1, 16, 64), emit_json=False, print_rows=True):
         payload = {
             "schema": "BENCH_codecs/v2",  # v2: per-stage breakdowns + 64 MiB
             "host_cpus": os.cpu_count(),
+            "usable_cpus": len(os.sched_getaffinity(0)),
             "sizes_mib": list(sizes_mib),
             "baseline": str(baseline_path.name) if baseline else None,
             "rows": results,
@@ -359,6 +360,7 @@ def run_stream(emit_json: bool = False, print_rows: bool = True):
         payload = {
             "schema": "BENCH_stream/v1",
             "host_cpus": os.cpu_count(),
+            "usable_cpus": len(os.sched_getaffinity(0)),
             "corpus_mib": STREAM_MIB,
             "chunk_mib": STREAM_CHUNK_MIB,
             "window": STREAM_WINDOW,
@@ -515,6 +517,108 @@ def run_serve(emit_json: bool = False, print_rows: bool = True):
                 f" (got {speedup:.2f}x)"
             )
 
+        # -- the plane: process-pool scaling, workers=1 vs workers=N ---------
+        # the same workload through the pre-forked selector-frontend plane.
+        # The ratio that matters is c8 throughput at N worker processes over
+        # c8 at one process — the GIL pins the threaded server near 1.0, the
+        # process pool should track core count.  On a single-core host the
+        # ratio is pure scheduling noise, so the scaling floor only asserts
+        # when real cores are available (usable_cpus, i.e. the affinity mask
+        # — os.cpu_count() lies inside containers).
+        from repro.service import ServicePlane
+
+        usable_cpus = len(os.sched_getaffinity(0))
+        plane_workers = max(2, min(usable_cpus, 4))
+        results["usable_cpus"] = usable_cpus
+        results["plane_workers"] = plane_workers
+        for n_workers in (1, plane_workers):
+            plane_reg = PlanRegistry()
+            plane_reg.register_profile("text")
+            with ServicePlane(
+                plane_reg,
+                socket_path=os.path.join(tmp, f"plane{n_workers}.sock"),
+                workers=n_workers, max_clients=16,
+            ) as plane:
+                # warm each worker once: accepts round-robin across the
+                # pool, so n_workers sequential connections land one each
+                for _ in range(n_workers):
+                    with ServiceClient(plane.address, timeout=120.0) as c:
+                        c.compress_bytes(corpus, "text", chunk_bytes=chunk)
+                for n_clients in (1, 4, 8):
+                    latencies = [[] for _ in range(n_clients)]
+                    failures = []
+
+                    def plane_body(i):
+                        try:
+                            with ServiceClient(
+                                plane.address, timeout=120.0, retries=2
+                            ) as c:
+                                for _ in range(SERVE_REQS):
+                                    t0 = time.perf_counter()
+                                    frame, _info = c.compress_bytes(
+                                        corpus, "text", chunk_bytes=chunk
+                                    )
+                                    latencies[i].append(
+                                        time.perf_counter() - t0
+                                    )
+                                    if frame != want:
+                                        raise AssertionError(
+                                            "plane frame diverged"
+                                        )
+                        except Exception as err:
+                            failures.append(err)
+
+                    threads = [
+                        threading.Thread(target=plane_body, args=(i,))
+                        for i in range(n_clients)
+                    ]
+                    t0 = time.perf_counter()
+                    for t in threads:
+                        t.start()
+                    for t in threads:
+                        t.join()
+                    wall = time.perf_counter() - t0
+                    if failures:
+                        raise failures[0]
+                    flat = [x for lane in latencies for x in lane]
+                    entry = {
+                        "workers": n_workers,
+                        "clients": n_clients,
+                        "req_s": round(len(flat) / wall, 3),
+                        "p50_ms": round(_percentile(flat, 50) * 1e3, 1),
+                        "p99_ms": round(_percentile(flat, 99) * 1e3, 1),
+                        "mib_s": round(
+                            len(flat) * len(corpus) / MIB / wall, 2
+                        ),
+                    }
+                    results[f"plane_w{n_workers}_c{n_clients}"] = entry
+                    rows.append(
+                        f"serve/plane_w{n_workers}_c{n_clients},"
+                        f"{wall/len(flat)*1e6:.1f},"
+                        + ";".join(f"{k}={v}" for k, v in entry.items())
+                    )
+        scale = results[f"plane_w{plane_workers}_c8"]["req_s"] / max(
+            results["plane_w1_c8"]["req_s"], 1e-9
+        )
+        results["plane_c8_scaling"] = round(scale, 2)
+        rows.append(
+            f"serve/plane_scaling,0.0,"
+            f"w{plane_workers}_over_w1_at_c8={scale:.2f};cpus={usable_cpus}"
+        )
+        if usable_cpus >= 2:
+            if scale < 1.7:
+                raise AssertionError(
+                    f"process pool failed to scale: w{plane_workers} c8 is"
+                    f" only {scale:.2f}x w1 c8 on {usable_cpus} cores"
+                )
+            if (
+                results[f"plane_w{plane_workers}_c8"]["req_s"]
+                < results[f"plane_w{plane_workers}_c1"]["req_s"]
+            ):
+                raise AssertionError(
+                    "concurrency regressed throughput: plane c8 < c1"
+                )
+
         # -- degraded mode 1: overload shedding + client retries -------------
         # a deliberately starved server (one pooled session, tiny admission
         # window) under 8 clients: instead of queueing unboundedly, excess
@@ -634,8 +738,12 @@ def run_serve(emit_json: bool = False, print_rows: bool = True):
             )
     if emit_json:
         payload = {
-            "schema": "BENCH_serve/v2",
+            "schema": "BENCH_serve/v3",
             "host_cpus": os.cpu_count(),
+            "usable_cpus": len(os.sched_getaffinity(0)),
+            # the number that actually bounds scaling: the affinity mask
+            # (cgroup cpusets make os.cpu_count() a lie inside containers)
+            "usable_cpus": len(os.sched_getaffinity(0)),
             "rows": results,
         }
         RESULTS_DIR.mkdir(parents=True, exist_ok=True)
@@ -713,6 +821,7 @@ def run_train(emit_json: bool = False, print_rows: bool = True):
         payload = {
             "schema": "BENCH_train/v1",
             "host_cpus": os.cpu_count(),
+            "usable_cpus": len(os.sched_getaffinity(0)),
             "rows": results,
         }
         RESULTS_DIR.mkdir(parents=True, exist_ok=True)

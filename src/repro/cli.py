@@ -427,18 +427,58 @@ def _cmd_serve(args) -> int:
     kw = dict(
         max_clients=args.max_clients,
         sessions_per_plan=args.sessions_per_plan,
-        n_workers=args.workers,
+        n_workers=args.session_threads,
         window=args.window,
         request_timeout=args.timeout,
         idle_timeout=args.idle_timeout,
         admission_timeout=args.admission_timeout,
         backend=args.backend,
+        rate_limit=args.rate_limit,
+        rate_burst=args.rate_burst,
     )
     if family == _socket.AF_UNIX:
-        server = CompressionServer(registry, socket_path=target, **kw)
+        addr_kw = dict(socket_path=target)
     else:
         host, port = target
-        server = CompressionServer(registry, host=host, port=port, **kw)
+        addr_kw = dict(host=host, port=port)
+
+    if args.workers and args.workers > 0:
+        # multi-core plane: pre-forked session workers on a shared listener
+        import os as _os
+        import threading as _threading
+
+        from repro.service import ServicePlane
+
+        plane = ServicePlane(
+            registry,
+            workers=args.workers,
+            # chaos harnesses arm worker fault plans through the standard env
+            worker_fault_json=_os.environ.get("REPRO_FAULT_PLAN"),
+            **addr_kw,
+            **kw,
+        )
+        stop = _threading.Event()
+
+        def _stop(_sig, _frm):
+            stop.set()
+
+        signal.signal(signal.SIGINT, _stop)
+        signal.signal(signal.SIGTERM, _stop)
+        plane.start()
+        print(
+            f"serving on {plane.address} ({len(registry)} plan(s),"
+            f" {args.workers} worker process(es); ^C to stop)"
+        )
+        sys.stdout.flush()
+        try:
+            stop.wait()
+        finally:
+            plane.shutdown()
+            print("server stopped")
+        return 0
+
+    server = CompressionServer(registry, **addr_kw, **kw)
+
     def _stop(_sig, _frm):
         server.request_stop()
 
@@ -463,6 +503,9 @@ def _cmd_client(args) -> int:
             import json as _json
 
             print(_json.dumps(client.stats(), indent=2, sort_keys=True))
+            return 0
+        if args.action == "metrics":
+            sys.stdout.write(client.metrics().decode())
             return 0
         if args.action == "ping":
             info = client.ping()
@@ -595,11 +638,22 @@ def build_parser() -> argparse.ArgumentParser:
     s.add_argument("--profile", action="append", metavar="NAME",
                    help="named profile to register (repeatable; id = name)")
     s.add_argument("--max-clients", type=int, default=8,
-                   help="concurrent connections served (default 8)")
+                   help="concurrent connections served (default 8; per worker"
+                        " process with --workers)")
     s.add_argument("--sessions-per-plan", type=int, default=2,
                    help="compressor sessions pooled per plan (default 2)")
-    s.add_argument("--workers", type=int, default=None,
-                   help="encode/decode threads per session")
+    s.add_argument("--workers", type=int, default=0,
+                   help="session-worker processes sharing the listener"
+                        " (default 0: single-process threaded server); each"
+                        " owns its own session pool and caches")
+    s.add_argument("--session-threads", type=int, default=None,
+                   help="encode/decode threads per compression session")
+    s.add_argument("--rate-limit", type=float, default=None,
+                   help="per-client token-bucket rate (requests/second) for"
+                        " compress/decompress; rejected requests carry"
+                        " error_kind=rate_limited + retry_after")
+    s.add_argument("--rate-burst", type=float, default=None,
+                   help="token-bucket burst capacity (default 2x rate)")
     s.add_argument("--window", type=int, default=None,
                    help="max in-flight chunks per request (bounds memory)")
     s.add_argument("--timeout", type=float, default=60.0,
@@ -617,7 +671,10 @@ def build_parser() -> argparse.ArgumentParser:
     s.set_defaults(fn=_cmd_serve)
 
     cl = sub.add_parser("client", help="talk to a running compression daemon")
-    cl.add_argument("action", choices=["compress", "decompress", "stats", "ping"])
+    cl.add_argument(
+        "action",
+        choices=["compress", "decompress", "stats", "ping", "metrics"],
+    )
     cl.add_argument("input", nargs="?", default=None)
     cl.add_argument("-o", "--output", default=None, help="default: INPUT.ozl /"
                     " strip .ozl")

@@ -316,6 +316,23 @@ def resolve_cache_clear() -> None:
         _cache_stats["misses"] = 0
 
 
+def _engine_after_fork() -> None:
+    """Re-arm the module-level cache lock in a forked child.
+
+    The service plane pre-forks session-worker processes (and forks again to
+    replace a crashed one) while the parent may be resolving concurrently; a
+    lock captured mid-acquire would deadlock the child's first resolve.  The
+    memoized entries themselves are immutable and carry over — a worker forked
+    from a warmed parent starts with a hot resolve cache.
+    """
+    global _cache_lock
+    _cache_lock = threading.Lock()
+
+
+if hasattr(os, "register_at_fork"):  # pragma: no branch - POSIX in CI
+    os.register_at_fork(after_in_child=_engine_after_fork)
+
+
 def _as_streams(inputs) -> List[Stream]:
     if isinstance(inputs, (bytes, bytearray, memoryview)):
         return [serial(inputs)]
@@ -1415,6 +1432,14 @@ class SessionPool:
                 }
                 for key in self._factories
             }
+
+    def total_in_use(self) -> int:
+        """Checked-out sessions across every key (0 == nothing leaked)."""
+        with self._lock:
+            return sum(
+                self._created[key] - len(self._idle[key])
+                for key in self._factories
+            )
 
     def close(self) -> None:
         """Shut down every idle session and forget all factories.  Sessions

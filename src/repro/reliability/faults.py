@@ -223,6 +223,25 @@ _GLOBAL: Optional[FaultPlan] = None
 _GLOBAL_LOCK = threading.Lock()
 
 
+def _faults_after_fork() -> None:
+    """Disarm any inherited global plan in a forked child.
+
+    The service plane forks session workers; a plan armed in the parent must
+    not silently fire inside them (their occurrence counters would diverge
+    from the parent's, breaking determinism).  Workers that *should* fault
+    arm an explicit plan of their own (``ServicePlane(worker_fault_json=)`` /
+    the ``REPRO_FAULT_PLAN`` env var) after the fork.  Crash-kill victims are
+    unaffected — they are spawned via exec, not fork.
+    """
+    global _GLOBAL, _GLOBAL_LOCK
+    _GLOBAL = None
+    _GLOBAL_LOCK = threading.Lock()
+
+
+if hasattr(os, "register_at_fork"):  # pragma: no branch - POSIX in CI
+    os.register_at_fork(after_in_child=_faults_after_fork)
+
+
 def current_plan() -> Optional[FaultPlan]:
     plan = _ACTIVE.get()
     if plan is not None:

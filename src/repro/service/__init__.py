@@ -1,7 +1,7 @@
 """repro.service — the long-lived compression daemon (paper §VIII).
 
 One universal decoder plus registered trained configurations, served: a
-:class:`~repro.service.server.CompressionServer` keeps a checkout pool of
+:class:`~repro.service.server.RequestCore` keeps a checkout pool of
 :class:`~repro.core.engine.CompressorSession` objects per registered plan and
 one shared :class:`~repro.core.engine.DecompressorSession`, so production
 callers pay plan resolution, coder-table construction, and thread-pool spin-up
@@ -9,11 +9,27 @@ once — not per invocation, which is the deployment friction the one-shot CLI
 carries.  Frames produced through the service are byte-identical to the
 offline CLI for the same plan and chunk settings.
 
+Two server embeddings share that core:
+
+* :class:`~repro.service.server.CompressionServer` — thread per connection,
+  blocking I/O; the simplest in-process embedding for tests and libraries.
+* :class:`~repro.service.plane.ServicePlane` — the production shape: a
+  supervisor pre-forks session-worker processes that all accept from one
+  shared listener, each running a non-blocking
+  :class:`~repro.service.frontend.ServiceFrontend` event loop.  Real cores,
+  crash isolation, per-client rate limiting, aggregated Prometheus metrics
+  through the ``stats`` verb.
+
 Public API:
     Wire protocol ......... repro.service.protocol  (framing, fail-closed)
     Plan registry ......... repro.service.registry  (id + content digest)
-    Daemon ................ repro.service.server    (CompressionServer)
+    Verb engine ........... repro.service.server    (RequestCore)
+    Threaded daemon ....... repro.service.server    (CompressionServer)
+    Async frontend ........ repro.service.frontend  (ServiceFrontend)
+    Multi-core plane ...... repro.service.plane     (ServicePlane)
     Blocking client ....... repro.service.client    (ServiceClient)
+    Rate limiting ......... repro.service.ratelimit (RateLimiter)
+    Metrics rendering ..... repro.service.metrics   (render_prometheus)
 """
 from .protocol import (  # noqa: F401
     PROTOCOL_VERSION,
@@ -21,5 +37,13 @@ from .protocol import (  # noqa: F401
     parse_address,
 )
 from .registry import PlanRegistry, RegisteredPlan  # noqa: F401
-from .server import CompressionServer  # noqa: F401
-from .client import ServiceClient, ServiceUnavailable  # noqa: F401
+from .server import CompressionServer, RequestCore  # noqa: F401
+from .client import (  # noqa: F401
+    ConnectionLost,
+    ServiceClient,
+    ServiceUnavailable,
+)
+from .frontend import ServiceFrontend  # noqa: F401
+from .plane import ServicePlane  # noqa: F401
+from .ratelimit import RateLimiter  # noqa: F401
+from .metrics import render_prometheus  # noqa: F401

@@ -28,7 +28,7 @@ from repro.core.stream_io import DEFAULT_CHUNK_BYTES, _atomic_sink, _open
 
 from . import protocol as P
 
-__all__ = ["ServiceClient", "ServiceUnavailable"]
+__all__ = ["ServiceClient", "ServiceUnavailable", "ConnectionLost"]
 
 PathOrBytes = Union[bytes, bytearray, memoryview]
 
@@ -38,7 +38,9 @@ BodyFactory = Callable[[], Iterable[bytes]]
 
 # server-reported error kinds that mean "try again later", not "your request
 # is wrong" — the bounded-retry loop only ever retries these
-RETRYABLE_ERROR_KINDS = frozenset({"overloaded", "plan_quarantined"})
+RETRYABLE_ERROR_KINDS = frozenset(
+    {"overloaded", "plan_quarantined", "rate_limited"}
+)
 
 
 class ServiceUnavailable(RuntimeError):
@@ -56,6 +58,15 @@ class ServiceUnavailable(RuntimeError):
         super().__init__(message)
         self.kind = kind
         self.retry_after = retry_after
+
+
+class ConnectionLost(P.ProtocolError):
+    """The connection died before a complete response arrived — a server
+    restart or a crashed session worker.  Every verb is stateless and a
+    request that never got a response is safe to resend, so clients that
+    opted into ``retries=`` treat this exactly like an ``overloaded`` answer:
+    back off, reconnect, try again (the plane's replacement worker, or a
+    surviving sibling on the shared listener, picks the retry up)."""
 
 
 class ServiceClient:
@@ -87,9 +98,14 @@ class ServiceClient:
 
     def _connect(self) -> None:
         family, target = P.parse_address(self.address)
-        self._sock = socket.socket(family, socket.SOCK_STREAM)
-        self._sock.settimeout(self.timeout)
-        self._sock.connect(target)
+        sock = socket.socket(family, socket.SOCK_STREAM)
+        try:
+            sock.settimeout(self.timeout)
+            sock.connect(target)
+        except BaseException:
+            sock.close()
+            raise
+        self._sock = sock
         self._r = self._sock.makefile("rb")
         self._w = self._sock.makefile("wb")
 
@@ -104,8 +120,10 @@ class ServiceClient:
 
         Raises :class:`ServiceUnavailable` when the server sheds or the
         plan is quarantined and the retry budget is spent, RuntimeError on any
-        other server-reported error, ProtocolError on malformed traffic.  The
-        caller must drain the returned body before issuing the next call.
+        other server-reported error, ProtocolError on malformed traffic.
+        Connection-level failures — refused while a worker restarts, reset
+        when one dies mid-exchange — retry under the same jittered budget.
+        The caller must drain the returned body before issuing the next call.
         """
         for attempt in range(self.retries + 1):
             try:
@@ -114,6 +132,14 @@ class ServiceClient:
                 if attempt >= self.retries:
                     raise
                 self._backoff(attempt, err.retry_after)
+            except (ConnectionError, ConnectionLost):
+                # ECONNREFUSED / ECONNRESET / died-before-response: the far
+                # side is restarting or a worker crashed.  Drop the dead
+                # connection now; the next attempt redials from scratch.
+                if attempt >= self.retries:
+                    raise
+                self.close()
+                self._backoff(attempt, None)
         raise AssertionError("unreachable")
 
     def _backoff(self, attempt: int, retry_after: Optional[float]) -> None:
@@ -139,6 +165,8 @@ class ServiceClient:
         the protocol is stateless, so a resend is always safe.  A truncation
         mid-response stays a hard error: fail closed, never guess.
         """
+        if self._sock is None:
+            self._connect()
         got = None
         for attempt in (0, 1):
             try:
@@ -151,7 +179,7 @@ class ServiceClient:
             if got is not None:
                 break
             if attempt:
-                raise P.ProtocolError(
+                raise ConnectionLost(
                     "server closed the connection before responding"
                 )
             self.close()
@@ -212,6 +240,12 @@ class ServiceClient:
         resp, body = self._call(P.VERB_STATS, {})
         body.drain()
         return resp
+
+    def metrics(self) -> bytes:
+        """Prometheus exposition text (the stats verb with an additive
+        ``format`` header key — same counters, scrape-ready rendering)."""
+        resp, body = self._call(P.VERB_STATS, {"format": "prometheus"})
+        return body.read()
 
     def compress_bytes(
         self,
@@ -275,6 +309,8 @@ class ServiceClient:
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:
+        if self._sock is None:
+            return
         for f in (self._w, self._r):
             try:
                 f.close()
@@ -284,6 +320,7 @@ class ServiceClient:
             self._sock.close()
         except OSError:
             pass
+        self._sock = None  # _call_once redials on the next use
 
     def __enter__(self) -> "ServiceClient":
         return self

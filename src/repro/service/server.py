@@ -1,17 +1,23 @@
 """The compression daemon: hot sessions behind a socket.
 
-A :class:`CompressionServer` owns exactly the state the one-shot CLI rebuilds
-on every invocation — resolved plans, coder-table caches, thread pools — and
-serves it to many concurrent clients over the framed protocol
-(``repro.service.protocol``) on a Unix or TCP socket:
+Two layers live here:
 
-  * one :class:`~repro.core.engine.SessionPool` entry per registered plan,
-    keyed by content digest, with sessions checked out per request;
-  * one shared :class:`~repro.core.engine.DecompressorSession` (decoding is
-    plan-free and its internals are lock-guarded);
-  * request bodies stream through :class:`~repro.service.protocol.BlockReader`
-    into ``stream_io`` — **byte-identical** frames to the offline CLI for the
-    same plan and chunk settings, because it *is* the same code path.
+* :class:`RequestCore` — the transport-independent verb engine.  It owns
+  exactly the state the one-shot CLI rebuilds on every invocation — resolved
+  plans, coder-table caches, session pools, the shared decoder — plus the
+  degradation machinery (plan quarantine, backend health, admission shedding)
+  and per-verb latency accounting.  Every server flavor dispatches into the
+  same ``handle()``: the threaded :class:`CompressionServer` below, the async
+  frontend (``repro.service.frontend``), and the process-pool session workers
+  of the multi-core plane (``repro.service.plane``).  Because it *is* the
+  same ``stream_io`` code path as the offline CLI, frames are byte-identical
+  everywhere.
+
+* :class:`CompressionServer` — the original thread-per-connection daemon
+  (Unix/TCP, persistent connections, blocking I/O).  It remains the simplest
+  embedding for tests and libraries; production serving should prefer
+  :class:`~repro.service.plane.ServicePlane`, which scales the same
+  ``RequestCore`` across real cores.
 
 Memory stays bounded under load from three directions: ``max_clients`` caps
 concurrent requests, each compression session's in-flight ``window`` bounds
@@ -23,28 +29,37 @@ the checked-out session is returned — or discarded, if it failed mid-use.
 """
 from __future__ import annotations
 
+import io
+import os
 import socket
 import tempfile
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
-from typing import Optional
+from typing import Callable, Dict, Optional, Tuple
 
 from repro.core import DecompressorSession, ExecScratch, SessionPool
 from repro.core import stream_io, wire
 from repro.core.stream_io import DEFAULT_CHUNK_BYTES
 from repro.reliability import BackendHealth, Quarantine
+from repro.reliability.faults import crash_point
 
 from . import protocol as P
-from .registry import PlanRegistry, RegisteredPlan
+from .metrics import CONTENT_TYPE as METRICS_CONTENT_TYPE
+from .metrics import render_prometheus
+from .ratelimit import RateLimiter
 
-__all__ = ["CompressionServer"]
+__all__ = ["CompressionServer", "RequestCore", "RequestError"]
 
 MAX_CHUNK_BYTES = 256 << 20
 
+#: Entries kept in each verb's sliding latency window (quantiles + req/s).
+LATENCY_WINDOW = 1024
 
-class _RequestError(Exception):
+
+class RequestError(Exception):
     """Request-level failure that carries structured response-header fields.
 
     ``extra`` is merged into the error response header — the transport for
@@ -55,6 +70,10 @@ class _RequestError(Exception):
     def __init__(self, message: str, **extra):
         super().__init__(message)
         self.extra = dict(extra)
+
+
+# back-compat alias: the pre-plane name was private to this module
+_RequestError = RequestError
 
 
 class _Spool(tempfile.SpooledTemporaryFile):
@@ -72,10 +91,350 @@ class _Spool(tempfile.SpooledTemporaryFile):
         return True
 
 
+class RequestCore:
+    """Transport-independent verb engine shared by every server flavor.
+
+    ``handle(verb, header, body)`` runs one request to completion and returns
+    ``(response_header, body_file_or_None)`` — the caller frames and writes
+    the response (and closes the body file).  Failures *raise*: a
+    :class:`RequestError` carries structured degradation fields
+    (``error_kind``/``retry_after``), any other exception is a generic
+    request failure, and protocol/transport errors propagate untouched so
+    the transport can decide whether the connection is still usable.
+
+    The ``body`` argument is duck-typed: anything with ``read``/``drain``/
+    ``bytes_read``/``size_hint``/``limit`` works — the blocking servers pass
+    a live :class:`~repro.service.protocol.BlockReader`, the async frontend
+    passes an already-buffered spool wrapper.
+    """
+
+    def __init__(
+        self,
+        registry,
+        *,
+        sessions_per_plan: int = 2,
+        n_workers: Optional[int] = None,
+        window: Optional[int] = None,
+        request_timeout: float = 60.0,
+        spool_bytes: int = 32 << 20,
+        max_body_bytes: int = 1 << 30,
+        admission_timeout: Optional[float] = None,
+        backend: Optional[str] = None,
+        quarantine_threshold: int = 3,
+        quarantine_cooldown_s: float = 10.0,
+    ):
+        self.registry = registry
+        self.n_workers = n_workers
+        self.window = window
+        self.request_timeout = request_timeout
+        self.spool_bytes = spool_bytes
+        self.max_body_bytes = max_body_bytes
+        # admission control: None keeps the original backpressure behavior
+        # (block up to request_timeout for a pooled session); a float sheds
+        # instead — waiters past the deadline get a structured "overloaded"
+        # error with a retry_after hint rather than a connection drop
+        self.admission_timeout = admission_timeout
+        # backend override for every pooled compression session (None keeps
+        # each registered compressor's own choice); the shared BackendHealth
+        # quarantines a faulting device backend process-wide so one bad kernel
+        # flips all sessions to bit-identical host execution at once
+        self.backend = backend
+        self.backend_health = BackendHealth()
+        # per-plan-digest circuit breaker: a plan whose sessions keep dying
+        # mid-request stops eating pool capacity until its cooldown expires
+        self.quarantine = Quarantine(
+            threshold=quarantine_threshold, cooldown_s=quarantine_cooldown_s
+        )
+        self.pool = SessionPool(max_per_key=sessions_per_plan)
+        # one process-wide coder-table cache: every session (all plans, both
+        # directions) shares it, so the stats verb's hit/miss counters
+        # describe the whole process's table-build traffic
+        self._scratch = ExecScratch()
+        self._decoder = DecompressorSession(
+            n_workers=n_workers, window=window, scratch=self._scratch
+        )
+        self.started = time.monotonic()
+        # the owner may install a richer stats source (the threaded server
+        # adds connection counters, a plane worker returns the cross-worker
+        # aggregate); handle() serves whatever this returns
+        self.stats_provider: Callable[[], dict] = self.stats
+        self._stats_lock = threading.Lock()
+        self._counters = {
+            "errors": 0,
+            "shed": 0,
+            "rate_limited": 0,
+            "requests": {name: 0 for name in P.VERBS.values()},
+            "bytes_in": 0,
+            "bytes_out": 0,
+        }
+        self._latency: Dict[str, deque] = {
+            name: deque(maxlen=LATENCY_WINDOW) for name in P.VERBS.values()
+        }
+
+    # -------------------------------------------------------------- plumbing
+    def bump(self, *, verb: Optional[str] = None, **deltas: int) -> None:
+        with self._stats_lock:
+            if verb is not None:
+                self._counters["requests"][verb] += 1
+            for k, v in deltas.items():
+                self._counters[k] += v
+
+    def record_latency(self, verb: str, seconds: float) -> None:
+        with self._stats_lock:
+            self._latency[verb].append((time.monotonic(), seconds))
+
+    def _spool(self):
+        return _Spool(max_size=self.spool_bytes)
+
+    def session_key(self, entry) -> str:
+        """Ensure a pool factory exists for this plan -> its digest key."""
+        if entry.digest not in self.pool.keys():
+            comp = entry.compressor
+            kw = dict(
+                chunk_bytes=None,
+                n_workers=self.n_workers,
+                window=self.window,
+                scratch=self._scratch,
+                failover=self.backend_health,
+            )
+            if self.backend is not None:
+                kw["backend"] = self.backend
+            self.pool.register(entry.digest, lambda: comp.session(**kw))
+        return entry.digest
+
+    def ping_header(self) -> dict:
+        return {
+            "ok": True,
+            "protocol_version": P.PROTOCOL_VERSION,
+            "plans": len(self.registry),
+            "uptime_s": round(time.monotonic() - self.started, 3),
+            "pid": os.getpid(),
+        }
+
+    # ------------------------------------------------------------- dispatch
+    def handle(
+        self, verb: int, header: dict, body
+    ) -> Tuple[dict, Optional[io.IOBase]]:
+        """Run one request -> (response header, body file or None).
+
+        The caller owns (and must close) the returned body file.  Raises on
+        any failure; no response bytes have been produced by then, so the
+        transport can always frame a structured error instead.
+        """
+        self.bump(verb=P.VERBS[verb])
+        t0 = time.perf_counter()
+        if verb == P.VERB_PING:
+            body.drain()
+            out: Tuple[dict, Optional[io.IOBase]] = (self.ping_header(), None)
+        elif verb == P.VERB_STATS:
+            body.drain()
+            out = self._do_stats(header)
+        elif verb == P.VERB_COMPRESS:
+            out = self._do_compress(header, body)
+        elif verb == P.VERB_DECOMPRESS:
+            out = self._do_decompress(header, body)
+        else:  # unreachable: the request parser validated the verb
+            raise P.ProtocolError(f"unknown verb {verb}")
+        self.record_latency(P.VERBS[verb], time.perf_counter() - t0)
+        return out
+
+    def _do_stats(self, header: dict) -> Tuple[dict, Optional[io.IOBase]]:
+        st = self.stats_provider()
+        if header.get("format") == "prometheus":
+            text = render_prometheus(st)
+            return (
+                {"content_type": METRICS_CONTENT_TYPE, "size": len(text)},
+                io.BytesIO(text),
+            )
+        return st, None
+
+    def _body_budget(self, body) -> Optional[int]:
+        """Narrow the body budget to the declared size -> that size (if any).
+
+        The transport already installed ``max_body_bytes`` as the hard
+        ceiling; the client's declared ``size`` may only *narrow* it, never
+        widen it — a hostile ``size=2**60`` is rejected up front (and the
+        reject path's ``drain()`` stays bounded by the ceiling).
+        """
+        declared = body.size_hint
+        if declared is not None:
+            if declared > self.max_body_bytes:
+                raise ValueError(
+                    f"declared size {declared} exceeds the server's"
+                    f" per-request limit of {self.max_body_bytes} bytes"
+                )
+            # cut a lying sender off at the first over-budget block — before
+            # its body is buffered — on the bare-frame path too (which reads
+            # the whole payload at once)
+            body.limit = declared
+        return declared
+
+    def _do_compress(self, header: dict, body) -> Tuple[dict, io.IOBase]:
+        key = header.get("plan")
+        if not key or not isinstance(key, str):
+            raise ValueError("compress request needs a 'plan' header")
+        entry = self.registry.resolve(key)
+        chunk_bytes = header.get("chunk_bytes")
+        if chunk_bytes is None:
+            chunk_bytes = DEFAULT_CHUNK_BYTES
+        chunk_bytes = int(chunk_bytes)
+        if chunk_bytes < 0 or chunk_bytes > MAX_CHUNK_BYTES:
+            raise ValueError(f"bad chunk_bytes {chunk_bytes}")
+        declared = self._body_budget(body)
+        remaining = self.quarantine.blocked(entry.digest)
+        if remaining is not None:
+            raise RequestError(
+                f"plan {key!r} is quarantined after repeated failures",
+                error_kind="plan_quarantined",
+                retry_after=round(remaining, 3),
+            )
+        pool_key = self.session_key(entry)
+        admission = (
+            self.request_timeout
+            if self.admission_timeout is None
+            else self.admission_timeout
+        )
+        crash_point("svc.request.compress.begin")
+        out = self._spool()
+        try:
+            try:
+                with self.pool.acquire(pool_key, timeout=admission) as sess:
+                    stats = stream_io.compress_file(
+                        body,
+                        out,
+                        entry.compressor.plan,
+                        chunk_bytes=chunk_bytes or None,
+                        session=sess,
+                    )
+            except TimeoutError:
+                # every pooled session busy past the admission deadline: shed
+                # with a structured signal instead of tying up the worker (or,
+                # with shedding disabled, keep the historical generic error)
+                if self.admission_timeout is None:
+                    raise
+                self.bump(shed=1)
+                raise RequestError(
+                    f"server overloaded: no free session for plan {key!r}"
+                    f" within {admission:.3g}s",
+                    error_kind="overloaded",
+                    retry_after=round(max(admission, 0.05), 3),
+                ) from None
+            except (P.ProtocolError, OSError, socket.timeout):
+                raise  # transport trouble, not the plan's fault
+            except Exception:
+                # the session died mid-request: charge the plan digest so a
+                # poisoned plan trips its breaker instead of burning through
+                # fresh pool sessions forever
+                self.quarantine.record_failure(entry.digest)
+                raise
+            self.quarantine.record_success(entry.digest)
+            # fail closed on size lies: compare the bytes that actually
+            # arrived (not stats["bytes_in"], which on the known-size chunked
+            # path *is* the declared value) against the declaration — a short
+            # body must never be silently compressed as if complete
+            body.drain()
+            if declared is not None and body.bytes_read != declared:
+                raise ValueError(
+                    f"request declared size={declared} but sent"
+                    f" {body.bytes_read} bytes"
+                )
+            crash_point("svc.request.compress.mid")
+            self.bump(bytes_in=stats["bytes_in"], bytes_out=stats["bytes_out"])
+            out.seek(0)
+            return (
+                {
+                    **stats,
+                    "plan_id": entry.plan_id,
+                    "digest": entry.digest,
+                    "size": stats["bytes_out"],
+                },
+                out,
+            )
+        except BaseException:
+            out.close()
+            raise
+
+    def _do_decompress(self, header: dict, body) -> Tuple[dict, io.IOBase]:
+        self._body_budget(body)
+        crash_point("svc.request.decompress.begin")
+        out = self._spool()
+        try:
+            stats = stream_io.decompress_file(body, out, session=self._decoder)
+            if body.drain():
+                raise wire.FrameError("trailing garbage after frame")
+            self.bump(bytes_in=stats["bytes_in"], bytes_out=stats["bytes_out"])
+            out.seek(0)
+            return {**stats, "size": stats["bytes_out"]}, out
+        except BaseException:
+            out.close()
+            raise
+
+    # ----------------------------------------------------------------- stats
+    def _latency_stats(self) -> Dict[str, dict]:
+        now = time.monotonic()
+        out: Dict[str, dict] = {}
+        with self._stats_lock:
+            windows = {verb: list(ring) for verb, ring in self._latency.items()}
+        for verb, entries in windows.items():
+            recent = [(t, s) for t, s in entries if now - t <= 60.0]
+            if not recent:
+                continue
+            durs = sorted(s for _t, s in recent)
+
+            def q(p: float) -> float:
+                return durs[min(len(durs) - 1, int(round(p * (len(durs) - 1))))]
+
+            span = max(now - min(t for t, _s in recent), 1e-9)
+            out[verb] = {
+                "n": len(durs),
+                "p50_ms": round(q(0.50) * 1e3, 3),
+                "p99_ms": round(q(0.99) * 1e3, 3),
+                "req_s": round(len(durs) / span, 3),
+            }
+        return out
+
+    def counters(self) -> dict:
+        with self._stats_lock:
+            return {
+                "errors": self._counters["errors"],
+                "shed": self._counters["shed"],
+                "rate_limited": self._counters["rate_limited"],
+                "requests": dict(self._counters["requests"]),
+                "bytes_in": self._counters["bytes_in"],
+                "bytes_out": self._counters["bytes_out"],
+            }
+
+    def stats(self) -> dict:
+        from repro.core.engine import resolve_cache_info
+
+        return {
+            **self.ping_header(),
+            **self.counters(),
+            "registry": self.registry.entries(),
+            "sessions": self.pool.stats(),
+            "decoder": dict(self._decoder.stats),
+            "latency": self._latency_stats(),
+            # cache effectiveness: a cold resolve or coder-table rebuild per
+            # request is exactly the kind of throughput cliff the blocked hot
+            # paths exist to prevent — surface the counters so regressions
+            # are observable in production
+            "resolve_cache": resolve_cache_info(),
+            "coder_cache": self._scratch.table_cache_info(),
+            # degradation state: which device backends are benched, which plan
+            # digests tripped their breaker, and how many requests were shed
+            "backend_health": self.backend_health.stats(),
+            "quarantine": self.quarantine.stats(),
+        }
+
+    def close(self) -> None:
+        self.pool.close()
+        self._decoder.close()
+
+
 class CompressionServer:
     def __init__(
         self,
-        registry: Optional[PlanRegistry] = None,
+        registry: Optional["PlanRegistry"] = None,
         *,
         socket_path: Optional[str] = None,
         host: Optional[str] = None,
@@ -92,59 +451,49 @@ class CompressionServer:
         backend: Optional[str] = None,
         quarantine_threshold: int = 3,
         quarantine_cooldown_s: float = 10.0,
+        rate_limit: Optional[float] = None,
+        rate_burst: Optional[float] = None,
     ):
         if (socket_path is None) == (host is None):
             raise ValueError("pass exactly one of socket_path= or host=")
-        self.registry = registry if registry is not None else PlanRegistry()
+        if registry is None:
+            from .registry import PlanRegistry
+
+            registry = PlanRegistry()
+        self.core = RequestCore(
+            registry,
+            sessions_per_plan=sessions_per_plan,
+            n_workers=n_workers,
+            window=window,
+            request_timeout=request_timeout,
+            spool_bytes=spool_bytes,
+            max_body_bytes=max_body_bytes,
+            admission_timeout=admission_timeout,
+            backend=backend,
+            quarantine_threshold=quarantine_threshold,
+            quarantine_cooldown_s=quarantine_cooldown_s,
+        )
+        self.core.stats_provider = self.stats
+        self.registry = registry
         self.max_clients = max_clients
-        self.n_workers = n_workers
-        self.window = window
         self.request_timeout = request_timeout
         # a persistent client legitimately pauses between requests far longer
         # than any single request takes; conflating the two timeouts silently
         # severed idle-but-healthy connections
         self.idle_timeout = idle_timeout
-        self.spool_bytes = spool_bytes
         self.max_body_bytes = max_body_bytes
-        # admission control: None keeps the original backpressure behavior
-        # (block up to request_timeout for a pooled session); a float sheds
-        # instead — waiters past the deadline get a structured "overloaded"
-        # error with a retry_after hint rather than a connection drop
-        self.admission_timeout = admission_timeout
-        # backend override for every pooled compression session (None keeps
-        # each registered compressor's own choice); the shared BackendHealth
-        # quarantines a faulting device backend daemon-wide so one bad kernel
-        # flips all sessions to bit-identical host execution at once
-        self.backend = backend
-        self.backend_health = BackendHealth()
-        # per-plan-digest circuit breaker: a plan whose sessions keep dying
-        # mid-request stops eating pool capacity until its cooldown expires
-        self.quarantine = Quarantine(
-            threshold=quarantine_threshold, cooldown_s=quarantine_cooldown_s
+        # per-connection token buckets: Unix-socket peers are indistinct, so
+        # the key is the connection itself — a flooding client starves only
+        # its own budget, never a neighbor's
+        self.rate_limiter = (
+            RateLimiter(rate_limit, rate_burst) if rate_limit else None
         )
-        self.pool = SessionPool(max_per_key=sessions_per_plan)
-        # one server-wide coder-table cache: every session (all plans, both
-        # directions) shares it, so the stats verb's hit/miss counters
-        # describe the whole daemon's table-build traffic
-        self._scratch = ExecScratch()
-        self._decoder = DecompressorSession(
-            n_workers=n_workers, window=window, scratch=self._scratch
-        )
-        self._started = time.monotonic()
         self._shutdown = threading.Event()
         self._conn_lock = threading.Lock()
         self._conns: set = set()
         self._accept_thread: Optional[threading.Thread] = None
         self._stats_lock = threading.Lock()
-        self._stats = {
-            "connections": 0,
-            "active_connections": 0,
-            "errors": 0,
-            "shed": 0,
-            "requests": {name: 0 for name in P.VERBS.values()},
-            "bytes_in": 0,
-            "bytes_out": 0,
-        }
+        self._stats = {"connections": 0, "active_connections": 0}
 
         if socket_path is not None:
             self.socket_path: Optional[str] = str(socket_path)
@@ -166,6 +515,23 @@ class CompressionServer:
         self._executor = ThreadPoolExecutor(
             max_workers=max_clients, thread_name_prefix="ozl-serve"
         )
+
+    # convenience pass-throughs: the pre-RequestCore attribute surface
+    @property
+    def pool(self):
+        return self.core.pool
+
+    @property
+    def backend_health(self):
+        return self.core.backend_health
+
+    @property
+    def quarantine(self):
+        return self.core.quarantine
+
+    @property
+    def admission_timeout(self):
+        return self.core.admission_timeout
 
     # -------------------------------------------------------------- lifecycle
     def start(self) -> "CompressionServer":
@@ -221,8 +587,7 @@ class CompressionServer:
         self._executor.shutdown(wait=True)
         if self._accept_thread is not None:
             self._accept_thread.join(timeout=5)
-        self.pool.close()
-        self._decoder.close()
+        self.core.close()
         if self.socket_path:
             Path(self.socket_path).unlink(missing_ok=True)
 
@@ -233,32 +598,15 @@ class CompressionServer:
         self.shutdown()
 
     # -------------------------------------------------------------- plumbing
-    def _bump(self, *, verb: Optional[str] = None, **deltas: int) -> None:
+    def _bump(self, **deltas: int) -> None:
         with self._stats_lock:
-            if verb is not None:
-                self._stats["requests"][verb] += 1
             for k, v in deltas.items():
                 self._stats[k] += v
-
-    def _session_key(self, entry: RegisteredPlan) -> str:
-        """Ensure a pool factory exists for this plan -> its digest key."""
-        if entry.digest not in self.pool.keys():
-            comp = entry.compressor
-            kw = dict(
-                chunk_bytes=None,
-                n_workers=self.n_workers,
-                window=self.window,
-                scratch=self._scratch,
-                failover=self.backend_health,
-            )
-            if self.backend is not None:
-                kw["backend"] = self.backend
-            self.pool.register(entry.digest, lambda: comp.session(**kw))
-        return entry.digest
 
     def _handle_conn(self, sock: socket.socket) -> None:
         r = sock.makefile("rb")
         w = sock.makefile("wb")
+        conn_key = f"conn:{id(sock):x}"
         try:
             while not self._shutdown.is_set():
                 # between requests the connection may sit idle for a long
@@ -279,7 +627,7 @@ class CompressionServer:
                 except (P.ProtocolError, OSError, socket.timeout):
                     # a *started* request that stalls or breaks is real
                     # malformed traffic
-                    self._bump(errors=1)
+                    self.core.bump(errors=1)
                     self._try_error(w, "malformed request (connection dropped)")
                     return
                 # hard cap installed before any dispatch or validation, so
@@ -287,20 +635,19 @@ class CompressionServer:
                 # request before its declared size is even looked at — is
                 # bounded; a flood hits the limit and drops the connection
                 body.limit = self.max_body_bytes
-                self._bump(verb=P.VERBS[verb])
                 try:
-                    self._dispatch(verb, header, body, w)
+                    self._dispatch(verb, header, body, w, conn_key)
                 except (P.ProtocolError, OSError, socket.timeout):
                     # framing is broken (or the peer vanished): no resync
                     # point exists, so drop the connection
-                    self._bump(errors=1)
+                    self.core.bump(errors=1)
                     self._try_error(w, "request body unreadable")
                     return
                 except Exception as err:
                     # request-level failure with intact framing: report and
                     # keep serving this connection
-                    self._bump(errors=1)
-                    if isinstance(err, _RequestError):
+                    self.core.bump(errors=1)
+                    if isinstance(err, RequestError):
                         msg, extra = str(err), err.extra
                     else:
                         msg, extra = f"{type(err).__name__}: {err}", None
@@ -333,180 +680,42 @@ class CompressionServer:
             return False
 
     # ------------------------------------------------------------- dispatch
-    def _dispatch(self, verb: int, header: dict, body: P.BlockReader, w) -> None:
-        if verb == P.VERB_PING:
-            body.drain()
-            P.write_response(w, P.STATUS_OK, self._ping_header())
-        elif verb == P.VERB_STATS:
-            body.drain()
-            P.write_response(w, P.STATUS_OK, self.stats())
-        elif verb == P.VERB_COMPRESS:
-            self._do_compress(header, body, w)
-        elif verb == P.VERB_DECOMPRESS:
-            self._do_decompress(header, body, w)
-        else:  # unreachable: read_request validated the verb
-            raise P.ProtocolError(f"unknown verb {verb}")
-
-    def _ping_header(self) -> dict:
-        return {
-            "ok": True,
-            "protocol_version": P.PROTOCOL_VERSION,
-            "plans": len(self.registry),
-            "uptime_s": round(time.monotonic() - self._started, 3),
-        }
-
-    def _spool(self):
-        return _Spool(max_size=self.spool_bytes)
-
-    def _body_budget(self, body: P.BlockReader) -> Optional[int]:
-        """Narrow the body budget to the declared size -> that size (if any).
-
-        ``_handle_conn`` already installed ``max_body_bytes`` as the hard
-        ceiling; the client's declared ``size`` may only *narrow* it, never
-        widen it — a hostile ``size=2**60`` is rejected up front (and the
-        reject path's ``drain()`` stays bounded by the ceiling).
-        """
-        declared = body.size_hint
-        if declared is not None:
-            if declared > self.max_body_bytes:
-                raise ValueError(
-                    f"declared size {declared} exceeds the server's"
-                    f" per-request limit of {self.max_body_bytes} bytes"
+    def _dispatch(
+        self, verb: int, header: dict, body: P.BlockReader, w, conn_key: str
+    ) -> None:
+        if self.rate_limiter is not None and verb in (
+            P.VERB_COMPRESS, P.VERB_DECOMPRESS,
+        ):
+            ok, retry_after = self.rate_limiter.check(conn_key)
+            if not ok:
+                self.core.bump(verb=P.VERBS[verb], rate_limited=1)
+                raise RequestError(
+                    "rate limit exceeded for this client",
+                    error_kind="rate_limited",
+                    retry_after=round(max(retry_after, 0.001), 3),
                 )
-            # cut a lying sender off at the first over-budget block — before
-            # its body is buffered — on the bare-frame path too (which reads
-            # the whole payload at once)
-            body.limit = declared
-        return declared
-
-    def _do_compress(self, header: dict, body: P.BlockReader, w) -> None:
-        key = header.get("plan")
-        if not key or not isinstance(key, str):
-            raise ValueError("compress request needs a 'plan' header")
-        entry = self.registry.resolve(key)
-        chunk_bytes = header.get("chunk_bytes")
-        if chunk_bytes is None:
-            chunk_bytes = DEFAULT_CHUNK_BYTES
-        chunk_bytes = int(chunk_bytes)
-        if chunk_bytes < 0 or chunk_bytes > MAX_CHUNK_BYTES:
-            raise ValueError(f"bad chunk_bytes {chunk_bytes}")
-        declared = self._body_budget(body)
-        remaining = self.quarantine.blocked(entry.digest)
-        if remaining is not None:
-            raise _RequestError(
-                f"plan {key!r} is quarantined after repeated failures",
-                error_kind="plan_quarantined",
-                retry_after=round(remaining, 3),
-            )
-        pool_key = self._session_key(entry)
-        admission = (
-            self.request_timeout
-            if self.admission_timeout is None
-            else self.admission_timeout
-        )
-        with self._spool() as out:
-            try:
-                with self.pool.acquire(pool_key, timeout=admission) as sess:
-                    stats = stream_io.compress_file(
-                        body,
-                        out,
-                        entry.compressor.plan,
-                        chunk_bytes=chunk_bytes or None,
-                        session=sess,
-                    )
-            except TimeoutError:
-                # every pooled session busy past the admission deadline: shed
-                # with a structured signal instead of tying up the worker (or,
-                # with shedding disabled, keep the historical generic error)
-                if self.admission_timeout is None:
-                    raise
-                self._bump(shed=1)
-                raise _RequestError(
-                    f"server overloaded: no free session for plan {key!r}"
-                    f" within {admission:.3g}s",
-                    error_kind="overloaded",
-                    retry_after=round(max(admission, 0.05), 3),
-                ) from None
-            except (P.ProtocolError, OSError, socket.timeout):
-                raise  # transport trouble, not the plan's fault
-            except Exception:
-                # the session died mid-request: charge the plan digest so a
-                # poisoned plan trips its breaker instead of burning through
-                # fresh pool sessions forever
-                self.quarantine.record_failure(entry.digest)
-                raise
-            self.quarantine.record_success(entry.digest)
-            # fail closed on size lies: compare the bytes that actually
-            # arrived (not stats["bytes_in"], which on the known-size chunked
-            # path *is* the declared value) against the declaration — a short
-            # body must never be silently compressed as if complete
-            body.drain()
-            if declared is not None and body.bytes_read != declared:
-                raise ValueError(
-                    f"request declared size={declared} but sent"
-                    f" {body.bytes_read} bytes"
+        resp_header, out = self.core.handle(verb, header, body)
+        try:
+            if out is None:
+                P.write_response(w, P.STATUS_OK, resp_header)
+            else:
+                P.write_response(
+                    w, P.STATUS_OK, resp_header, P.iter_body_blocks(out)
                 )
-            self._bump(
-                bytes_in=stats["bytes_in"], bytes_out=stats["bytes_out"]
-            )
-            out.seek(0)
-            P.write_response(
-                w,
-                P.STATUS_OK,
-                {
-                    **stats,
-                    "plan_id": entry.plan_id,
-                    "digest": entry.digest,
-                    "size": stats["bytes_out"],
-                },
-                P.iter_body_blocks(out),
-            )
-
-    def _do_decompress(self, header: dict, body: P.BlockReader, w) -> None:
-        self._body_budget(body)
-        with self._spool() as out:
-            stats = stream_io.decompress_file(body, out, session=self._decoder)
-            if body.drain():
-                raise wire.FrameError("trailing garbage after frame")
-            self._bump(bytes_in=stats["bytes_in"], bytes_out=stats["bytes_out"])
-            out.seek(0)
-            P.write_response(
-                w,
-                P.STATUS_OK,
-                {**stats, "size": stats["bytes_out"]},
-                P.iter_body_blocks(out),
-            )
+        finally:
+            if out is not None:
+                out.close()
 
     # ----------------------------------------------------------------- stats
     def stats(self) -> dict:
         with self._stats_lock:
-            counters = {
-                "connections": self._stats["connections"],
-                "active_connections": self._stats["active_connections"],
-                "errors": self._stats["errors"],
-                "shed": self._stats["shed"],
-                "requests": dict(self._stats["requests"]),
-                "bytes_in": self._stats["bytes_in"],
-                "bytes_out": self._stats["bytes_out"],
-            }
-        from repro.core.engine import resolve_cache_info
-
-        return {
-            **self._ping_header(),
+            conn_counters = dict(self._stats)
+        st = {
+            **self.core.stats(),
             "address": self.address,
             "max_clients": self.max_clients,
-            **counters,
-            "registry": self.registry.entries(),
-            "sessions": self.pool.stats(),
-            "decoder": dict(self._decoder.stats),
-            # cache effectiveness: a cold resolve or coder-table rebuild per
-            # request is exactly the kind of throughput cliff the blocked hot
-            # paths exist to prevent — surface the counters so regressions
-            # are observable in production
-            "resolve_cache": resolve_cache_info(),
-            "coder_cache": self._scratch.table_cache_info(),
-            # degradation state: which device backends are benched, which plan
-            # digests tripped their breaker, and how many requests were shed
-            "backend_health": self.backend_health.stats(),
-            "quarantine": self.quarantine.stats(),
+            **conn_counters,
         }
+        if self.rate_limiter is not None:
+            st["rate_limiter"] = self.rate_limiter.stats()
+        return st
