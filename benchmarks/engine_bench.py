@@ -10,10 +10,14 @@ Rows (CSV, appended to benchmarks/run.py output):
                                 derived shows the speedup vs host_single
                                 (acceptance floor: >= 1.5x on >= 32 MiB)
 
-``--codecs`` additionally benchmarks the lz77/huffman/fse hot paths on two
+``--codecs`` additionally benchmarks the lz77/huffman/fse hot paths on three
 canonical corpora — "text" (zipfian prose, 2^17-word vocabulary, exponent
-1.05: natural-language-like statistics) and "log" (structured log lines,
-OpenZL's home turf) — at 1 MiB and 16 MiB, encode and decode.  ``--json``
+1.05: natural-language-like statistics), "log" (structured log lines,
+OpenZL's home turf) and "graph" (SNAP-style tab-separated edge list,
+power-law degrees) — at 1 MiB and 16 MiB, encode and decode, then runs the
+profile shoot-out on the graph corpus: ``graph:`` vs the generic ``text`` /
+``numeric`` / ``generic`` profiles, ratio and MiB/s, with a hard floor that
+the structure-aware ``graph:`` profile wins on ratio.  ``--json``
 writes the results to ``results/BENCH_codecs.json``; when
 ``results/BENCH_codecs_baseline.json`` (the pre-vectorization measurements,
 same generators, same host) is present, per-row speedups are recorded so the
@@ -119,6 +123,30 @@ def synth_log(nbytes: int, seed: int = 0) -> bytes:
     return b"".join(lines)[:nbytes]
 
 
+def synth_edges(nbytes: int, seed: int = 0) -> bytes:
+    """SNAP-style text edge list: ``# comment`` header then sorted ``u\\tv``
+    lines, power-law target popularity (hub nodes shared across adjacency
+    lists — the overlap Zuckerli-style reference coding exploits)."""
+    rng = np.random.default_rng(seed)
+    n_edges = nbytes // 8 + 64
+    while True:  # dedup + short ids shrink the text: grow until it covers
+        n_nodes = max(n_edges // 16, 64)
+        w = 1.0 / np.arange(1, n_nodes + 1) ** 1.1
+        w /= w.sum()
+        dst = rng.choice(n_nodes, size=n_edges, p=w).astype(np.uint64)
+        src = np.sort(rng.integers(0, n_nodes, n_edges)).astype(np.uint64)
+        pairs = np.unique(np.stack([src, dst], axis=1), axis=0)
+        head = (
+            b"# SNAP-style synthetic graph  Nodes: %d  Edges: %d\n"
+            b"# FromNodeId\tToNodeId\n" % (n_nodes, len(pairs))
+        )
+        body = b"\n".join(b"%d\t%d" % (u, v) for u, v in pairs)
+        raw = head + body + b"\n"
+        if len(raw) >= nbytes:
+            return raw[:nbytes]
+        n_edges += n_edges // 2
+
+
 def run_codecs(sizes_mib=(1, 16, 64), emit_json=False, print_rows=True):
     """Benchmark the lz77/huffman/fse hot paths; optionally write JSON.
 
@@ -139,7 +167,11 @@ def run_codecs(sizes_mib=(1, 16, 64), emit_json=False, print_rows=True):
 
     results = {}
     rows = []
-    for flavor, gen in [("text", synth_text), ("log", synth_log)]:
+    for flavor, gen in [
+        ("text", synth_text),
+        ("log", synth_log),
+        ("graph", synth_edges),
+    ]:
         for mib in sizes_mib:
             data = gen(int(mib * MIB))
             s = serial(data)
@@ -197,9 +229,51 @@ def run_codecs(sizes_mib=(1, 16, 64), emit_json=False, print_rows=True):
                 rows.append(
                     f"codecs/{key},{min(te)*1e6:.1f},{derived};{stages_flat}"
                 )
+
+    # ---- profile shoot-out on the graph corpus: graph: vs generic profiles.
+    # End-to-end plans (selectors included), resolve cache bypassed so each
+    # profile's choices are made on *this* data.  The structure-aware graph:
+    # profile must beat the generic text/numeric profiles on ratio — that is
+    # the acceptance floor for shipping an edge-list frontend at all.
+    from repro.codecs.profiles import resolve_profile_spec
+
+    for mib in [m for m in sizes_mib if m <= 4] or [min(sizes_mib)]:
+        data = synth_edges(int(mib * MIB))
+        s = serial(data)
+        ratios = {}
+        for prof in ("graph", "text", "numeric", "generic"):
+            plan = resolve_profile_spec(prof)
+            reps = 3 if mib <= 1 else 1
+            te, td = [], []
+            frame = b""
+            for _ in range(reps):
+                coder_cache_clear()
+                t0 = time.perf_counter()
+                frame = compress(plan, [s], use_resolve_cache=False)
+                te.append(time.perf_counter() - t0)
+                coder_cache_clear()
+                t0 = time.perf_counter()
+                back = decompress(frame)
+                td.append(time.perf_counter() - t0)
+            assert back[0].content_bytes() == data, f"profile {prof} roundtrip"
+            ratios[prof] = len(data) / len(frame)
+            key = f"profile_{prof}/graph/{mib}MiB"
+            entry = {
+                "ratio": round(ratios[prof], 3),
+                "encode_mib_s": round(mib / min(te), 3),
+                "decode_mib_s": round(mib / min(td), 3),
+            }
+            results[key] = entry
+            derived = ";".join(f"{k}={v}" for k, v in entry.items())
+            rows.append(f"codecs/{key},{min(te)*1e6:.1f},{derived}")
+        assert ratios["graph"] > ratios["text"] and ratios["graph"] > ratios["numeric"], (
+            f"graph profile must beat generic text/numeric on the edge-list"
+            f" corpus, got {ratios}"
+        )
+
     if emit_json:
         payload = {
-            "schema": "BENCH_codecs/v2",  # v2: per-stage breakdowns + 64 MiB
+            "schema": "BENCH_codecs/v3",  # v3: graph corpus + profile rows
             "host_cpus": os.cpu_count(),
             "usable_cpus": len(os.sched_getaffinity(0)),
             "sizes_mib": list(sizes_mib),

@@ -239,6 +239,7 @@ def _parse_frontend(spec: str, first_sample: bytes):
     from repro.training import (
         CsvFrontend,
         Frontend,
+        GraphFrontend,
         NumericFrontend,
         StructFrontend,
         detect_frontend,
@@ -270,9 +271,27 @@ def _parse_frontend(spec: str, first_sample: bytes):
         if width not in (1, 2, 4, 8):
             raise SystemExit(f"--frontend {spec!r}: width must be 1/2/4/8")
         return NumericFrontend(width=width)
+    if spec == "graph" or spec.startswith("graph:"):
+        parts = spec.split(":")
+        if len(parts) > 1 and parts[1] == "bin":
+            try:
+                width = int(parts[2]) if len(parts) > 2 and parts[2] else 4
+            except ValueError:
+                raise SystemExit(f"--frontend {spec!r}: bad pair width") from None
+            if width not in (2, 4, 8) or len(parts) > 3:
+                raise SystemExit(
+                    f"--frontend {spec!r}: expected graph:bin:W with W in 2/4/8"
+                )
+            return GraphFrontend(binary_width=width)
+        sep = ":".join(parts[1:]) if len(parts) > 1 else "auto"
+        if not sep or "\n" in sep or "\r" in sep:
+            raise SystemExit(
+                f"--frontend {spec!r}: separator must be non-empty, newline-free"
+            )
+        return GraphFrontend(sep=sep)
     raise SystemExit(
         f"unknown frontend {spec!r}; known: auto, raw, csv[:N[:sep]],"
-        f" struct:W1,W2,.., numeric[:W]"
+        f" struct:W1,W2,.., numeric[:W], graph[:sep], graph:bin[:W]"
     )
 
 
@@ -287,6 +306,12 @@ def _trim_sample(frontend, blob: bytes) -> bytes:
     if name == "struct":
         rec = sum(frontend.widths) or 1
         return blob[: len(blob) - len(blob) % rec]
+    if name == "graph":
+        if frontend.binary_width:
+            pair = 2 * frontend.binary_width
+            return blob[: len(blob) - len(blob) % pair]
+        cut = blob.rfind(b"\n")
+        return blob[: cut + 1] if cut >= 0 else blob
     return blob
 
 
@@ -298,6 +323,10 @@ def _frontend_desc(frontend) -> str:
         return f"numeric (width {frontend.width})"
     if name == "struct":
         return f"struct (record {sum(frontend.widths)}B, {len(frontend.widths)} fields)"
+    if name == "graph":
+        if frontend.binary_width:
+            return f"graph (binary pairs, width {frontend.binary_width})"
+        return f"graph (edge list, sep {frontend.sep!r})"
     return name
 
 
@@ -379,7 +408,8 @@ def _cmd_profiles(_args) -> int:
     for name, (_fn, doc) in sorted(named_profiles().items()):
         print(f"{name:<12} {doc}")
     print("struct:W1,..  Generic record format: field_split + per-field auto backend.")
-    print("csv:N         CSV frontend + per-column parse_numeric + auto backends.")
+    print("csv:N[:sep]   CSV frontend + per-column parse_numeric + auto backends.")
+    print("graph:bin:W   Binary edge-list frontend: interleaved width-W (u, v) pairs.")
     return 0
 
 
@@ -560,7 +590,7 @@ def build_parser() -> argparse.ArgumentParser:
     c.add_argument("-o", "--output", default=None, help="default: INPUT.ozl")
     g = c.add_mutually_exclusive_group()
     g.add_argument("--profile", default="generic", help="named profile (see"
-                   " `profiles`), struct:W1,W2,.. or csv:N")
+                   " `profiles`), struct:W1,W2,.., csv:N[:sep] or graph[:bin:W]")
     g.add_argument("--plan", default=None, help="serialized trained plan (.ozp)")
     c.add_argument("--chunk-bytes", default="4MiB", help="chunk size for the"
                    " streaming container; 0 = single frame (default 4MiB)")
@@ -605,8 +635,9 @@ def build_parser() -> argparse.ArgumentParser:
     t.add_argument("--out", default=None,
                    help="output plan path (default: FIRST_SAMPLE.ozp)")
     t.add_argument("--frontend", default="auto",
-                   help="auto (sniff csv/struct/numeric/raw), raw,"
-                   " csv[:N[:sep]], struct:W1,W2,.., numeric[:W]")
+                   help="auto (sniff graph/csv/struct/numeric/raw), raw,"
+                   " csv[:N[:sep]], struct:W1,W2,.., numeric[:W],"
+                   " graph[:sep], graph:bin[:W]")
     t.add_argument("--pop", type=int, default=16, help="NSGA-II population")
     t.add_argument("--gens", type=int, default=6, help="NSGA-II generations")
     t.add_argument("--points", type=int, default=8,

@@ -9,6 +9,7 @@ Codec id map (never reuse):
   16 lz77        17 zlib_backend 18 float_split 19 parse_numeric
   20 csv_split   21 string_split 22 transpose_split 23 interpret_numeric
   24 lzma_backend  25 bz2_backend 26 fused_delta_bitpack (v4)
+  27 edge_list (v4)  28 adj_gap (v4)  29 edge_list_bin (v4)
 """
 from . import coder_cache  # noqa: F401
 from . import basic  # noqa: F401
@@ -20,6 +21,7 @@ from . import lz  # noqa: F401
 from . import floats  # noqa: F401
 from . import parse  # noqa: F401
 from . import selectors  # noqa: F401
+from . import graph  # noqa: F401
 from . import profiles  # noqa: F401
 
 from .coder_cache import (  # noqa: F401
@@ -32,6 +34,8 @@ from .profiles import (  # noqa: F401
     float32_profile,
     float64_profile,
     generic_profile,
+    graph_bin_profile,
+    graph_profile,
     numeric_profile,
     sao_profile,
     struct_profile,

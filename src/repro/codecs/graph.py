@@ -1,0 +1,500 @@
+"""Graph-structured data codecs — the ``graph:`` profile family's node set.
+
+Adjacency lists compress dramatically better under degree + delta-gap +
+reference coding than under generic LZ (Zuckerli, arXiv:2009.01353; the
+Besta/Hoefler survey, arXiv:1806.01799, catalogs the structural redundancies
+these codecs exploit).  Three ordinary codecs plus one selector:
+
+``edge_list``      — text edge lists (SNAP style: ``u<sep>v`` lines, ``#``
+                     comments) -> (src, dst, bitmap, exception-lines).  Like
+                     ``parse_numeric``, losslessness beats coverage: any line
+                     that is not two canonical decimal i64s stays a byte-exact
+                     exception string, so *every* input round-trips.
+``edge_list_bin``  — the binary variant: interleaved fixed-width (u, v)
+                     pairs -> (src, dst).  After ``adj_gap`` this is the CSR
+                     view (degrees + neighbors) of the same graph.
+``adj_gap``        — (src, dst) edge columns -> (nodes, degrees, refs,
+                     copy-bits, gaps): run-length groups the src column into
+                     per-node adjacency lists, gap-codes each list (first
+                     neighbor relative to the source node, then neighbor-to-
+                     neighbor deltas, zigzagged so unsorted lists stay
+                     lossless), and optionally encodes a list as a *diff
+                     against a similar earlier list* — Zuckerli's
+                     reference/copy trick — when a byte-cost model says that
+                     is cheaper.
+``adjacency_auto`` — the selector that decides, by trial compression on a
+                     bounded sample, whether the reference window pays for
+                     this graph (vs plain gap coding vs raw columns).
+
+Everything decode needs lives in the per-node headers and output streams, so
+the universal decoder stays parameter-free (paper §III-D).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.codec import CodecSpec, register_codec
+from repro.core.engine import CompressionCtx, compress
+from repro.core.graph import GraphBuilder, Plan
+from repro.core.message import Stream, SType, strings as mk_strings
+from repro.core.selector import SelectorSpec, register_selector
+
+from ._util import UNSIGNED, HeaderReader, HeaderWriter, numeric_stream
+from .parse import _canonical_int
+
+EDGE_SEPS = (b"\t", b" ", b",", b";")  # auto-sniff candidates, most-SNAP first
+
+_U64_ONE = np.uint64(1)
+_U64_SEVEN = np.uint64(7)
+
+
+# ------------------------------------------------------------------ helpers
+def _zigzag_u64(duw: np.ndarray) -> np.ndarray:
+    """Zigzag the wrapped u64 difference (two's-complement representative)."""
+    x = duw.view(np.int64)
+    return (duw << _U64_ONE) ^ (x >> np.int64(63)).view(np.uint64)
+
+
+def _unzigzag_u64(zz: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`_zigzag_u64` — signed delta as wrapped u64."""
+    return (zz >> _U64_ONE) ^ (np.zeros_like(zz) - (zz & _U64_ONE))
+
+
+def _varint_lens(zz: np.ndarray) -> np.ndarray:
+    """Byte cost of each value under 7-bit varint coding (the cost model)."""
+    nb = np.ones(zz.shape, np.int64)
+    v = zz >> _U64_SEVEN
+    while v.any():
+        nb += v != 0
+        v = v >> _U64_SEVEN
+    return nb
+
+
+def _gap_code(vals: np.ndarray, base: np.uint64) -> np.ndarray:
+    """Gap-code a list: first element relative to ``base``, then deltas."""
+    prev = np.empty_like(vals)
+    if vals.size:
+        prev[0] = base
+        prev[1:] = vals[:-1]
+    return _zigzag_u64(vals - prev)
+
+
+def _gap_decode(zz: np.ndarray, base: np.uint64) -> np.ndarray:
+    d = _unzigzag_u64(zz)
+    with np.errstate(over="ignore"):
+        if d.size:
+            d[0] += base
+        return np.cumsum(d, dtype=np.uint64)
+
+
+# ----------------------------------------------------------------- edge_list
+def _edge_list_enc(streams, params):
+    s = streams[0]
+    if s.stype != SType.SERIAL:
+        raise ValueError("edge_list wants serial bytes")
+    sep = params.get("sep", "auto")
+    raw = s.data.tobytes()
+    trailing_nl = raw.endswith(b"\n")
+    body = raw[:-1] if trailing_nl else raw
+    lines = body.split(b"\n") if body else []
+
+    def parse_with(sep_b: bytes):
+        src: List[int] = []
+        dst: List[int] = []
+        ok = np.zeros(len(lines), dtype=np.uint8)
+        exceptions: List[bytes] = []
+        for i, ln in enumerate(lines):
+            parts = ln.split(sep_b)
+            if len(parts) == 2:
+                u = _canonical_int(parts[0])
+                v = _canonical_int(parts[1])
+                if u is not None and v is not None:
+                    ok[i] = 1
+                    src.append(u)
+                    dst.append(v)
+                    continue
+            exceptions.append(ln)
+        return src, dst, ok, exceptions
+
+    if sep == "auto":
+        sep_b, parsed = EDGE_SEPS[0], None
+        for cand in EDGE_SEPS:
+            got = parse_with(cand)
+            if parsed is None or len(got[0]) > len(parsed[0]):
+                sep_b, parsed = cand, got
+    else:
+        sep_b = sep.encode() if isinstance(sep, str) else bytes(sep)
+        if not sep_b:
+            raise ValueError("edge_list: separator must be non-empty")
+        if b"\n" in sep_b:
+            raise ValueError("edge_list: separator cannot contain newlines")
+        parsed = parse_with(sep_b)
+    src, dst, ok, exceptions = parsed
+    h = (
+        HeaderWriter()
+        .varint(len(lines))
+        .u8(1 if trailing_nl else 0)
+        .bytes_(sep_b)
+        .done()
+    )
+    bitmap = np.packbits(ok) if len(lines) else np.zeros(0, np.uint8)
+    return [
+        numeric_stream(np.asarray(src, dtype=np.int64).view(np.uint64)),
+        numeric_stream(np.asarray(dst, dtype=np.int64).view(np.uint64)),
+        Stream(bitmap, SType.SERIAL, 1),
+        mk_strings(exceptions),
+    ], h
+
+
+def _edge_list_dec(outs, header):
+    src_s, dst_s, bitmap_s, exc_s = outs
+    r = HeaderReader(header)
+    n_lines = r.varint()
+    trailing_nl = r.u8()
+    sep_b = r.bytes_()
+    r.expect_end()
+    is_edge = np.unpackbits(bitmap_s.data)[:n_lines].astype(bool)
+    src = src_s.data.view(np.int64)
+    dst = dst_s.data.view(np.int64)
+    exceptions = exc_s.to_strings()
+    if int(is_edge.sum()) != src.size or src.size != dst.size:
+        raise ValueError("edge_list: corrupt bitmap/columns")
+    lines: List[bytes] = []
+    ei = xi = 0
+    for i in range(n_lines):
+        if is_edge[i]:
+            lines.append(b"%d%s%d" % (int(src[ei]), sep_b, int(dst[ei])))
+            ei += 1
+        else:
+            lines.append(exceptions[xi])
+            xi += 1
+    raw = b"\n".join(lines) + (b"\n" if trailing_nl else b"")
+    return [Stream(np.frombuffer(raw, dtype=np.uint8), SType.SERIAL, 1)]
+
+
+register_codec(
+    CodecSpec(
+        "edge_list",
+        codec_id=27,
+        encode=_edge_list_enc,
+        decode=_edge_list_dec,
+        n_outputs=4,
+        min_version=4,
+        doc="text edge list -> (src, dst, bitmap, exceptions); lossless always",
+    )
+)
+
+
+# ------------------------------------------------------------- edge_list_bin
+def _edge_list_bin_enc(streams, params):
+    s = streams[0]
+    if s.stype != SType.SERIAL:
+        raise ValueError("edge_list_bin wants serial bytes")
+    w = int(params.get("width", 4))
+    if w not in (2, 4, 8):
+        raise ValueError("edge_list_bin: width must be 2/4/8")
+    if s.data.size % (2 * w):
+        raise ValueError(
+            f"edge_list_bin: {s.data.size} bytes is not (u, v) pairs of width {w}"
+        )
+    pairs = np.frombuffer(s.data.tobytes(), dtype=UNSIGNED[w]).reshape(-1, 2)
+    return [
+        numeric_stream(np.ascontiguousarray(pairs[:, 0])),
+        numeric_stream(np.ascontiguousarray(pairs[:, 1])),
+    ], b""
+
+
+def _edge_list_bin_dec(outs, header):
+    src_s, dst_s = outs
+    if src_s.width != dst_s.width or src_s.n_elts != dst_s.n_elts:
+        raise ValueError("edge_list_bin: corrupt columns")
+    pairs = np.empty((src_s.n_elts, 2), dtype=UNSIGNED[src_s.width])
+    pairs[:, 0] = src_s.data.view(UNSIGNED[src_s.width])
+    pairs[:, 1] = dst_s.data.view(UNSIGNED[dst_s.width])
+    return [Stream(np.frombuffer(pairs.tobytes(), dtype=np.uint8), SType.SERIAL, 1)]
+
+
+register_codec(
+    CodecSpec(
+        "edge_list_bin",
+        codec_id=29,
+        encode=_edge_list_bin_enc,
+        decode=_edge_list_bin_dec,
+        n_outputs=2,
+        min_version=4,
+        doc="interleaved fixed-width (u, v) pairs -> (src, dst) columns",
+    )
+)
+
+
+# -------------------------------------------------------------------- adj_gap
+def _adj_runs(src: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Run-length group the src column -> (run_starts, nodes, degrees)."""
+    n = src.size
+    if not n:
+        e = np.zeros(0, np.int64)
+        return e, np.zeros(0, np.uint64), np.zeros(0, np.uint64)
+    new_run = np.empty(n, bool)
+    new_run[0] = True
+    np.not_equal(src[1:], src[:-1], out=new_run[1:])
+    run_starts = np.flatnonzero(new_run)
+    degrees = np.diff(np.append(run_starts, n)).astype(np.uint64)
+    return run_starts, src[run_starts].copy(), degrees
+
+
+def _adj_gap_enc(streams, params):
+    s_src, s_dst = streams
+    for s in (s_src, s_dst):
+        if s.stype != SType.NUMERIC:
+            raise ValueError("adj_gap wants numeric (src, dst) streams")
+    if s_src.width != s_dst.width or s_src.n_elts != s_dst.n_elts:
+        raise ValueError("adj_gap: src/dst width or length mismatch")
+    window = int(params.get("window", 0))
+    if window < 0:
+        raise ValueError("adj_gap: window must be >= 0")
+    w = s_src.width
+    src = s_src.data.view(UNSIGNED[w]).astype(np.uint64)
+    dst = s_dst.data.view(UNSIGNED[w]).astype(np.uint64)
+    run_starts, nodes, degrees = _adj_runs(src)
+    n = src.size
+    n_runs = nodes.size
+
+    # plain per-edge gaps, fully vectorized (valid for every run)
+    prev = np.empty_like(dst)
+    if n:
+        prev[0] = src[0]
+        prev[1:] = dst[:-1]
+        prev[run_starts] = src[run_starts]
+    plain_zz = _zigzag_u64(dst - prev)
+
+    refs = np.zeros(n_runs, np.uint64)
+    if window == 0 or n_runs == 0:
+        gaps = plain_zz
+        copybits = np.zeros(0, np.uint8)
+    else:
+        # which runs are strictly increasing (reference coding is only
+        # reversible over sorted, duplicate-free lists — Zuckerli's domain)
+        inc = np.empty(n, bool)
+        inc[run_starts] = True
+        if n > 1:
+            rest = np.ones(n, bool)
+            rest[run_starts] = False
+            inc[rest] = dst[1:][rest[1:]] > dst[:-1][rest[1:]]
+        run_inc = np.logical_and.reduceat(inc, run_starts)
+        plain_cost = np.add.reduceat(_varint_lens(plain_zz), run_starts)
+
+        lists = [dst[s : s + int(d)] for s, d in zip(run_starts, degrees)]
+        degs_l = degrees.tolist()
+        starts_l = run_starts.tolist()
+        inc_l = run_inc.tolist()
+        pcost_l = plain_cost.tolist()
+        nodes_l = nodes.tolist()
+        gap_chunks: List[np.ndarray] = []
+        copy_chunks: List[np.ndarray] = []
+        for i in range(n_runs):
+            d_i = degs_l[i]
+            best = None  # (cost, ref_off, copy_mask, residual_zz)
+            if inc_l[i] and d_i >= 3 and pcost_l[i] > 4:
+                L_i = lists[i]
+                best_cost = pcost_l[i]  # hurdle: must beat plain gaps
+                for r in range(1, min(window, i) + 1):
+                    j = i - r
+                    if not inc_l[j]:
+                        continue
+                    L_j = lists[j]
+                    if not L_j.size or L_j.size > 4 * d_i:
+                        continue  # the copy bitmap alone would dominate
+                    # both lists are sorted + duplicate-free, so membership is
+                    # a binary search, not np.isin's sort-merge
+                    pos = np.minimum(np.searchsorted(L_i, L_j), d_i - 1)
+                    copied = L_i[pos] == L_j
+                    n_res = d_i - int(copied.sum())
+                    # each residual gap is >= 1 varint byte: cheap lower bound
+                    # prunes the exact gap-coding cost for hopeless candidates
+                    lb = 1 + (L_j.size + 7) // 8 + n_res
+                    if lb >= best_cost:
+                        continue
+                    keep = np.ones(d_i, bool)
+                    keep[pos[copied]] = False  # matched L_i slots, lists unique
+                    resid = L_i[keep]
+                    zz_r = _gap_code(resid, nodes_l[i])
+                    cost = 1 + (L_j.size + 7) // 8 + int(_varint_lens(zz_r).sum())
+                    if cost < best_cost:
+                        best_cost = cost
+                        best = (cost, r, copied, zz_r)
+            if best is None:
+                st = starts_l[i]
+                gap_chunks.append(plain_zz[st : st + d_i])
+            else:
+                refs[i] = best[1]
+                copy_chunks.append(best[2])
+                gap_chunks.append(best[3])
+        gaps = (
+            np.concatenate(gap_chunks) if gap_chunks else np.zeros(0, np.uint64)
+        )
+        copybits = (
+            np.packbits(np.concatenate(copy_chunks))
+            if copy_chunks
+            else np.zeros(0, np.uint8)
+        )
+    h = HeaderWriter().u8(w).done()
+    return [
+        numeric_stream(nodes),
+        numeric_stream(degrees),
+        numeric_stream(refs),
+        Stream(copybits, SType.SERIAL, 1),
+        numeric_stream(gaps),
+    ], h
+
+
+def _adj_gap_dec(outs, header):
+    nodes_s, degs_s, refs_s, bits_s, gaps_s = outs
+    r = HeaderReader(header)
+    w = r.u8()
+    r.expect_end()
+    if w not in UNSIGNED:
+        raise ValueError("adj_gap: bad width")
+    nodes = nodes_s.data.view(np.uint64)
+    degrees = degs_s.data.view(np.uint64)
+    refs = refs_s.data.view(np.uint64)
+    bits = np.unpackbits(bits_s.data)
+    gaps = gaps_s.data.view(np.uint64)
+    if not (nodes.size == degrees.size == refs.size):
+        raise ValueError("adj_gap: corrupt run streams")
+    # one global unzigzag + prefix sum; a run's gap-decode is then just
+    # P[a:b] - P[a-1] + base under wrapping u64 arithmetic (identical to
+    # per-run _gap_decode, without 2 numpy passes per adjacency list)
+    deltas = _unzigzag_u64(gaps)
+    with np.errstate(over="ignore"):
+        prefix = np.cumsum(deltas, dtype=np.uint64)
+    nodes_l = nodes.tolist()
+
+    def _seg_decode(a: int, b: int, base: int) -> np.ndarray:
+        with np.errstate(over="ignore"):
+            off = np.uint64(base) - (prefix[a - 1] if a else np.uint64(0))
+            return prefix[a:b] + off
+
+    lists: List[np.ndarray] = []
+    gpos = bpos = 0
+    for i in range(nodes.size):
+        d_i = int(degrees[i])
+        ref = int(refs[i])
+        if ref == 0:
+            if gpos + d_i > gaps.size:
+                raise ValueError("adj_gap: gap stream exhausted")
+            L = _seg_decode(gpos, gpos + d_i, nodes_l[i])
+            gpos += d_i
+        else:
+            if ref > i:
+                raise ValueError("adj_gap: reference before first run")
+            L_j = lists[i - ref]
+            if bpos + L_j.size > bits.size:
+                raise ValueError("adj_gap: copy-bit stream exhausted")
+            copied = L_j[bits[bpos : bpos + L_j.size].astype(bool)]
+            bpos += L_j.size
+            n_res = d_i - copied.size
+            if n_res < 0 or gpos + n_res > gaps.size:
+                raise ValueError("adj_gap: corrupt reference run")
+            resid = _seg_decode(gpos, gpos + n_res, nodes_l[i])
+            gpos += n_res
+            # copied and residuals are disjoint increasing subsequences of a
+            # strictly increasing list: their sorted union is the list
+            L = np.sort(np.concatenate([copied, resid]))
+        lists.append(L)
+    if gpos != gaps.size:
+        raise ValueError("adj_gap: trailing gap values")
+    with np.errstate(over="ignore"):
+        src = np.repeat(nodes, degrees.astype(np.int64))
+        dst = (
+            np.concatenate(lists) if lists else np.zeros(0, np.uint64)
+        )
+    U = UNSIGNED[w]
+    return [
+        numeric_stream(src.astype(U)),
+        numeric_stream(dst.astype(U)),
+    ]
+
+
+register_codec(
+    CodecSpec(
+        "adj_gap",
+        codec_id=28,
+        encode=_adj_gap_enc,
+        decode=_adj_gap_dec,
+        n_inputs=2,
+        n_outputs=5,
+        min_version=4,
+        doc="edge columns -> degree + delta-gap + reference coding (Zuckerli)",
+    )
+)
+
+
+# ------------------------------------------------------------ adjacency_auto
+ADJ_SAMPLE_EDGES = 1 << 13  # trial compressions run on a bounded edge prefix
+
+
+def adj_backend(window: int) -> Plan:
+    """The adjacency backend graph: adj_gap + per-stream auto selectors."""
+    g = GraphBuilder(2)
+    nodes, degs, refs, bits, gaps = g.add(
+        "adj_gap", g.input(0), g.input(1), window=window
+    )
+    g.select("numeric_auto", nodes)
+    g.select("numeric_auto", degs)
+    g.select("numeric_auto", refs)
+    g.select("entropy_auto", bits)
+    g.select("numeric_auto", gaps)
+    return g.build(f"adj_gap_w{window}")
+
+
+def _columns_backend() -> Plan:
+    g = GraphBuilder(2)
+    g.select("numeric_auto", g.input(0))
+    g.select("numeric_auto", g.input(1))
+    return g.build("edge_columns")
+
+
+def _adjacency_auto(streams, params, ctx):
+    """Pick plain gap coding, reference coding, or raw columns by trial.
+
+    The reference/copy-list trick only pays on graphs whose neighborhoods
+    repeat (webs, social graphs); on near-random graphs the copy bitmaps are
+    pure overhead, and on unsorted edge dumps run grouping itself buys
+    nothing.  A bounded aligned sample of the (src, dst) columns is
+    compressed under each candidate and the smallest wins — the frame only
+    ever records the chosen codecs.
+    """
+    window = int(params.get("window", 8))
+    s_src, s_dst = streams
+    k = min(s_src.n_elts, ADJ_SAMPLE_EDGES)
+    samples = [
+        Stream(s.data[:k], SType.NUMERIC, s.width) for s in (s_src, s_dst)
+    ]
+    candidates = [("columns", _columns_backend()), ("plain", adj_backend(0))]
+    if window > 0:
+        candidates.append(("refs", adj_backend(window)))
+    best_plan, best_sz = None, 1 << 63
+    for _name, plan in candidates:
+        try:
+            sz = len(
+                compress(
+                    plan, samples, ctx=CompressionCtx(ctx.format_version, ctx.level)
+                )
+            )
+        except Exception:
+            continue
+        if sz < best_sz:
+            best_plan, best_sz = plan, sz
+    return best_plan if best_plan is not None else _columns_backend()
+
+
+register_selector(
+    SelectorSpec(
+        "adjacency_auto",
+        _adjacency_auto,
+        n_inputs=2,
+        doc="adjacency backend by trial: reference vs plain gaps vs columns",
+    )
+)

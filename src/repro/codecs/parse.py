@@ -26,18 +26,43 @@ from ._util import HeaderReader, HeaderWriter, numeric_stream
 
 
 # ----------------------------------------------------------------- csv_split
+# Header extension flag bits (appended after n_rows only when non-zero, so
+# single-byte-separator LF frames stay byte-identical to the frozen vectors):
+_CSV_EXT_CRLF = 1  # lines were CRLF-terminated; decode rejoins with \r\n
+_CSV_EXT_MB_SEP = 2  # separator is multi-byte; the tail follows as bytes_
+
+
+def _csv_sep_bytes(sep) -> bytes:
+    sep_b = (
+        bytes([sep])
+        if isinstance(sep, int)
+        else (sep.encode() if isinstance(sep, str) else bytes(sep))
+    )
+    if not sep_b:
+        raise ValueError("csv_split: separator must be non-empty")
+    if b"\n" in sep_b or b"\r" in sep_b:
+        raise ValueError("csv_split: separator cannot contain newlines")
+    return sep_b
+
+
 def _csv_split_enc(streams, params):
     s = streams[0]
     if s.stype != SType.SERIAL:
         raise ValueError("csv_split wants serial bytes")
-    sep = params.get("sep", ",")
-    sep_b = sep.encode() if isinstance(sep, str) else bytes([sep])
+    sep_b = _csv_sep_bytes(params.get("sep", ","))
     raw = s.data.tobytes()
     trailing_nl = raw.endswith(b"\n")
     body = raw[:-1] if trailing_nl else raw
     lines = body.split(b"\n") if body else []
     if not lines:
         raise ValueError("csv_split: empty input")
+    # CRLF mode: when every newline-terminated line carries a \r, treat the
+    # file as CRLF-terminated (strip the \r from fields, rejoin with \r\n on
+    # decode) — otherwise stray \r stay glued to the last field, which still
+    # round-trips but pollutes the column streams (the sniff_csv bug twin)
+    crlf = bool(trailing_nl and all(ln.endswith(b"\r") for ln in lines))
+    if crlf:
+        lines = [ln[:-1] for ln in lines]
     rows = [ln.split(sep_b) for ln in lines]
     n_cols = len(rows[0])
     if any(len(r) != n_cols for r in rows):
@@ -51,9 +76,15 @@ def _csv_split_enc(streams, params):
         .u8(1 if trailing_nl else 0)
         .varint(n_cols)
         .varint(len(rows))
-        .done()
     )
-    return outs, h
+    flags = (_CSV_EXT_CRLF if crlf else 0) | (
+        _CSV_EXT_MB_SEP if len(sep_b) > 1 else 0
+    )
+    if flags:
+        h.u8(flags)
+        if flags & _CSV_EXT_MB_SEP:
+            h.bytes_(sep_b[1:])
+    return outs, h.done()
 
 
 def _csv_split_dec(outs, header):
@@ -62,12 +93,19 @@ def _csv_split_dec(outs, header):
     trailing_nl = r.u8()
     n_cols = r.varint()
     n_rows = r.varint()
+    eol = b"\n"
+    if r.pos < len(r.buf):  # extension byte (absent in pre-extension frames)
+        flags = r.u8()
+        if flags & _CSV_EXT_MB_SEP:
+            sep += r.bytes_()
+        if flags & _CSV_EXT_CRLF:
+            eol = b"\r\n"
     r.expect_end()
     cols = [o.to_strings() for o in outs]
     if len(cols) != n_cols or any(len(c) != n_rows for c in cols):
         raise ValueError("csv_split: corrupt columns")
     lines = [sep.join(cols[c][i] for c in range(n_cols)) for i in range(n_rows)]
-    raw = b"\n".join(lines) + (b"\n" if trailing_nl else b"")
+    raw = eol.join(lines) + (eol if trailing_nl else b"")
     return [Stream(np.frombuffer(raw, dtype=np.uint8), SType.SERIAL, 1)]
 
 
@@ -184,6 +222,12 @@ def sniff_csv(
     separators that pass, the one yielding the most columns wins — a file
     whose fields contain no separator at all still parses as 1 column, so
     at least 2 columns are required to call it CSV.
+
+    CRLF files are handled exactly as ``csv_split`` does: when every probed
+    line ends with ``\\r`` the terminator is stripped before the
+    rectangularity check, so a CRLF file no longer trains a plan whose last
+    column drags a ``\\r`` suffix through every row.  A lone ``\\r`` inside
+    a line (mixed endings) still counts as field bytes, matching the codec.
     """
     probe = bytes(raw[:max_probe])
     if len(probe) < 8:
@@ -195,6 +239,8 @@ def sniff_csv(
     if cut <= 0:
         return None
     lines = probe[:cut].split(b"\n")
+    if all(ln.endswith(b"\r") for ln in lines):
+        lines = [ln[:-1] for ln in lines]
     if len(lines) < 2 or any(not ln for ln in lines):
         return None
     best: Optional[Tuple[int, bytes]] = None
@@ -209,6 +255,87 @@ def sniff_csv(
     if best is None:
         return None
     return best[0], best[1].decode()
+
+
+def sniff_edge_list(
+    raw: bytes,
+    *,
+    seps: Tuple[bytes, ...] = (b"\t", b" "),
+    max_probe: int = SNIFF_PROBE_BYTES,
+) -> Optional[str]:
+    """Detect a SNAP-style text edge list -> separator, else None.
+
+    Acceptance: mostly printable, >= 32 non-comment probed lines of which
+    >= 95% split into exactly two canonical decimal integers under one
+    separator (``#`` comment lines are ignored, as ``edge_list`` routes them
+    to its exception stream).  Only whitespace separators are probed — a
+    two-integer-column *comma* file keeps sniffing as CSV, which subsumes it.
+    """
+    probe = bytes(raw[:max_probe])
+    if len(probe) < 16:
+        return None
+    arr = np.frombuffer(probe, dtype=np.uint8)
+    if float(_PRINTABLE_MASK[arr].mean()) < 0.95:
+        return None
+    cut = probe.rfind(b"\n")
+    if cut <= 0:
+        return None
+    lines = probe[:cut].split(b"\n")
+    data = [ln for ln in lines if ln and not ln.startswith(b"#")]
+    if len(data) < 32:
+        return None
+    best: Optional[Tuple[int, bytes]] = None
+    for sep in seps:
+        n_ok = 0
+        for ln in data:
+            parts = ln.split(sep)
+            if (
+                len(parts) == 2
+                and _canonical_int(parts[0]) is not None
+                and _canonical_int(parts[1]) is not None
+            ):
+                n_ok += 1
+        if n_ok >= max(32, int(0.95 * len(data))) and (
+            best is None or n_ok > best[0]
+        ):
+            best = (n_ok, sep)
+    if best is None:
+        return None
+    return best[1].decode()
+
+
+def sniff_edge_list_bin(
+    raw: bytes,
+    *,
+    widths: Tuple[int, ...] = (4, 8),
+    max_probe: int = SNIFF_PROBE_BYTES,
+) -> Optional[int]:
+    """Detect a binary interleaved (src, dst) edge array -> pair width.
+
+    Signals, probed narrowest-first like ``sniff_numeric_width``: the src
+    column is >= 98% non-decreasing (CSR dumps sort by source), src repeats
+    often enough to form adjacency runs (>= 20%), and neighbors within a run
+    are >= 90% increasing (sorted adjacency lists).  Plain sorted integer
+    arrays fail the run test, so the numeric sniffer still claims them.
+    """
+    n = len(raw)
+    for w in widths:
+        if n % (2 * w) or n // (2 * w) < 64:
+            continue
+        take = (min(n, max_probe) // (2 * w)) * (2 * w)
+        pairs = np.frombuffer(raw[:take], dtype=_NUMERIC_SNIFF_DTYPES[w]).reshape(
+            -1, 2
+        )
+        src, dst = pairs[:, 0], pairs[:, 1]
+        if float(np.mean(src[1:] >= src[:-1])) < 0.98:
+            continue
+        same = src[1:] == src[:-1]
+        if float(same.mean()) < 0.2:
+            continue
+        if float(np.mean(dst[1:][same] > dst[:-1][same])) < 0.9:
+            continue
+        return w
+    return None
 
 
 def sniff_numeric_width(

@@ -20,6 +20,8 @@ __all__ = [
     "sao_profile",
     "csv_profile",
     "struct_profile",
+    "graph_profile",
+    "graph_bin_profile",
     "named_profiles",
     "resolve_profile_spec",
 ]
@@ -119,6 +121,12 @@ def sao_profile() -> Plan:
 
 def csv_profile(n_cols: int, sep: str = ",") -> Plan:
     """CSV frontend + per-column parse_numeric + auto backends (§VI-C)."""
+    if n_cols < 1:
+        raise ValueError(f"csv profile: column count must be >= 1, got {n_cols}")
+    if not sep:
+        raise ValueError("csv profile: separator must be non-empty")
+    if "\n" in sep or "\r" in sep:
+        raise ValueError("csv profile: separator cannot contain newlines")
     g = GraphBuilder(1)
     cols = g.add("csv_split", g.input(0), n_out=n_cols, sep=sep)
     if isinstance(cols, int):
@@ -131,6 +139,35 @@ def csv_profile(n_cols: int, sep: str = ",") -> Plan:
         g.select("bytes_auto", exc_content)
         g.select("numeric_auto", exc_lens)
     return g.build(f"csv{n_cols}")
+
+
+def graph_profile(sep: str = "auto", window: int = 8) -> Plan:
+    """Edge-list graph frontend: degree + delta-gap + reference coding.
+
+    ``edge_list`` shreds ``u<sep>v`` lines into (src, dst) columns plus a
+    parse bitmap and byte-exact exception lines (comments, blank lines);
+    ``adjacency_auto`` then decides by trial whether Zuckerli-style
+    reference/copy-list coding, plain gap coding, or raw columns wins for
+    this graph's neighborhood structure.
+    """
+    g = GraphBuilder(1)
+    src, dst, bitmap, exc = g.add("edge_list", g.input(0), sep=sep)
+    g.select("adjacency_auto", src, dst, window=window)
+    g.select("bytes_auto", bitmap)
+    exc_content, exc_lens = g.add("string_split", exc)
+    g.select("bytes_auto", exc_content)
+    g.select("numeric_auto", exc_lens)
+    return g.build("graph")
+
+
+def graph_bin_profile(width: int = 4, window: int = 8) -> Plan:
+    """CSR/binary edge-list graph frontend: interleaved fixed-width pairs."""
+    if width not in (2, 4, 8):
+        raise ValueError(f"graph:bin profile: width must be 2, 4 or 8, got {width}")
+    g = GraphBuilder(1)
+    src, dst = g.add("edge_list_bin", g.input(0), width=width)
+    g.select("adjacency_auto", src, dst, window=window)
+    return g.build(f"graph_bin{width}")
 
 
 def struct_profile(widths: Sequence[int]) -> Plan:
@@ -161,6 +198,7 @@ def named_profiles():
         ("bfloat16", bfloat16_profile, "float_split bf16 embedding graph"),
         ("float64", float64_profile, "float_split fp64 graph"),
         ("sao", sao_profile, "the paper's SAO star-catalog graph (§IV)"),
+        ("graph", graph_profile, "edge-list adjacency graph (Zuckerli-style)"),
     ]:
         doc = (fn.__doc__ or "").strip().splitlines()
         out[name] = (fn, doc[0] if doc and doc[0] else desc)
@@ -168,9 +206,27 @@ def named_profiles():
 
 
 def resolve_profile_spec(spec: str) -> Plan:
-    """Resolve a profile spec — a named profile, ``struct:W1,W2,..`` or
-    ``csv:N[:sep]`` — to a Plan.  Raises ValueError on an unknown or
-    malformed spec (library-safe: callers decide how to exit)."""
+    """Resolve a profile spec — a named profile, ``struct:W1,W2,..``,
+    ``csv:N[:sep]`` or ``graph[:bin:W]`` — to a Plan.  Raises ValueError on
+    an unknown or malformed spec (library-safe: callers decide how to exit)."""
+    if spec.startswith("graph:"):
+        parts = spec.split(":")
+        if parts[1] == "bin":
+            try:
+                width = int(parts[2]) if len(parts) > 2 and parts[2] else 4
+            except ValueError:
+                raise ValueError(f"profile {spec!r}: bad pair width") from None
+            if width not in (2, 4, 8) or len(parts) > 3:
+                raise ValueError(
+                    f"profile {spec!r}: expected graph:bin:W with W in 2/4/8"
+                )
+            return graph_bin_profile(width)
+        sep = ":".join(parts[1:])  # "graph:::" means the separator is "::"
+        if not sep or "\n" in sep or "\r" in sep:
+            raise ValueError(
+                f"profile {spec!r}: separator must be non-empty, newline-free"
+            )
+        return graph_profile(sep)
     if spec.startswith("struct:"):
         try:
             widths = [int(w) for w in spec[len("struct:") :].split(",") if w]
@@ -185,7 +241,14 @@ def resolve_profile_spec(spec: str) -> Plan:
             n_cols = int(parts[1])
         except (IndexError, ValueError):
             raise ValueError(f"profile {spec!r}: bad column count") from None
-        return csv_profile(n_cols, parts[2]) if len(parts) > 2 else csv_profile(n_cols)
+        # "csv:3::" means the separator is ":" — everything past the count
+        # is the separator verbatim; csv_profile validates it (non-empty,
+        # newline-free), turning the old IndexError path into ValueError
+        sep = ":".join(parts[2:]) if len(parts) > 2 else ","
+        try:
+            return csv_profile(n_cols, sep)
+        except ValueError as e:
+            raise ValueError(f"profile {spec!r}: {e}") from None
     reg = named_profiles()
     if spec not in reg:
         raise ValueError(

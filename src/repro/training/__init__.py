@@ -13,6 +13,7 @@ from .nsga2 import (  # noqa: F401
 from .trainer import (  # noqa: F401
     CsvFrontend,
     Frontend,
+    GraphFrontend,
     MultiStreamFrontend,
     NumericFrontend,
     StructFrontend,

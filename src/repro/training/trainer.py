@@ -120,6 +120,44 @@ class NumericFrontend(Frontend):
 
 
 @dataclass
+class GraphFrontend(Frontend):
+    """Edge-list graphs: ``edge_list``/``edge_list_bin`` + ``adj_gap`` so the
+    genome search runs over Zuckerli-shaped streams (nodes, degrees, refs,
+    copy-bits, gaps [, parse bitmap, exception lines]) instead of raw text."""
+
+    sep: str = "auto"
+    window: int = 8
+    binary_width: int = 0  # 0 = text edge list; 2/4/8 = binary (u, v) pairs
+    name: str = "graph"
+
+    def parse(self, inputs):
+        if self.binary_width:
+            cols, _ = get_codec("edge_list_bin").run_encode(
+                list(inputs), {"width": self.binary_width}
+            )
+            src, dst = cols
+            extra: List[Stream] = []
+        else:
+            outs, _ = get_codec("edge_list").run_encode(
+                list(inputs), {"sep": self.sep}
+            )
+            src, dst, bitmap, exc = outs
+            extra = [bitmap, exc]
+        adj, _ = get_codec("adj_gap").run_encode([src, dst], {"window": self.window})
+        return list(adj) + extra
+
+    def emit(self, g):
+        if self.binary_width:
+            src, dst = g.add("edge_list_bin", g.input(0), width=self.binary_width)
+            extra = []
+        else:
+            src, dst, bitmap, exc = g.add("edge_list", g.input(0), sep=self.sep)
+            extra = [bitmap, exc]
+        adj = g.add("adj_gap", src, dst, window=self.window)
+        return list(adj) + extra
+
+
+@dataclass
 class MultiStreamFrontend(Frontend):
     """Inputs are already typed streams (e.g. Parquet-decoded columns)."""
 
@@ -134,21 +172,38 @@ class MultiStreamFrontend(Frontend):
 def detect_frontend(raw: bytes) -> Frontend:
     """``--frontend auto``: pick a frontend by sniffing sample bytes.
 
-    Detection order encodes signal strength: rectangular CSV first (the
-    strictest rule), then *sorted* fixed-width integers, then fixed-size
-    records (split into per-offset byte columns so clustering and the
-    per-cluster search see each field position on its own), then bounded
-    integers, and finally raw bytes.  Sorted-numeric outranks struct because
-    a sorted array is itself lag-periodic; bounded-numeric ranks below
-    struct because multi-field records also show a constant top byte.
-    Heuristics live in :mod:`repro.codecs.parse` next to the parser codecs
-    they route to.
+    Detection order encodes signal strength: text edge lists first (two
+    canonical integers per line under a whitespace separator is stricter
+    than any CSV rule — comma edge files still sniff as CSV, which subsumes
+    them), then rectangular CSV, then binary interleaved (src, dst) edge
+    pairs, then *sorted* fixed-width integers, then fixed-size records
+    (split into per-offset byte columns so clustering and the per-cluster
+    search see each field position on its own), then bounded integers, and
+    finally raw bytes.  Binary edge pairs outrank sorted-numeric because a
+    source-sorted u32 pair stream re-read at width 8 *is* mostly monotone
+    (the neighbor column dominates the high half); sorted-numeric outranks
+    struct because a sorted array is itself lag-periodic; bounded-numeric
+    ranks below struct because multi-field records also show a constant top
+    byte.  Heuristics live in :mod:`repro.codecs.parse` next to the parser
+    codecs they route to.
     """
-    from repro.codecs.parse import sniff_csv, sniff_numeric_width, sniff_struct_width
+    from repro.codecs.parse import (
+        sniff_csv,
+        sniff_edge_list,
+        sniff_edge_list_bin,
+        sniff_numeric_width,
+        sniff_struct_width,
+    )
 
+    sep = sniff_edge_list(raw)
+    if sep is not None:
+        return GraphFrontend(sep=sep)
     csv = sniff_csv(raw)
     if csv is not None:
         return CsvFrontend(n_cols=csv[0], sep=csv[1])
+    bw = sniff_edge_list_bin(raw)
+    if bw is not None:
+        return GraphFrontend(binary_width=bw)
     width = sniff_numeric_width(raw, require_monotone=True)
     if width is not None:
         return NumericFrontend(width=width)
@@ -297,6 +352,9 @@ COST_NS_PER_BYTE: Dict[str, float] = {
     "lz77": 45.0,
     "parse_numeric": 60.0,
     "csv_split": 80.0,
+    "edge_list": 90.0,
+    "edge_list_bin": 0.3,
+    "adj_gap": 6.0,
     "bz2_backend": 90.0,
     "lzma_backend": 450.0,
 }

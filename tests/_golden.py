@@ -23,6 +23,13 @@ must be a reviewed decision, not a test-fixing reflex:
 
     REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python tests/_golden.py
 
+Adding a codec requires *adding* vectors without touching any frozen frame
+(the ROADMAP conformance policy).  ``REPRO_REGEN_GOLDEN=new`` does exactly
+that: it freezes only vectors absent from ``manifest.json`` and leaves every
+existing file byte-identical:
+
+    REPRO_REGEN_GOLDEN=new PYTHONPATH=src python tests/_golden.py
+
 Vector inputs are seeded ``np.random.default_rng`` draws (bit-stable across
 platforms), so regeneration itself is reproducible.
 """
@@ -122,15 +129,44 @@ def _bf16(name: str, n: int = 1024) -> Stream:
     return Stream((f32 >> np.uint32(16)).astype(np.uint16), SType.NUMERIC, 2)
 
 
-def _csv(name: str, n_rows: int = 400) -> Stream:
+def _csv(
+    name: str, n_rows: int = 400, sep: bytes = b",", eol: bytes = b"\n"
+) -> Stream:
     rng = _rng(name)
     animals = [b"cat", b"dog", b"emu"]
     rows = [
-        b"%d,%s,%d"
-        % (i * 3, animals[int(rng.integers(3))], int(rng.integers(0, 50)))
+        sep.join(
+            (b"%d" % (i * 3), animals[int(rng.integers(3))],
+             b"%d" % int(rng.integers(0, 50)))
+        )
         for i in range(n_rows)
     ]
-    return serial(b"\n".join(rows) + b"\n")
+    return serial(eol.join(rows) + eol)
+
+
+def _edges_text(name: str, n_nodes: int = 300, max_deg: int = 16) -> Stream:
+    """SNAP-style text edge list: # comment header + sorted u<TAB>v lines."""
+    rng = _rng(name)
+    lines = [b"# SNAP-style golden edge list", b"# FromNodeId\tToNodeId"]
+    for u in range(n_nodes):
+        for v in np.unique(rng.integers(0, n_nodes, int(rng.integers(1, max_deg)))):
+            lines.append(b"%d\t%d" % (u, v))
+    return serial(b"\n".join(lines) + b"\n")
+
+
+def _edges_bin(name: str, n_nodes: int = 300, max_deg: int = 16) -> Stream:
+    """The CSR/binary twin: interleaved little-endian u32 (src, dst) pairs."""
+    rng = _rng(name)
+    src: List[int] = []
+    dst: List[int] = []
+    for u in range(n_nodes):
+        for v in np.unique(rng.integers(0, n_nodes, int(rng.integers(1, max_deg)))):
+            src.append(u)
+            dst.append(int(v))
+    pairs = np.stack(
+        [np.asarray(src, np.uint32), np.asarray(dst, np.uint32)], axis=1
+    )
+    return serial(pairs.tobytes())
 
 
 def _strings_ints(name: str, n: int = 400) -> Stream:
@@ -261,6 +297,26 @@ def vectors() -> List[GoldenVector]:
     add("codec_fused_delta_bitpack", 4,
         lambda: _single("fused_delta_bitpack", bits=8),
         lambda: _smooth_u32("codec_fused_delta_bitpack"))
+    # multi-byte separator and CRLF pin csv_split's extension header byte
+    # (flags + separator tail) — the layout the multi-byte-sep bugfix added
+    add("codec_csv_split_multisep", 2,
+        lambda: _fanout("csv_split", 3, sep="::"),
+        lambda: _csv("codec_csv_split_multisep", sep=b"::"))
+    add("codec_csv_split_crlf", 2, lambda: _fanout("csv_split", 3, sep=","),
+        lambda: _csv("codec_csv_split_crlf", eol=b"\r\n"))
+    add("codec_edge_list", 4, lambda: _fanout("edge_list", 4, sep="\t"),
+        lambda: _edges_text("codec_edge_list"))
+
+    def adj_gap_plan() -> Plan:
+        g = GraphBuilder(1)
+        src, dst, _bitmap, _exc = g.add("edge_list", g.input(0), sep="\t")
+        g.add("adj_gap", src, dst, window=8)
+        return g.build("unit_adj_gap")
+
+    add("codec_adj_gap", 4, adj_gap_plan,
+        lambda: _edges_text("codec_adj_gap"))
+    add("codec_edge_list_bin", 4, lambda: _fanout("edge_list_bin", 2, width=4),
+        lambda: _edges_bin("codec_edge_list_bin"))
 
     # --- profile families at the current version ---------------------------
     add("profile_generic_numeric", 4, P.generic_profile,
@@ -282,6 +338,10 @@ def vectors() -> List[GoldenVector]:
         lambda: _csv("profile_csv3"))
     add("profile_struct44", 4, lambda: P.struct_profile([4, 4]),
         lambda: _struct_rec("profile_struct44", 8))
+    add("profile_graph", 4, P.graph_profile,
+        lambda: _edges_text("profile_graph"))
+    add("profile_graph_bin", 4, lambda: P.graph_bin_profile(4),
+        lambda: _edges_bin("profile_graph_bin"))
 
     # --- one generic vector per supported format version (drift canary) ----
     for fv in (1, 2, 3, 4):
@@ -355,15 +415,23 @@ def load_manifest() -> Dict[str, Dict]:
 
 # -------------------------------------------------------------- regeneration
 def regenerate() -> None:
-    if os.environ.get(REGEN_ENV) != "1":
+    mode = os.environ.get(REGEN_ENV)
+    if mode not in ("1", "new"):
         raise SystemExit(
             f"refusing to regenerate the conformance corpus without"
-            f" {REGEN_ENV}=1 — frozen frames define the wire format;"
-            f" regenerating them is a format change (see ROADMAP.md)"
+            f" {REGEN_ENV}=1 (full rewrite — a reviewed format change) or"
+            f" {REGEN_ENV}=new (freeze only vectors missing from the"
+            f" manifest; existing frames stay byte-identical) — frozen"
+            f" frames define the wire format (see ROADMAP.md)"
         )
+    additive = mode == "new"
     GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
-    manifest: Dict[str, Dict] = {}
+    manifest: Dict[str, Dict] = (
+        load_manifest() if additive and MANIFEST.exists() else {}
+    )
     for v in vectors():
+        if additive and v.name in manifest:
+            continue
         plan = v.make_plan().validate()
         stream = v.make_input().validate()
         entry = {

@@ -211,6 +211,40 @@ def test_profile_spec_errors_are_clean():
         main(["compress", "/nonexistent", "--profile", "bogus"])
 
 
+def test_csv_empty_separator_spec_is_value_error():
+    """Regression: 'csv:3:' (trailing colon -> empty separator) used to reach
+    sep_b[0] and raise IndexError instead of the documented ValueError."""
+    from repro.codecs.profiles import resolve_profile_spec
+
+    for bad in ("csv:3:", "csv:0", "csv:2:\n", "csv:-1"):
+        with pytest.raises(ValueError):
+            resolve_profile_spec(bad)
+    # separators containing ':' are expressible: 'csv:3::' means sep ':'
+    resolve_profile_spec("csv:3::")
+    resolve_profile_spec("csv:3:::")  # sep '::'
+
+
+def test_graph_profile_specs(tmp_path):
+    from repro.codecs.profiles import resolve_profile_spec
+
+    for good in ("graph", "graph:\t", "graph: ", "graph:bin", "graph:bin:8"):
+        resolve_profile_spec(good)
+    for bad in ("graph:", "graph:bin:3", "graph:bin:x", "graph:bin:4:junk"):
+        with pytest.raises(ValueError):
+            resolve_profile_spec(bad)
+
+    # CLI end to end: compress + universal decompress with the graph profile
+    edges = tmp_path / "edges.txt"
+    edges.write_bytes(
+        b"# golden\n" + b"".join(b"%d\t%d\n" % (i // 3, i % 7) for i in range(60))
+    )
+    out = tmp_path / "edges.ozl"
+    back = tmp_path / "edges.rt"
+    assert main(["compress", str(edges), "--profile", "graph", "-o", str(out)]) == 0
+    assert main(["decompress", str(out), "-o", str(back)]) == 0
+    assert back.read_bytes() == edges.read_bytes()
+
+
 # ---------------------------------------------------------- train edge cases
 def test_train_no_pareto_point_is_clear_error(tmp_path, monkeypatch):
     """An empty training result must exit with a message, not IndexError."""

@@ -234,7 +234,180 @@ def test_generic_profile_bytes(b):
 def test_every_registered_codec_is_exercised_somewhere():
     """Meta-test: the registry matches the documented id map."""
     ids = {spec.codec_id for spec in all_codecs().values()}
-    assert ids == set(range(1, 27)), sorted(ids)
+    assert ids == set(range(1, 30)), sorted(ids)
+
+
+# --------------------------------------------------- csv_split regressions
+def test_csv_split_multibyte_separator_roundtrip():
+    """Regression: the header stored only sep_b[0], so decode rejoined with
+    one byte and multi-byte separators corrupted silently."""
+    raw = b"a::b::c\n1::2::3\nx::y::z\n"
+    g = GraphBuilder(1)
+    g.add("csv_split", g.input(0), n_out=3, sep="::")
+    chk(g.build(), serial(raw))
+
+
+@given(
+    st.text(
+        alphabet=st.characters(codec="ascii", exclude_characters="\r\n"),
+        min_size=1,
+        max_size=4,
+    ),
+    st.lists(st.integers(0, 999), min_size=2, max_size=40),
+)
+@settings(max_examples=40, deadline=None)
+def test_csv_split_any_separator_roundtrip(sep, vals):
+    rows = [f"{v}{sep}{v * 7}".encode() for v in vals]
+    n_cols = rows[0].count(sep.encode()) + 1
+    if any(r.count(sep.encode()) + 1 != n_cols for r in rows):
+        return  # digits colliding with the separator: not rectangular
+    g = GraphBuilder(1)
+    g.add("csv_split", g.input(0), n_out=n_cols, sep=sep)
+    chk(g.build(), serial(b"\n".join(rows) + b"\n"))
+
+
+def test_csv_split_crlf_roundtrip():
+    """Regression twin of the sniff_csv CRLF bug: \\r\\n files must
+    round-trip byte-exactly and must NOT leave \\r glued to the last
+    column (the per-column streams are clean)."""
+    from repro.core.codec import get_codec
+
+    raw = b"a,b\r\n1,2\r\n33,44\r\n"
+    outs, h = get_codec("csv_split").run_encode([serial(raw)], {"sep": ","})
+    assert outs[1].to_strings() == [b"b", b"2", b"44"]  # no \r suffixes
+    rec = get_codec("csv_split").run_decode(outs, h)[0]
+    assert rec.data.tobytes() == raw
+
+
+@pytest.mark.parametrize(
+    "raw,n_cols",
+    [
+        (b"a,b\r\n1,2\r", 2),  # final line CR without LF
+        (b"a,b\r\n1,2\n", 2),  # mixed endings
+        (b"\r\n", 1),
+    ],
+)
+def test_csv_split_cr_edge_cases_roundtrip(raw, n_cols):
+    g = GraphBuilder(1)
+    g.add("csv_split", g.input(0), n_out=n_cols, sep=",")
+    chk(g.build(), serial(raw))
+
+
+@pytest.mark.parametrize("sep", ["", "a\nb", "\r", "x\ry"])
+def test_csv_split_rejects_bad_separators(sep):
+    from repro.core.codec import get_codec
+
+    with pytest.raises(ValueError):
+        get_codec("csv_split").run_encode([serial(b"a,b\n")], {"sep": sep})
+
+
+# ---------------------------------------------------- graph codec roundtrips
+def _edge_text(pairs, sep=b"\t", junk=(), trailing=True):
+    lines = list(junk) + [b"%d%s%d" % (u, sep, v) for u, v in pairs]
+    return b"\n".join(lines) + (b"\n" if trailing else b"")
+
+
+@given(
+    st.lists(st.tuples(st.integers(0, 500), st.integers(0, 500)), max_size=200),
+    st.lists(small_bytes_st.filter(lambda b: b"\n" not in b), max_size=5),
+    st.booleans(),
+)
+@settings(max_examples=40, deadline=None)
+def test_edge_list_roundtrip(pairs, junk, trailing):
+    raw = _edge_text(sorted(pairs), junk=junk, trailing=trailing)
+    g = GraphBuilder(1)
+    g.add("edge_list", g.input(0), sep="\t")
+    chk(g.build(), serial(raw))
+
+
+@given(bytes_st)
+@settings(max_examples=40, deadline=None)
+def test_edge_list_lossless_on_arbitrary_bytes(b):
+    """edge_list is total: any byte blob round-trips (unparsed lines are
+    byte-exact exceptions), under explicit and auto separators."""
+    g = GraphBuilder(1)
+    g.add("edge_list", g.input(0), sep="auto")
+    chk(g.build(), serial(b))
+
+
+@given(
+    st.lists(st.integers(0, 2**64 - 1), max_size=300),
+    st.integers(0, 8),
+)
+@settings(max_examples=40, deadline=None)
+def test_adj_gap_roundtrip_unsorted(flat, window):
+    """adj_gap must be lossless on ANY (src, dst) columns — unsorted,
+    duplicate, full-u64-range — not just sorted adjacency."""
+    n = len(flat) // 2
+    src = np.asarray(flat[:n], dtype=np.uint64)
+    dst = np.asarray(flat[n : 2 * n], dtype=np.uint64)
+    g = GraphBuilder(2)
+    g.add("adj_gap", g.input(0), g.input(1), window=window)
+    assert Compressor(g.build()).roundtrip_check([numeric(src), numeric(dst)])
+
+
+@given(st.integers(1, 200), st.integers(1, 12), st.integers(0, 8))
+@settings(max_examples=30, deadline=None)
+def test_adj_gap_roundtrip_sorted_adjacency(n_nodes, max_deg, window):
+    """The reference/copy-list path: sorted adjacency with repeated
+    neighborhoods (every run similar), all widths."""
+    rng = np.random.default_rng(n_nodes * 13 + max_deg)
+    src, dst = [], []
+    for u in range(n_nodes):
+        for v in np.unique(rng.integers(0, n_nodes, max_deg)):
+            src.append(u)
+            dst.append(int(v))
+    for dt in (np.uint16, np.uint32, np.uint64):
+        s = np.asarray(src, dtype=dt)
+        d = np.asarray(dst, dtype=dt)
+        g = GraphBuilder(2)
+        g.add("adj_gap", g.input(0), g.input(1), window=window)
+        assert Compressor(g.build()).roundtrip_check([numeric(s), numeric(d)])
+
+
+@given(
+    st.lists(st.tuples(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1)),
+             max_size=200),
+    st.sampled_from([2, 4, 8]),
+)
+@settings(max_examples=40, deadline=None)
+def test_edge_list_bin_roundtrip(pairs, width):
+    hi = (1 << (8 * width)) - 1
+    arr = np.asarray(
+        [(u & hi, v & hi) for u, v in pairs], dtype=np.uint64
+    ).astype({2: np.uint16, 4: np.uint32, 8: np.uint64}[width])
+    raw = arr.tobytes()
+    g = GraphBuilder(1)
+    g.add("edge_list_bin", g.input(0), width=width)
+    chk(g.build(), serial(raw))
+
+
+def test_edge_list_bin_rejects_misaligned():
+    from repro.core.codec import get_codec
+
+    with pytest.raises(ValueError):
+        get_codec("edge_list_bin").run_encode([serial(b"\x00" * 7)], {"width": 4})
+    with pytest.raises(ValueError):
+        get_codec("edge_list_bin").run_encode([serial(b"\x00" * 8)], {"width": 3})
+
+
+@given(
+    st.lists(st.tuples(st.integers(0, 300), st.integers(0, 300)), max_size=300)
+)
+@settings(max_examples=30, deadline=None)
+def test_graph_profile_roundtrip(pairs):
+    from repro.codecs import graph_profile
+
+    raw = _edge_text(sorted(set(pairs)), junk=[b"# hdr"])
+    chk(graph_profile(), serial(raw))
+
+
+@given(bytes_st)
+@settings(max_examples=30, deadline=None)
+def test_graph_profile_lossless_on_arbitrary_bytes(b):
+    from repro.codecs import graph_profile
+
+    chk(graph_profile(), serial(b))
 
 
 def test_concat_mixed_signedness_is_bit_exact():

@@ -95,6 +95,18 @@ def test_every_registered_codec_id_is_covered():
     )
 
 
+def test_graph_codec_ids_have_vectors():
+    """PR 9's graph family pinned explicitly: edge_list (27), adj_gap (28),
+    edge_list_bin (29) each appear inside a frozen frame, and the csv_split
+    extension-header cases (multi-byte separator, CRLF) stay in the corpus."""
+    covered = set()
+    for name in NAMES:
+        covered |= _frame_codec_ids(_frame(name))
+    assert {27, 28, 29} <= covered
+    assert "codec_csv_split_multisep" in NAMES
+    assert "codec_csv_split_crlf" in NAMES
+
+
 def test_every_format_version_is_covered():
     versions = {MANIFEST_ENTRIES[n]["format_version"] for n in NAMES}
     expected = set(range(MIN_FORMAT_VERSION, CURRENT_FORMAT_VERSION + 1))

@@ -1,0 +1,195 @@
+"""Sniffer fuzz: the format sniffers behind ``--frontend auto`` must (a)
+never raise on arbitrary bytes and (b) *agree with the parser they route to*
+— whatever a sniffer claims, the corresponding frontend codec must encode
+that sample losslessly (after the trainer's own sample alignment).  A sniffer
+that detects a format its codec then chokes on turns ``repro train`` into a
+crash, so sniff→parse agreement is the real invariant, not detection rate.
+
+Runs both as seeded deterministic fuzz (no dependencies) and as hypothesis
+properties when hypothesis is installed (CI).
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or skip-at-call-time stubs
+
+from repro.codecs.parse import (
+    sniff_csv,
+    sniff_edge_list,
+    sniff_edge_list_bin,
+    sniff_numeric_width,
+    sniff_struct_width,
+)
+from repro.core import Compressor, GraphBuilder, serial
+
+SNIFFERS = [
+    sniff_csv,
+    sniff_edge_list,
+    sniff_edge_list_bin,
+    sniff_numeric_width,
+    sniff_struct_width,
+]
+
+
+def _rt(plan, raw: bytes) -> None:
+    assert Compressor(plan).roundtrip_check(serial(raw))
+
+
+def assert_sniffs_agree_with_parsers(raw: bytes) -> None:
+    """Every sniffer claim must be backed by a lossless parse of the sample
+    the trainer would feed the codec (line-trimmed for text frontends; the
+    fixed-width sniffers only claim aligned inputs in the first place)."""
+    csv = sniff_csv(raw)
+    if csv is not None:
+        n_cols, sep = csv
+        cut = raw.rfind(b"\n")
+        trimmed = raw[: cut + 1] if cut >= 0 else raw
+        g = GraphBuilder(1)
+        g.add("csv_split", g.input(0), n_out=n_cols, sep=sep)
+        _rt(g.build(), trimmed)
+
+    sep = sniff_edge_list(raw)
+    if sep is not None:
+        g = GraphBuilder(1)
+        g.add("edge_list", g.input(0), sep=sep)
+        _rt(g.build(), raw)  # edge_list is total: no trimming required
+
+    w = sniff_edge_list_bin(raw)
+    if w is not None:
+        g = GraphBuilder(1)
+        g.add("edge_list_bin", g.input(0), width=w)
+        _rt(g.build(), raw)  # the sniffer only claims 2w-aligned inputs
+
+    w = sniff_numeric_width(raw)
+    if w is not None:
+        g = GraphBuilder(1)
+        g.add("interpret_numeric", g.input(0), width=w)
+        _rt(g.build(), raw)
+
+    w = sniff_struct_width(raw)
+    if w is not None:
+        g = GraphBuilder(1)
+        g.add("field_split", g.input(0), n_out=w, widths=[1] * w)
+        _rt(g.build(), raw)
+
+
+# ------------------------------------------------- deterministic seeded fuzz
+def _structured_blobs(rng: np.random.Generator):
+    """Blobs shaped to actually trip each sniffer (plus raw noise)."""
+    n = int(rng.integers(0, 2048))
+    kind = int(rng.integers(0, 7))
+    if kind == 0:
+        return rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+    if kind == 1:  # csv-ish, sometimes ragged, sometimes CRLF
+        eol = b"\r\n" if rng.random() < 0.3 else b"\n"
+        sep = [b",", b"\t", b";", b"|"][int(rng.integers(4))]
+        rows = []
+        for _ in range(int(rng.integers(0, 40))):
+            width = int(rng.integers(1, 5)) + (rng.random() < 0.1)
+            rows.append(sep.join(b"%d" % v for v in rng.integers(0, 500, width)))
+        return eol.join(rows) + (eol if rng.random() < 0.8 else b"")
+    if kind == 2:  # text edge list with comments / junk tail
+        sep = b"\t" if rng.random() < 0.5 else b" "
+        lines = [b"# fuzz graph"]
+        for _ in range(int(rng.integers(0, 80))):
+            lines.append(b"%d%s%d" % (rng.integers(0, 300), sep, rng.integers(0, 300)))
+        if rng.random() < 0.2:
+            lines.append(b"trailing junk")
+        return b"\n".join(lines) + (b"\n" if rng.random() < 0.8 else b"")
+    if kind == 3:  # binary (src, dst) pairs, sorted adjacency
+        w = [2, 4, 8][int(rng.integers(3))]
+        dt = {2: np.uint16, 4: np.uint32, 8: np.uint64}[w]
+        src = np.repeat(
+            np.arange(int(rng.integers(1, 80)), dtype=dt), int(rng.integers(1, 8))
+        )
+        dst = rng.integers(0, 1000, src.size).astype(dt)
+        dst.sort()
+        return np.stack([src, dst], axis=1).tobytes()
+    if kind == 4:  # sorted numeric
+        w = [2, 4, 8][int(rng.integers(3))]
+        dt = {2: np.uint16, 4: np.uint32, 8: np.uint64}[w]
+        return np.sort(rng.integers(0, 10000, int(rng.integers(0, 300))).astype(dt)).tobytes()
+    if kind == 5:  # struct-ish records
+        w = int(rng.integers(2, 12))
+        rec = np.zeros((int(rng.integers(0, 64)), w), np.uint8)
+        rec[:, : w // 2] = rng.integers(0, 4, rec[:, : w // 2].shape)
+        rec[:, w // 2 :] = rng.integers(0, 256, rec[:, w // 2 :].shape)
+        return rec.tobytes()
+    return rng.integers(32, 127, n, dtype=np.uint8).tobytes()  # printable noise
+
+
+def test_sniffers_never_raise_and_agree_seeded():
+    rng = np.random.default_rng(0xC0DEC)
+    for _ in range(300):
+        raw = _structured_blobs(rng)
+        for sniff in SNIFFERS:
+            sniff(raw)  # never raises, whatever the bytes
+        assert_sniffs_agree_with_parsers(raw)
+
+
+def test_detect_frontend_never_raises_seeded():
+    from repro.training import detect_frontend
+
+    rng = np.random.default_rng(0xF20)
+    for _ in range(150):
+        raw = _structured_blobs(rng)
+        detect_frontend(raw)
+
+
+@pytest.mark.parametrize(
+    "raw",
+    [
+        b"",
+        b"\n",
+        b"\r\n" * 40,
+        b"\x00" * 1024,
+        b"#" * 1024,
+        b"1\t2\n" * 64,
+        b"-0\t007\n" * 64,  # non-canonical ints: must stay exceptions
+        bytes(range(256)) * 8,
+    ],
+)
+def test_sniffer_edge_inputs(raw):
+    for sniff in SNIFFERS:
+        sniff(raw)
+    assert_sniffs_agree_with_parsers(raw)
+
+
+# ------------------------------------------------------ hypothesis properties
+@given(st.binary(min_size=0, max_size=2048))
+@settings(max_examples=150, deadline=None)
+def test_sniffers_never_raise_hypothesis(raw):
+    for sniff in SNIFFERS:
+        sniff(raw)
+
+
+@given(st.binary(min_size=0, max_size=2048))
+@settings(max_examples=75, deadline=None)
+def test_sniff_parse_agreement_hypothesis(raw):
+    assert_sniffs_agree_with_parsers(raw)
+
+
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 99), st.integers(0, 99)),
+        min_size=40,
+        max_size=200,
+    ),
+    st.sampled_from([b"\t", b" "]),
+)
+@settings(max_examples=50, deadline=None)
+def test_sniff_parse_agreement_on_edge_lists(pairs, sep):
+    raw = b"\n".join(b"%d%s%d" % (u, sep, v) for u, v in sorted(pairs)) + b"\n"
+    assert sniff_edge_list(raw) == sep.decode()
+    assert_sniffs_agree_with_parsers(raw)
+
+
+@given(
+    st.lists(st.lists(st.integers(0, 999), min_size=3, max_size=3), min_size=2, max_size=60),
+    st.sampled_from([b"\n", b"\r\n"]),
+)
+@settings(max_examples=50, deadline=None)
+def test_sniff_parse_agreement_on_csv(rows, eol):
+    raw = eol.join(b",".join(b"%d" % v for v in r) for r in rows) + eol
+    got = sniff_csv(raw)
+    assert got is not None and got[0] == 3
+    assert_sniffs_agree_with_parsers(raw)

@@ -16,6 +16,7 @@ from repro.core.serialize import serialize_plan
 from repro.training import (
     CsvFrontend,
     Frontend,
+    GraphFrontend,
     NumericFrontend,
     StructFrontend,
     TrainerService,
@@ -168,6 +169,45 @@ def test_detect_frontend_families():
     assert isinstance(fe, StructFrontend) and sum(fe.widths) == 5
     raw = detect_frontend(rng.integers(0, 256, 7919).astype(np.uint8).tobytes())
     assert type(raw) is Frontend  # opaque bytes stay raw
+
+
+def test_detect_frontend_graph_families():
+    rng = np.random.default_rng(17)
+    # SNAP-style text edge list: tab separated, # comments
+    lines = [b"# Nodes: 200", b"# FromNodeId\tToNodeId"]
+    for u in range(200):
+        for v in np.unique(rng.integers(0, 200, 5)):
+            lines.append(b"%d\t%d" % (u, v))
+    fe = detect_frontend(b"\n".join(lines) + b"\n")
+    assert isinstance(fe, GraphFrontend) and fe.sep == "\t" and not fe.binary_width
+    # a *comma* two-integer-column file still sniffs as CSV (subsumes it)
+    rows = [b"%d,%d" % (i, i * 2) for i in range(300)]
+    assert isinstance(detect_frontend(b"\n".join(rows) + b"\n"), CsvFrontend)
+    # binary interleaved (src, dst) pairs, source-sorted with sorted runs
+    src = np.repeat(np.arange(150, dtype=np.uint32), 5)
+    dst = np.concatenate(
+        [np.sort(rng.choice(5000, 5, replace=False)) for _ in range(150)]
+    ).astype(np.uint32)
+    fe = detect_frontend(np.stack([src, dst], axis=1).tobytes())
+    assert isinstance(fe, GraphFrontend) and fe.binary_width == 4
+    # a plain sorted u32 array must stay numeric, not graph
+    flat = np.sort(rng.integers(0, 1 << 30, 4000)).astype(np.uint32)
+    assert isinstance(detect_frontend(flat.tobytes()), NumericFrontend)
+
+
+def test_graph_frontend_trains_end_to_end():
+    rng = np.random.default_rng(23)
+    lines = [b"# graph"]
+    for u in range(250):
+        for v in np.unique(rng.integers(0, 250, 6)):
+            lines.append(b"%d\t%d" % (u, v))
+    data = b"\n".join(lines) + b"\n"
+    fe = detect_frontend(data)
+    assert isinstance(fe, GraphFrontend)
+    tc = train([[serial(data)]], fe, pop_size=6, generations=1, seed=0, workers=2)
+    comp = Compressor(tc.best_ratio_plan())
+    assert comp.roundtrip_check(data)
+    assert len(comp.compress(data)) < len(data)
 
 
 def test_detected_frontend_trains_end_to_end():
