@@ -878,6 +878,7 @@ def run_train(emit_json: bool = False, print_rows: bool = True):
         results[f"workers_{workers}"] = {
             "seconds": round(dt, 3),
             "evaluations": int(tc.stats["evaluations"]),
+            "pruned_static": int(tc.stats["pruned_static"]),
             "eval_wall_seconds": round(tc.stats["eval_wall_seconds"], 3),
             "pareto_points": len(tc.points),
         }
@@ -891,6 +892,59 @@ def run_train(emit_json: bool = False, print_rows: bool = True):
     results["plans_identical"] = True
     results["speedup"] = round(speedup, 2)
     rows.append(f"train/speedup,{0:.1f},speedup={speedup:.2f};identical=1")
+
+    # static pruning: the analyzer rejects ill-typed genomes before trial
+    # compression.  Same seed must emit a byte-identical Pareto front with
+    # strictly fewer candidate encodes (CSV mixes string/numeric clusters, so
+    # the search actually produces ill-typed genomes to prune).
+    from repro.training import CsvFrontend
+
+    csv_rows = b"".join(
+        b"%d,%d,%d\n" % (i, (i * 31) % 997, 50_000 - i)
+        for i in range(max(TRAIN_KIB, 64) * 4)
+    )
+    prune_plans = {}
+    for prune in (True, False):
+        resolve_cache_clear()
+        t0 = time.perf_counter()
+        tc = train(
+            [[serial(csv_rows)]],
+            CsvFrontend(n_cols=3),
+            pop_size=TRAIN_POP,
+            generations=TRAIN_GENS,
+            seed=0,
+            workers=2,
+            static_prune=prune,
+        )
+        dt = time.perf_counter() - t0
+        prune_plans[prune] = tuple(
+            sorted(serialize_plan(p) for p, _, _ in tc.pareto_plans())
+        )
+        key = "prune_on" if prune else "prune_off"
+        evals = int(tc.stats["evaluations"])
+        pruned = int(tc.stats["pruned_static"])
+        results[key] = {
+            "seconds": round(dt, 3),
+            "evaluations": evals,
+            "pruned_static": pruned,
+            "trial_compressions": evals - pruned,
+            "eval_wall_seconds": round(tc.stats["eval_wall_seconds"], 3),
+        }
+        rows.append(
+            f"train/{key},{dt*1e6:.1f},"
+            f"evals={evals};pruned_static={pruned};trials={evals - pruned}"
+        )
+    if prune_plans[True] != prune_plans[False]:
+        raise AssertionError(
+            "static pruning changed the Pareto front (analyzer unsound)"
+        )
+    saved = (
+        results["prune_off"]["trial_compressions"]
+        - results["prune_on"]["trial_compressions"]
+    )
+    results["prune_identical"] = True
+    results["prune_trials_saved"] = saved
+    rows.append(f"train/prune_saved,{0:.1f},trials_saved={saved};identical=1")
     if emit_json:
         payload = {
             "schema": "BENCH_train/v1",

@@ -1,0 +1,40 @@
+"""Static plan analysis (paper §III-C: edges of the graph are *typed*).
+
+``typecheck`` abstractly interprets a :class:`~repro.core.graph.Plan` over the
+stream-type lattice using the signatures every codec/selector declares
+(:class:`~repro.core.codec.CodecSig`) and emits structured diagnostics —
+before a single byte is compressed.  ``policy`` is the AST-based repo policy
+linter that turns the ROADMAP's standing policies into checked invariants.
+
+Fail-closed integration points:
+
+* ``PlanRegistry.register_*`` rejects ill-typed plans (``PlanTypeError``).
+* ``TrainerService`` prunes statically-rejected genomes before trial
+  compression (``pruned_static`` counter).
+* ``repro lint PLAN.ozp`` prints diagnostics, exit 1 on error.
+* ``engine.resolve`` gains an opt-in debug assert (``REPRO_RESOLVE_CHECK=1``).
+"""
+from .typecheck import (  # noqa: F401
+    Diagnostic,
+    PlanCheckReport,
+    PlanTypeError,
+    annotate_resolved_nodes,
+    atoms_for_streams,
+    check_plan,
+    fmt_atoms,
+)
+from .policy import PolicyViolation, lint_file, lint_source, lint_tree  # noqa: F401
+
+__all__ = [
+    "Diagnostic",
+    "PlanCheckReport",
+    "PlanTypeError",
+    "annotate_resolved_nodes",
+    "atoms_for_streams",
+    "check_plan",
+    "fmt_atoms",
+    "PolicyViolation",
+    "lint_file",
+    "lint_source",
+    "lint_tree",
+]

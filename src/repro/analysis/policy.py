@@ -1,0 +1,211 @@
+"""AST-based repo policy linter: ROADMAP standing policies as checked rules.
+
+Rules
+-----
+``cpu-count``
+    ``os.cpu_count()`` is banned: it reports the machine, not the cgroup /
+    affinity mask this process may actually use, so containerized CI
+    oversubscribes.  Use ``len(os.sched_getaffinity(0))``.
+
+``fault-point-in-loop``
+    ``fault_point()`` must not be called inside a ``for``/``while`` body.
+    Fault points belong on operation boundaries; a per-element call burns a
+    contextvar read per element on the data plane's hottest paths.  The
+    ``crash_point`` alias is exempt *by definition*: it marks irreversible
+    I/O steps (rename/replace/write boundaries), and a loop iteration that
+    performs real file I/O dwarfs the hook.
+
+``atomic-sink``
+    Path-destined writes (``open(p, "w"/"wb"/...)``, ``Path.write_bytes``,
+    ``Path.write_text``) must go through ``_atomic_sink`` so a crash never
+    leaves a torn file at the final path.  Two shapes are sanctioned:
+    the module that *defines* ``_atomic_sink`` (it has to open files), and
+    functions that stage into a temp location and publish with
+    ``os.replace`` (the shard store / checkpoint writer pattern) — the
+    linter checks the enclosing function for an ``os.replace`` call.
+
+Run over the tree (CI does this)::
+
+    python -m repro.analysis.policy src
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+__all__ = ["PolicyViolation", "lint_file", "lint_source", "lint_tree"]
+
+_WRITE_MODES = frozenset("wax")
+_WRITE_METHODS = frozenset({"write_bytes", "write_text"})
+
+
+@dataclass(frozen=True)
+class PolicyViolation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _call_name(node: ast.Call) -> Optional[str]:
+    """Trailing name of the called thing: ``os.cpu_count`` -> ``cpu_count``."""
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def _is_os_replace(node: ast.Call) -> bool:
+    fn = node.func
+    return (
+        isinstance(fn, ast.Attribute)
+        and fn.attr == "replace"
+        and isinstance(fn.value, ast.Name)
+        and fn.value.id == "os"
+    )
+
+
+def _open_write_mode(node: ast.Call) -> Optional[str]:
+    """The mode string when this is ``open(..., "w*")``-like, else None."""
+    if _call_name(node) not in ("open", "fdopen"):
+        return None
+    mode_arg = None
+    if len(node.args) >= 2:
+        mode_arg = node.args[1]
+    for kw in node.keywords:
+        if kw.arg == "mode":
+            mode_arg = kw.value
+    if isinstance(mode_arg, ast.Constant) and isinstance(mode_arg.value, str):
+        if set(mode_arg.value) & _WRITE_MODES:
+            return mode_arg.value
+    return None
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.violations: List[PolicyViolation] = []
+        self._loop_depth = 0
+        self._fn_stack: List[ast.AST] = []
+        # module-level exemption: the file that implements _atomic_sink
+        self._defines_atomic_sink = "_atomic_sink" in source and any(
+            line.lstrip().startswith(("def _atomic_sink", "async def _atomic_sink"))
+            for line in source.splitlines()
+        )
+
+    # ----------------------------------------------------------- structure
+    def _visit_loop(self, node) -> None:
+        self._loop_depth += 1
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+        self._loop_depth -= 1
+
+    visit_For = visit_AsyncFor = visit_While = _visit_loop
+
+    def _visit_fn(self, node) -> None:
+        self._fn_stack.append(node)
+        outer_depth, self._loop_depth = self._loop_depth, 0
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+        self._loop_depth = outer_depth
+        self._fn_stack.pop()
+
+    visit_FunctionDef = visit_AsyncFunctionDef = _visit_fn
+
+    def _enclosing_fn_replaces(self) -> bool:
+        for fn in reversed(self._fn_stack):
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Call) and _is_os_replace(sub):
+                    return True
+        return False
+
+    # --------------------------------------------------------------- rules
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _call_name(node)
+
+        if name == "cpu_count":
+            self.violations.append(PolicyViolation(
+                "cpu-count", self.path, node.lineno,
+                "os.cpu_count() ignores the affinity mask/cgroup —"
+                " use len(os.sched_getaffinity(0))",
+            ))
+
+        if name == "fault_point" and self._loop_depth > 0:
+            self.violations.append(PolicyViolation(
+                "fault-point-in-loop", self.path, node.lineno,
+                "fault_point() inside a loop body: hooks belong on operation"
+                " boundaries, not per-element paths (crash_point marks"
+                " sanctioned per-artifact I/O steps)",
+            ))
+
+        mode = _open_write_mode(node)
+        is_write_method = (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr in _WRITE_METHODS
+        )
+        if (mode is not None or is_write_method) and not (
+            self._defines_atomic_sink or self._enclosing_fn_replaces()
+        ):
+            what = (
+                f"open(..., {mode!r})" if mode is not None
+                else f".{node.func.attr}(...)"
+            )
+            self.violations.append(PolicyViolation(
+                "atomic-sink", self.path, node.lineno,
+                f"path-destined write {what} outside _atomic_sink: a crash"
+                " here tears the final file — write through"
+                " repro.core.stream_io._atomic_sink or stage + os.replace",
+            ))
+
+        self.generic_visit(node)
+
+
+def lint_source(source: str, path: str = "<string>") -> List[PolicyViolation]:
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as err:
+        return [PolicyViolation("syntax", path, err.lineno or 0, str(err))]
+    checker = _Checker(path, source)
+    checker.visit(tree)
+    return checker.violations
+
+
+def lint_file(path) -> List[PolicyViolation]:
+    p = Path(path)
+    return lint_source(p.read_text(encoding="utf-8"), str(p))
+
+
+def lint_tree(root) -> List[PolicyViolation]:
+    """Lint every ``*.py`` under ``root`` (deterministic order)."""
+    out: List[PolicyViolation] = []
+    for p in sorted(Path(root).rglob("*.py")):
+        out.extend(lint_file(p))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv:
+        print("usage: python -m repro.analysis.policy DIR [DIR...]", file=sys.stderr)
+        return 2
+    violations: List[PolicyViolation] = []
+    for root in argv:
+        violations.extend(
+            lint_file(root) if Path(root).is_file() else lint_tree(root)
+        )
+    for v in violations:
+        print(v)
+    print(f"policy: {len(violations)} violation(s)")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -160,17 +160,29 @@ def _codec_name(codec_id: int) -> str:
 
 
 def _print_frame(frame: bytes, indent: str = "") -> None:
-    """Pretty-print one frame's embedded graph — payloads are never decoded."""
+    """Pretty-print one frame's embedded graph — payloads are never decoded.
+
+    Each node is annotated with its *inferred* input/output stream types
+    (``repro.analysis`` abstract interpretation over the codec signatures),
+    still without touching any payload bytes.
+    """
+    from repro.analysis import annotate_resolved_nodes
+
     version, n_inputs, nodes, stored = wire.read_frame(frame)
     print(
         f"{indent}frame v{version}: {len(frame)} bytes, {n_inputs} input(s),"
         f" {len(nodes)} codec node(s), {len(stored)} stored stream(s)"
     )
+    node_types, _report = annotate_resolved_nodes(
+        n_inputs, nodes, format_version=version
+    )
     for i, node in enumerate(nodes):
         ins = ",".join(map(str, node.inputs))
+        in_t, out_t = node_types[i]
         print(
             f"{indent}  node {i:3d}  {_codec_name(node.codec_id):<20}"
             f" in=[{ins}] out={node.n_out} header={len(node.header)}B"
+            f"  :: {in_t or '-'} -> {out_t or '-'}"
         )
     payload_total = 0
     for eid in sorted(stored):
@@ -391,7 +403,8 @@ def _cmd_train(args) -> int:
         comp = Compressor(plan, level=args.level if args.level is not None else 5)
         if not all(comp.roundtrip_check(b) for b in blobs):
             raise SystemExit(f"train: point {i} failed the losslessness check")
-        path.write_bytes(comp.serialize())
+        with stream_io._atomic_sink(path) as f:
+            f.write(comp.serialize())
         emitted.append((i, path))
     if not emitted:
         raise SystemExit(
@@ -402,6 +415,58 @@ def _cmd_train(args) -> int:
         print(f"wrote {path} ({path.stat().st_size} bytes, {tag}; verified lossless)")
     print(f"deploy with: python -m repro compress FILE --plan {emitted[0][1]}")
     return 0
+
+
+def _cmd_lint(args) -> int:
+    """Static plan analysis: type-check ``.ozp`` plans / profile specs.
+
+    Exit 0 when every target is error-free (warnings and infos don't fail
+    the lint), 1 when any target has a type error, 2 on unreadable targets.
+    """
+    import json as _json
+
+    from repro.analysis import check_plan
+    from repro.codecs.profiles import resolve_profile_spec
+    from repro.core.serialize import deserialize_plan
+
+    results = []
+    broken = False
+    for target in args.targets:
+        path = Path(target)
+        try:
+            if path.exists():
+                plan, meta = deserialize_plan(path.read_bytes())
+                fv = meta.get("format_version")
+            else:  # not a file: treat as a profile spec (`generic`, `csv:3`)
+                plan, fv = resolve_profile_spec(target), None
+        except (ValueError, KeyError, OSError) as err:
+            broken = True
+            results.append({"target": str(target), "ok": False,
+                            "load_error": str(err), "diagnostics": []})
+            continue
+        report = check_plan(plan, format_version=fv)
+        results.append({"target": str(target), **report.to_dict()})
+
+    n_err = sum(
+        1 for r in results
+        for d in r["diagnostics"] if d["severity"] == "error"
+    )
+    if args.json:
+        print(_json.dumps({"targets": results, "errors": n_err}, indent=1))
+    else:
+        for r in results:
+            verdict = "clean" if r["ok"] else "FAILED"
+            print(f"{r['target']}: {verdict}")
+            if r.get("load_error"):
+                print(f"  unreadable: {r['load_error']}")
+            for d in r["diagnostics"]:
+                loc = "".join(
+                    f" {k} {d[k]}" for k in ("node", "edge") if k in d
+                )
+                print(f"  {d['severity']}[{d['code']}]{loc}: {d['message']}")
+    if broken:
+        return 2
+    return 1 if n_err else 0
 
 
 def _cmd_profiles(_args) -> int:
@@ -657,6 +722,15 @@ def build_parser() -> argparse.ArgumentParser:
 
     p = sub.add_parser("profiles", help="list named profiles")
     p.set_defaults(fn=_cmd_profiles)
+
+    ln = sub.add_parser(
+        "lint", help="static type-check of .ozp plans / profile specs"
+    )
+    ln.add_argument("targets", nargs="+", metavar="PLAN.ozp|PROFILE",
+                    help="serialized plan files or profile specs to check")
+    ln.add_argument("--json", action="store_true",
+                    help="machine-readable diagnostics")
+    ln.set_defaults(fn=_cmd_lint)
 
     s = sub.add_parser(
         "serve", help="run the compression daemon (paper §VIII services)"

@@ -3,10 +3,33 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.codec import CodecSpec, register_codec
+from repro.core.codec import (
+    FIXED_STYPES,
+    CodecSig,
+    CodecSpec,
+    InPort,
+    ParamSpec,
+    register_codec,
+)
 from repro.core.message import Stream, SType, from_wire
 
 from ._util import UNSIGNED, HeaderReader, HeaderWriter
+
+
+def _interpret_numeric_transfer(atoms, params, n_out):
+    st, w = atoms[0]
+    want = params.get("width")
+    if want is None:
+        # default: reinterpret at the stream's own width (1 for serial)
+        if st == int(SType.SERIAL):
+            want = 1
+        elif w is not None:
+            want = w
+        else:
+            return [(int(SType.NUMERIC), None)]
+    if int(want) not in UNSIGNED:
+        return None
+    return [(int(SType.NUMERIC), int(want))]
 
 
 def _interpret_numeric_enc(streams, params):
@@ -39,5 +62,11 @@ register_codec(
         encode=_interpret_numeric_enc,
         decode=_interpret_numeric_dec,
         doc="reinterpret struct/serial bytes as host-endian numeric(w)",
+        sig=CodecSig(
+            inputs=(InPort(FIXED_STYPES),),
+            transfer=_interpret_numeric_transfer,
+            params=(ParamSpec("width", "int", choices=(1, 2, 4, 8),
+                              doc="target numeric width (default: stream width)"),),
+        ),
     )
 )

@@ -46,7 +46,7 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core.codec import CodecSpec, register_codec
+from repro.core.codec import CodecSig, CodecSpec, InPort, register_codec
 from repro.core.message import Stream, SType
 
 from ._stages import stage as _stage
@@ -65,6 +65,12 @@ _WRITE_CHUNK = 1 << 18  # symbols per bit-writer pass
 _DEC_GROUP_BYTES = 1 << 22  # decoded bytes per lane-decoder group
 
 _U64_1 = np.uint64(1)
+
+# byte streams only: serial, numeric(1), struct(1) — exactly what _as_u8 takes
+_BYTE_PORT = InPort(
+    frozenset((int(SType.SERIAL), int(SType.NUMERIC), int(SType.STRUCT))),
+    frozenset((1,)),
+)
 _U64_7 = np.uint64(7)
 _U64_3 = np.uint64(3)
 
@@ -371,6 +377,15 @@ register_codec(
         n_outputs=2,
         min_version=2,
         doc="canonical Huffman, lane-blocked for parallel decode",
+        sig=CodecSig(
+            inputs=(_BYTE_PORT,),
+            transfer=lambda atoms, params, n_out: [
+                (int(SType.SERIAL), 1),
+                (int(SType.NUMERIC), 8),
+            ],
+            expansion=2.0,  # <= 15 bits/byte worst case + lane offsets
+            packed_outputs=(0,),
+        ),
     )
 )
 
@@ -661,5 +676,14 @@ register_codec(
         n_outputs=2,
         min_version=2,
         doc="tANS (FSE): table-driven ANS, lane-blocked (paper §II-A; Duda/Collet)",
+        sig=CodecSig(
+            inputs=(_BYTE_PORT,),
+            transfer=lambda atoms, params, n_out: [
+                (int(SType.SERIAL), 1),
+                (int(SType.NUMERIC), 4),
+            ],
+            expansion=2.0,
+            packed_outputs=(0,),
+        ),
     )
 )

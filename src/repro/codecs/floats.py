@@ -16,7 +16,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.codec import CodecSpec, register_backend_codec, register_codec
+from repro.core.codec import (
+    CodecSig,
+    CodecSpec,
+    InPort,
+    ParamSpec,
+    register_backend_codec,
+    register_codec,
+)
 from repro.core.message import Stream, SType
 
 from ._util import (
@@ -85,6 +92,26 @@ def _float_split_dec(outs, header):
     return [numeric_stream(out)]
 
 
+def _float_split_transfer(atoms, params, n_out):
+    st, w = atoms[0]
+    fmt = params.get("fmt")
+    if fmt is None:
+        if w is None:
+            return [(int(SType.SERIAL), 1), (int(SType.NUMERIC), None),
+                    (int(SType.NUMERIC), None)]
+        fmt = _FMT_BY_WIDTH.get(w)
+    if fmt not in FORMATS:
+        return None
+    fmt_w = FORMATS[fmt][0]
+    if w is not None and w != fmt_w:
+        return None  # fmt tag must match the stream width
+    return [
+        (int(SType.SERIAL), 1),
+        (int(SType.NUMERIC), int(np.dtype(_EXP_DTYPE[fmt]).itemsize)),
+        (int(SType.NUMERIC), int(np.dtype(_MAN_DTYPE[fmt]).itemsize)),
+    ]
+
+
 register_codec(
     CodecSpec(
         "float_split",
@@ -94,6 +121,13 @@ register_codec(
         n_outputs=3,
         min_version=3,
         doc="sign/exponent/mantissa planes (paper §VIII checkpoint compression)",
+        sig=CodecSig(
+            inputs=(InPort(frozenset((int(SType.NUMERIC),)), frozenset((2, 4, 8))),),
+            transfer=_float_split_transfer,
+            params=(ParamSpec("fmt", "int", choices=(0, 1, 2, 3),
+                              doc="0=bf16 1=f16 2=f32 3=f64 (default by width)"),),
+            expansion=1.3,  # planes widen to whole dtypes + packed sign bits
+        ),
     )
 )
 

@@ -35,11 +35,17 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.codec import CodecSpec, register_codec
+from repro.core.codec import (
+    CodecSig,
+    CodecSpec,
+    InPort,
+    ParamSpec,
+    register_codec,
+)
 from repro.core.engine import CompressionCtx, compress
 from repro.core.graph import GraphBuilder, Plan
 from repro.core.message import Stream, SType, strings as mk_strings
-from repro.core.selector import SelectorSpec, register_selector
+from repro.core.selector import SelectorSig, SelectorSpec, register_selector
 
 from ._util import UNSIGNED, HeaderReader, HeaderWriter, numeric_stream
 from .parse import _canonical_int
@@ -183,6 +189,18 @@ register_codec(
         n_outputs=4,
         min_version=4,
         doc="text edge list -> (src, dst, bitmap, exceptions); lossless always",
+        sig=CodecSig(
+            inputs=(InPort(frozenset((int(SType.SERIAL),))),),
+            transfer=lambda atoms, params, n_out: [
+                (int(SType.NUMERIC), 8),
+                (int(SType.NUMERIC), 8),
+                (int(SType.SERIAL), 1),
+                (int(SType.STRING), 1),
+            ],
+            params=(ParamSpec("sep", "str",
+                              doc="edge separator; 'auto' probes tab/space/,/;"),),
+            expansion=3.0,  # short decimal ids widen to u64 columns
+        ),
     )
 )
 
@@ -225,11 +243,30 @@ register_codec(
         n_outputs=2,
         min_version=4,
         doc="interleaved fixed-width (u, v) pairs -> (src, dst) columns",
+        sig=CodecSig(
+            inputs=(InPort(frozenset((int(SType.SERIAL),))),),
+            transfer=lambda atoms, params, n_out: (
+                None
+                if int(params.get("width", 4)) not in (2, 4, 8)
+                else [(int(SType.NUMERIC), int(params.get("width", 4)))] * 2
+            ),
+            params=(ParamSpec("width", "int", choices=(2, 4, 8),
+                              doc="bytes per node id (default 4)"),),
+        ),
     )
 )
 
 
 # -------------------------------------------------------------------- adj_gap
+def _adj_gap_transfer(atoms, params, n_out):
+    # both columns must share one concrete width; unknowns stay compatible
+    widths = {w for _, w in atoms if w is not None}
+    if len(widths) > 1 or int(params.get("window", 0) or 0) < 0:
+        return None
+    N = int(SType.NUMERIC)
+    return [(N, 8), (N, 8), (N, 8), (int(SType.SERIAL), 1), (N, 8)]
+
+
 def _adj_runs(src: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Run-length group the src column -> (run_starts, nodes, degrees)."""
     n = src.size
@@ -427,6 +464,16 @@ register_codec(
         n_outputs=5,
         min_version=4,
         doc="edge columns -> degree + delta-gap + reference coding (Zuckerli)",
+        sig=CodecSig(
+            inputs=(
+                InPort(frozenset((int(SType.NUMERIC),))),
+                InPort(frozenset((int(SType.NUMERIC),))),
+            ),
+            transfer=_adj_gap_transfer,
+            params=(ParamSpec("window", "int",
+                              doc="reference-list search window (0 = plain gaps)"),),
+            expansion=3.0,  # narrow ids widen to u64 planes + copy bitmap
+        ),
     )
 )
 
@@ -496,5 +543,9 @@ register_selector(
         _adjacency_auto,
         n_inputs=2,
         doc="adjacency backend by trial: reference vs plain gaps vs columns",
+        sig=SelectorSig(inputs=(
+            InPort(frozenset((int(SType.NUMERIC),))),
+            InPort(frozenset((int(SType.NUMERIC),))),
+        )),
     )
 )

@@ -42,7 +42,14 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core.codec import CodecSpec, register_codec
+from repro.core.codec import (
+    FIXED_STYPES,
+    CodecSig,
+    CodecSpec,
+    InPort,
+    ParamSpec,
+    register_codec,
+)
 from repro.core.message import Stream, SType
 
 from ._stages import stage as _stage
@@ -505,6 +512,16 @@ register_codec(
         n_outputs=4,
         min_version=2,
         doc="greedy LZ77 -> (literals, lit-runs, match-lens, offsets) streams",
+        sig=CodecSig(
+            inputs=(InPort(FIXED_STYPES),),
+            transfer=lambda atoms, params, n_out: [
+                (int(SType.SERIAL), 1),
+                (int(SType.NUMERIC), 4),
+                (int(SType.NUMERIC), 4),
+                (int(SType.NUMERIC), 4),
+            ],
+            expansion=2.0,
+        ),
     )
 )
 
@@ -543,6 +560,13 @@ register_codec(
         min_version=3,
         doc="stdlib LZMA leaf — the ratio-end generic backend, as OpenZL"
         " embeds zstd-class LZ stages behind its transforms",
+        sig=CodecSig(
+            inputs=(InPort(FIXED_STYPES),),
+            transfer=lambda atoms, params, n_out: [(int(SType.SERIAL), 1)],
+            params=(ParamSpec("preset", "int", doc="stdlib compression level"),),
+            expansion=1.1,
+            packed_outputs=(0,),
+        ),
     )
 )
 
@@ -581,6 +605,13 @@ register_codec(
         min_version=3,
         doc="stdlib BWT backend (paper §II-B mentions BWT+MTF; block-sorting"
         " is a poor TPU fit so it ships as a host-side leaf only)",
+        sig=CodecSig(
+            inputs=(InPort(FIXED_STYPES),),
+            transfer=lambda atoms, params, n_out: [(int(SType.SERIAL), 1)],
+            params=(ParamSpec("level", "int", doc="stdlib compression level"),),
+            expansion=1.1,
+            packed_outputs=(0,),
+        ),
     )
 )
 
@@ -614,5 +645,12 @@ register_codec(
         decode=_zlib_dec,
         min_version=3,
         doc="stdlib DEFLATE leaf (stands in for OpenZL's optimized C LZ kernels)",
+        sig=CodecSig(
+            inputs=(InPort(FIXED_STYPES),),
+            transfer=lambda atoms, params, n_out: [(int(SType.SERIAL), 1)],
+            params=(ParamSpec("level", "int", doc="stdlib compression level"),),
+            expansion=1.1,
+            packed_outputs=(0,),
+        ),
     )
 )

@@ -16,7 +16,16 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.core.codec import CodecSpec, register_backend_codec, register_codec
+from repro.core.codec import (
+    ANY_STYPES,
+    FIXED_STYPES,
+    CodecSig,
+    CodecSpec,
+    InPort,
+    ParamSpec,
+    register_backend_codec,
+    register_codec,
+)
 from repro.core.message import Stream, SType, from_wire
 
 from ._util import (
@@ -34,6 +43,12 @@ def _require_numeric(s: Stream, op: str) -> np.ndarray:
     if s.stype != SType.NUMERIC:
         raise ValueError(f"{op}: numeric streams only, got {s.stype.name}")
     return s.data.view(UNSIGNED[s.width])
+
+
+_SERIAL = int(SType.SERIAL)
+_NUMERIC = int(SType.NUMERIC)
+_NUM_PORT = InPort(frozenset((_NUMERIC,)))
+_BYTEPLANE_PORT = InPort(frozenset((int(SType.STRUCT), _NUMERIC)))
 
 
 # --------------------------------------------------------------------- delta
@@ -61,6 +76,10 @@ register_codec(
         encode=_delta_enc,
         decode=_delta_dec,
         doc="wrapping first-difference on the unsigned view (paper §II-B)",
+        sig=CodecSig(
+            inputs=(_NUM_PORT,),
+            transfer=lambda atoms, params, n_out: [atoms[0]],
+        ),
     )
 )
 
@@ -90,6 +109,10 @@ register_codec(
         encode=_zigzag_enc,
         decode=_zigzag_dec,
         doc="signed -> small-unsigned mapping ((x<<1) ^ (x>>w-1))",
+        sig=CodecSig(
+            inputs=(_NUM_PORT,),
+            transfer=lambda atoms, params, n_out: [atoms[0]],
+        ),
     )
 )
 
@@ -124,6 +147,10 @@ register_codec(
         encode=_transpose_enc,
         decode=_transpose_dec,
         doc="byte-plane shuffle (Blosc-style); makes high bytes runs (paper §IV)",
+        sig=CodecSig(
+            inputs=(_BYTEPLANE_PORT,),
+            transfer=lambda atoms, params, n_out: [(_SERIAL, 1)],
+        ),
     )
 )
 
@@ -161,6 +188,14 @@ register_codec(
         decode=_transpose_split_dec,
         n_outputs=-1,
         doc="byte planes as separate outputs so each plane gets its own backend",
+        sig=CodecSig(
+            inputs=(_BYTEPLANE_PORT,),
+            transfer=lambda atoms, params, n_out: (
+                None
+                if atoms[0][1] is not None and atoms[0][1] != n_out
+                else [(_SERIAL, 1)] * n_out
+            ),
+        ),
     )
 )
 
@@ -234,6 +269,12 @@ register_codec(
         encode=_bitpack_enc,
         decode=_bitpack_dec,
         doc="pack values into ceil(log2(max+1)) bits, LSB-first",
+        sig=CodecSig(
+            inputs=(_NUM_PORT,),
+            transfer=lambda atoms, params, n_out: [(_SERIAL, 1)],
+            params=(ParamSpec("bits", "int", doc="explicit bits/value (0 = fit to max)"),),
+            packed_outputs=(0,),
+        ),
     )
 )
 
@@ -270,6 +311,11 @@ register_codec(
         encode=_range_pack_enc,
         decode=_range_pack_dec,
         doc="bounded ints: subtract min then bitpack (paper §IV SDEC0 idea)",
+        sig=CodecSig(
+            inputs=(_NUM_PORT,),
+            transfer=lambda atoms, params, n_out: [(_SERIAL, 1)],
+            packed_outputs=(0,),
+        ),
     )
 )
 
@@ -315,6 +361,11 @@ register_codec(
         decode=_rle_dec,
         n_outputs=2,
         doc="run-length: (values, u32 run lengths) (paper §II-C)",
+        sig=CodecSig(
+            inputs=(InPort(FIXED_STYPES),),
+            transfer=lambda atoms, params, n_out: [atoms[0], (_NUMERIC, 4)],
+            expansion=5.0,  # worst case: no runs -> values + 4B/element
+        ),
     )
 )
 
@@ -385,6 +436,11 @@ register_codec(
         n_outputs=2,
         min_version=2,
         doc="(alphabet, indices) split — the paper's motivating codec (§III-C)",
+        sig=CodecSig(
+            inputs=(InPort(ANY_STYPES),),
+            transfer=lambda atoms, params, n_out: [atoms[0], (_NUMERIC, 4)],
+            expansion=5.0,  # worst case: all-unique u8 -> alphabet + 4B indices
+        ),
     )
 )
 
@@ -481,6 +537,13 @@ register_codec(
         decode=_fused_dec,
         min_version=4,
         doc="single-pass delta+bitpack (device kernel K1); u32-domain deltas",
+        sig=CodecSig(
+            inputs=(InPort(frozenset((_NUMERIC,)), frozenset((1, 2, 4))),),
+            transfer=lambda atoms, params, n_out: [(_SERIAL, 1)],
+            params=(ParamSpec("bits", "int", choices=FUSED_BITS_CHOICES,
+                              doc="explicit packing width (0 = dynamic exact fit)"),),
+            packed_outputs=(0,),
+        ),
     )
 )
 

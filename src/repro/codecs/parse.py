@@ -19,7 +19,13 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.codec import CodecSpec, register_codec
+from repro.core.codec import (
+    CodecSig,
+    CodecSpec,
+    InPort,
+    ParamSpec,
+    register_codec,
+)
 from repro.core.message import Stream, SType, strings as mk_strings
 
 from ._util import HeaderReader, HeaderWriter, numeric_stream
@@ -118,6 +124,12 @@ register_codec(
         n_outputs=-1,
         min_version=2,
         doc="rectangular CSV -> per-column string streams (frontend, §IV)",
+        sig=CodecSig(
+            inputs=(InPort(frozenset((int(SType.SERIAL),))),),
+            transfer=lambda atoms, params, n_out: [(int(SType.STRING), 1)] * n_out,
+            params=(ParamSpec("sep", "str", doc="column separator (default ',')"),),
+            expansion=2.0,  # per-cell u32 lengths replace the separators
+        ),
     )
 )
 
@@ -195,6 +207,15 @@ register_codec(
         n_outputs=3,
         min_version=2,
         doc="ASCII ints -> (bitmap, i64 values, exceptions); lossless always",
+        sig=CodecSig(
+            inputs=(InPort(frozenset((int(SType.STRING),))),),
+            transfer=lambda atoms, params, n_out: [
+                (int(SType.SERIAL), 1),
+                (int(SType.NUMERIC), 8),
+                (int(SType.STRING), 1),
+            ],
+            expansion=2.0,  # short digit strings widen to 8-byte values
+        ),
     )
 )
 

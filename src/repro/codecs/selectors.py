@@ -17,7 +17,13 @@ import numpy as np
 from repro.core.engine import CompressionCtx, compress
 from repro.core.graph import GraphBuilder, Plan, pipeline
 from repro.core.message import Stream, SType
-from repro.core.selector import SelectorSpec, register_selector
+from repro.core.codec import ANY_STYPES, FIXED_STYPES, InPort
+from repro.core.selector import SelectorSig, SelectorSpec, register_selector
+
+_ANY_SIG = SelectorSig(inputs=(InPort(ANY_STYPES),))
+# designed for byte-shaped streams (the trial menus degrade to store elsewhere)
+_BYTES_SIG = SelectorSig(inputs=(InPort(FIXED_STYPES),))
+_NUM_SIG = SelectorSig(inputs=(InPort(frozenset((int(SType.NUMERIC),))),))
 
 SAMPLE_BYTES = 1 << 16  # trial compressions run on a bounded prefix
 
@@ -151,7 +157,19 @@ def _generic_auto(streams, params, ctx):
     return _bytes_auto(streams, params, ctx)
 
 
-register_selector(SelectorSpec("entropy_auto", _entropy_auto, doc="store/huffman/fse/zlib by trial"))
-register_selector(SelectorSpec("numeric_auto", _numeric_auto, doc="numeric backend by trial"))
-register_selector(SelectorSpec("bytes_auto", _bytes_auto, doc="byte backend by trial"))
-register_selector(SelectorSpec("generic_auto", _generic_auto, doc="type-dispatching default backend"))
+register_selector(SelectorSpec(
+    "entropy_auto", _entropy_auto, doc="store/huffman/fse/zlib by trial",
+    sig=_BYTES_SIG,
+))
+register_selector(SelectorSpec(
+    "numeric_auto", _numeric_auto, doc="numeric backend by trial",
+    sig=_NUM_SIG,
+))
+register_selector(SelectorSpec(
+    "bytes_auto", _bytes_auto, doc="byte backend by trial",
+    sig=_BYTES_SIG,
+))
+register_selector(SelectorSpec(
+    "generic_auto", _generic_auto, doc="type-dispatching default backend",
+    sig=_ANY_SIG,
+))

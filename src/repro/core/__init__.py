@@ -40,6 +40,7 @@ from .engine import (  # noqa: F401
     resolve,
     resolve_cache_clear,
     resolve_cache_info,
+    set_resolve_check,
     stream_meta,
 )
 from .versioning import (  # noqa: F401

@@ -32,6 +32,14 @@ from repro.reliability.faults import fault_point
 from .message import Stream
 
 __all__ = [
+    "Atom",
+    "InPort",
+    "ParamSpec",
+    "CodecSig",
+    "ANY_STYPES",
+    "FIXED_STYPES",
+    "BYTE_STYPES",
+    "NUMERIC_WIDTHS",
     "CodecSpec",
     "register_codec",
     "get_codec",
@@ -48,6 +56,85 @@ EncodeFn = Callable[..., Tuple[List[Stream], bytes]]
 DecodeFn = Callable[[Sequence[Stream], bytes], List[Stream]]
 
 
+# ------------------------------------------------------- stream-type signatures
+#
+# The static contract of a codec over the stream-type lattice (paper §III-C:
+# edges are *typed*).  An ``Atom`` is one point of the lattice: ``(stype,
+# width)`` with ``width is None`` meaning "any width legal for that stype".
+# Signatures are declarative data + one pure transfer function, which lets
+# ``repro.analysis`` abstractly interpret whole plans before a byte is
+# compressed, and lets the conformance fuzz suite tie every declaration to the
+# encoder's real acceptance behavior.
+
+Atom = Tuple[int, Optional[int]]  # (int(SType), width-or-None)
+
+# SType values, spelled as ints so signature declarations stay cheap to import:
+# SERIAL=0, STRUCT=1, NUMERIC=2, STRING=3 (see core.message.SType).
+ANY_STYPES = frozenset((0, 1, 2, 3))
+FIXED_STYPES = frozenset((0, 1, 2))  # everything except STRING
+BYTE_STYPES = frozenset((0,))  # SERIAL only
+NUMERIC_WIDTHS = frozenset((1, 2, 4, 8))
+
+
+@dataclass(frozen=True)
+class InPort:
+    """Acceptance constraint for one codec input edge.
+
+    ``widths is None`` accepts any width legal for the stype; otherwise the
+    concrete width must be in the set (an unknown width *may* match — the
+    analyzer only reports definite errors).
+    """
+
+    stypes: frozenset
+    widths: Optional[frozenset] = None
+
+    def accepts(self, atom: Atom) -> bool:
+        st, w = atom
+        if st not in self.stypes:
+            return False
+        if self.widths is not None and w is not None and w not in self.widths:
+            return False
+        return True
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Schema entry for one codec parameter (documentation + lint surface)."""
+
+    name: str
+    kind: str  # "int" | "int_list" | "str" | "float"
+    required: bool = False
+    choices: Optional[tuple] = None
+    doc: str = ""
+
+
+@dataclass(frozen=True)
+class CodecSig:
+    """Declared stream-type signature of a codec.
+
+    * ``inputs`` — one ``InPort`` per declared input; for variadic codecs
+      (``n_inputs == -1``) a single port applied to every wired input.
+    * ``transfer(atoms, params, n_out)`` — the abstract output function: given
+      one concrete ``Atom`` per input (widths may be ``None`` = unknown) plus
+      the node's params and declared output count, return the list of output
+      atoms, or ``None`` when the encoder would reject this combination (the
+      place for cross-input constraints — concat's "all same type", adj_gap's
+      equal widths — and params/width consistency like float_split's fmt).
+      Must be pure and total (never raise).
+    * ``params`` — declared parameter schema.
+    * ``expansion`` — worst-case output-bytes/input-bytes bound across all
+      outputs combined (drives the per-terminal-edge expansion diagnostic).
+    * ``packed_outputs`` — output indices carrying entropy-packed (already
+      incompressible) bytes; feeding them onward is flagged by the linter.
+    """
+
+    inputs: Tuple[InPort, ...]
+    transfer: Callable[[Tuple[Atom, ...], dict, int], Optional[List[Atom]]]
+    params: Tuple[ParamSpec, ...] = ()
+    expansion: float = 1.0
+    packed_outputs: Tuple[int, ...] = ()
+
+
 @dataclass(frozen=True)
 class CodecSpec:
     name: str
@@ -58,6 +145,7 @@ class CodecSpec:
     n_outputs: int = 1  # -1 => variadic (actual count recorded per node on wire)
     min_version: int = 1  # first format version that understands this codec
     doc: str = ""
+    sig: Optional[CodecSig] = None  # stream-type signature (coverage-enforced)
 
     def run_encode(self, streams: Sequence[Stream], params: Optional[dict] = None):
         params = dict(params or {})

@@ -93,6 +93,7 @@ __all__ = [
     "fuse_resolved",
     "resolve_cache_info",
     "resolve_cache_clear",
+    "set_resolve_check",
     "compress",
     "decompress",
     "decompress_bytes",
@@ -316,6 +317,34 @@ def resolve_cache_clear() -> None:
         _cache_stats["misses"] = 0
 
 
+# Opt-in debug assert: type-check every plan entering resolve() against the
+# concrete input types (repro.analysis).  Off by default — the static check
+# belongs at the registration/training boundary, not the per-call hot path.
+_RESOLVE_CHECK = os.environ.get("REPRO_RESOLVE_CHECK", "") not in ("", "0")
+
+
+def set_resolve_check(enabled: bool) -> None:
+    """Toggle the ``REPRO_RESOLVE_CHECK`` debug assert programmatically."""
+    global _RESOLVE_CHECK
+    _RESOLVE_CHECK = bool(enabled)
+
+
+def _debug_check_plan(plan: Plan, metas, ctx) -> None:
+    from repro.analysis import PlanTypeError, check_plan  # lazy: no cycle
+
+    report = check_plan(
+        plan,
+        format_version=ctx.format_version,
+        input_atoms=[(int(m.stype), int(m.width)) for m in metas],
+    )
+    if not report.ok:
+        raise PlanTypeError(
+            f"resolve check: plan {plan.name!r} is ill-typed for these"
+            f" inputs: {'; '.join(str(d) for d in report.errors)}",
+            report.errors,
+        )
+
+
 def _engine_after_fork() -> None:
     """Re-arm the module-level cache lock in a forked child.
 
@@ -391,6 +420,8 @@ def _resolve_impl(
             _cache_stats["misses"] += 1
 
     plan.validate()
+    if _RESOLVE_CHECK:
+        _debug_check_plan(plan, metas, ctx)
     if plan.is_resolved:
         steps = _flatten(plan, ctx)
     else:
@@ -758,7 +789,7 @@ class _SessionBase:
         with self._pool_lock:
             if self._pool is None:
                 self._pool = ThreadPoolExecutor(
-                    max_workers=self.n_workers or (os.cpu_count() or 1),
+                    max_workers=self.n_workers or len(os.sched_getaffinity(0)),
                     thread_name_prefix=self._pool_name,
                 )
             return self._pool
@@ -779,7 +810,7 @@ class _SessionBase:
         """Max chunks in flight: bounds peak memory at ~window × chunk size."""
         if self._window:
             return max(1, self._window)
-        return 2 * (self.n_workers or (os.cpu_count() or 1))
+        return 2 * (self.n_workers or len(os.sched_getaffinity(0)))
 
     def _window_map(
         self, fn: Callable, items: Iterable, head: Optional[list] = None
@@ -1562,9 +1593,19 @@ def _decompress_single(frame: bytes) -> List[Stream]:
         counter += node.n_out
 
     for node, out_ids in zip(reversed(nodes), reversed(out_ids_per_node)):
-        spec = get_codec_by_id(node.codec_id)
+        try:
+            spec = get_codec_by_id(node.codec_id)
+        except KeyError:
+            # fail closed: an unknown id is a frame from a newer writer (or
+            # corruption), not a programming error — name the id and the gate
+            raise wire.FrameError(
+                f"frame v{version} references unknown codec id"
+                f" {node.codec_id} — newer writer than this decoder"
+                f" (or corrupt frame); min_version gating only covers"
+                f" registered codecs"
+            ) from None
         if spec.min_version > version:
-            raise ValueError(
+            raise wire.FrameError(
                 f"frame v{version} contains codec {spec.name!r}"
                 f" (min_version {spec.min_version}) — corrupt frame?"
             )

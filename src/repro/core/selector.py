@@ -12,14 +12,36 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from .codec import InPort
 from .graph import Plan
 from .message import Stream
 
-__all__ = ["SelectorSpec", "register_selector", "get_selector", "all_selectors"]
+__all__ = [
+    "SelectorSig",
+    "SelectorSpec",
+    "register_selector",
+    "get_selector",
+    "all_selectors",
+]
 
 SelectorFn = Callable[[Sequence[Stream], dict, "CompressionCtx"], Plan]
+
+
+@dataclass(frozen=True)
+class SelectorSig:
+    """Declared input signature of a selector.
+
+    Selectors expand at compression time and have no static outputs — the
+    signature only states which stream types the selector is *designed* for.
+    Every shipped selector degrades to ``store`` when its trial menu rejects
+    the input, so a mismatch is a lint warning (wasted trials), never a hard
+    type error.  ``inputs`` holds one ``InPort`` per declared input; for
+    variadic selectors a single port applied to every wired input.
+    """
+
+    inputs: Tuple[InPort, ...]
 
 
 @dataclass(frozen=True)
@@ -28,6 +50,7 @@ class SelectorSpec:
     fn: SelectorFn
     n_inputs: int = 1  # -1 => variadic
     doc: str = ""
+    sig: Optional[SelectorSig] = None  # input signature (coverage-enforced)
 
 
 _SELECTORS: Dict[str, SelectorSpec] = {}

@@ -25,6 +25,7 @@ from pathlib import Path
 import jax
 
 from repro.configs import all_archs, get_arch
+from repro.core.stream_io import _atomic_sink
 from repro.launch.cells import build_cell
 from repro.launch.mesh import make_production_mesh
 
@@ -302,7 +303,8 @@ def main() -> int:
                 arch_id, shape_name, multi_pod, args.variant,
                 args.grad_compress, args.unroll, args.serve_mesh,
             )
-            path.write_text(json.dumps(rec, indent=1))
+            with _atomic_sink(path) as f:
+                f.write(json.dumps(rec, indent=1).encode())
             status = rec["status"]
             n_err += status == "error"
             extra = ""

@@ -137,8 +137,10 @@ def run_victim(scenario: str, workdir) -> None:
         dst = workdir / "out.ozl"
         sink_plan = _sink_plan()
         if not setup_done.exists():
-            src.write_bytes(sink_payload(1))
-            old.write_bytes(sink_payload(0))
+            with stream_io._atomic_sink(src) as f:
+                f.write(sink_payload(1))
+            with stream_io._atomic_sink(old) as f:
+                f.write(sink_payload(0))
             stream_io.compress_file(old, dst, sink_plan, chunk_bytes=SINK_CHUNK_BYTES)
             setup_done.touch()
         _armed(
@@ -151,9 +153,10 @@ def run_victim(scenario: str, workdir) -> None:
         raise SystemExit(f"unknown crash-kill scenario {scenario!r}")
 
     if plan is not None and plan.record:
-        (workdir / SITES_FILE).write_text(
-            json.dumps([[name, occ] for name, occ in plan.sites])
-        )
+        from repro.core.stream_io import _atomic_sink
+
+        with _atomic_sink(workdir / SITES_FILE) as f:
+            f.write(json.dumps([[name, occ] for name, occ in plan.sites]).encode())
 
 
 # ------------------------------------------------------------------ harness

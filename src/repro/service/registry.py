@@ -58,6 +58,17 @@ class PlanRegistry:
         *,
         source: str = "api",
     ) -> RegisteredPlan:
+        # fail closed: an ill-typed plan would die mid-request on the first
+        # matching payload — reject it at the door with the full diagnosis
+        from repro.analysis import PlanTypeError, check_plan
+
+        report = check_plan(comp.plan, format_version=comp.format_version)
+        if not report.ok:
+            raise PlanTypeError(
+                f"plan {comp.name or comp.plan.name or '?'!s} is ill-typed:"
+                f" {'; '.join(str(d) for d in report.errors)}",
+                report.errors,
+            )
         digest = plan_digest(
             comp.plan, format_version=comp.format_version, level=comp.level
         )

@@ -647,8 +647,11 @@ class CompressionServer:
                     # request-level failure with intact framing: report and
                     # keep serving this connection
                     self.core.bump(errors=1)
-                    if isinstance(err, RequestError):
-                        msg, extra = str(err), err.extra
+                    # duck-typed: RequestError and analysis.PlanTypeError both
+                    # carry ``extra`` (machine-readable error header keys)
+                    extra = getattr(err, "extra", None)
+                    if isinstance(extra, dict):
+                        msg = str(err)
                     else:
                         msg, extra = f"{type(err).__name__}: {err}", None
                     try:

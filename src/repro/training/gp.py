@@ -164,13 +164,21 @@ def random_genome(sig: Sig, rng: random.Random, depth: int = 0, max_depth: int =
 
 # --------------------------------------------------------- genome -> Plan
 def emit_genome(g: GraphBuilder, genome: Optional[GNode], edge: int, sig: Sig) -> None:
-    """Inline a genome into an existing builder, rooted at `edge`."""
+    """Inline a genome into an existing builder, rooted at `edge`.
+
+    Permissive: a codec applied off its `_out_sigs` menu still *emits* (with
+    children typed best-effort) — the compiled plan is ill-typed, and either
+    the trainer's static pruning or the trial compression rejects it.  This
+    keeps "can this genome be built?" (syntax) separate from "is it typed?"
+    (the analyzer's job), so pruning measurably replaces failed encodes
+    instead of hiding behind a construction-time raise.
+    """
     if genome is None:
         return  # terminal: stream stored as-is
     outs_sigs = _out_sigs(genome.codec, genome.params, sig)
-    if outs_sigs is None:
-        raise ValueError(f"genome applies {genome.codec} to {sig}")
     n_out = n_out_for(genome.codec, genome.params, sig)
+    if outs_sigs is None:
+        outs_sigs = [sig] * n_out
     outs = g.add(genome.codec, edge, n_out=n_out, **genome.params)
     if isinstance(outs, int):
         outs = [outs]

@@ -399,20 +399,24 @@ class TrainerService:
         level: int = 5,
         session_cache_size: int = 1024,
         table_cache_size: int = 512,
+        static_prune: bool = True,
     ):
-        self.workers = int(workers) if workers else (os.cpu_count() or 1)
+        self.workers = int(workers) if workers else len(os.sched_getaffinity(0))
         if self.workers < 1:
             raise ValueError("workers must be >= 1")
         self.level = level
+        self.static_prune = bool(static_prune)
         self.scratch = ExecScratch(table_cache_size)
         self._dec = DecompressorSession(scratch=self.scratch)
         self._sessions: "OrderedDict[Plan, CompressorSession]" = OrderedDict()
         self._session_cache_size = session_cache_size
+        self._check_cache: "OrderedDict[tuple, bool]" = OrderedDict()
         self._lock = threading.Lock()
         self._pool = None
         self.stats: Dict[str, float] = {
             "evaluations": 0,
             "invalid": 0,
+            "pruned_static": 0,
             "eval_wall_seconds": 0.0,
             "session_hits": 0,
             "session_misses": 0,
@@ -460,9 +464,33 @@ class TrainerService:
                 self.stats[k] += v
 
     # ------------------------------------------------------------ evaluation
+    def _statically_rejected(self, plan: Plan, sig: Tuple[int, int]) -> bool:
+        """True when the analyzer proves the plan cannot encode a stream of
+        this signature.  Cached per (plan, sig): elites recur every
+        generation.  The analyzer is *definite* — it only errors on plans the
+        encoder would refuse — so pruning changes which candidates get trial
+        compressions, never their objectives (INVALID either way)."""
+        key = (plan, tuple(sig))
+        with self._lock:
+            hit = self._check_cache.get(key)
+            if hit is not None:
+                self._check_cache.move_to_end(key)
+                return hit
+        from repro.analysis import check_plan  # lazy: trainer has no cycle
+
+        rejected = not check_plan(plan, input_atoms=[tuple(sig)]).ok
+        with self._lock:
+            self._check_cache[key] = rejected
+            while len(self._check_cache) > self._session_cache_size:
+                self._check_cache.popitem(last=False)
+        return rejected
+
     def _evaluate_plan(
         self, plan: Plan, sample: Stream, sig: Tuple[int, int]
     ) -> Tuple[float, float]:
+        if self.static_prune and self._statically_rejected(plan, sig):
+            self._bump(evaluations=1, invalid=1, pruned_static=1)
+            return INVALID
         try:
             sess = self._session_for(plan)
             frame, trace, wall = sess.compress_traced([sample])
@@ -554,6 +582,7 @@ def train(
     seed: int = 0,
     workers: Optional[int] = None,
     service: Optional[TrainerService] = None,
+    static_prune: bool = True,
     verbose: bool = False,
 ) -> TrainedCompressor:
     """Train a compressor from sample inputs (each a list of input streams).
@@ -566,7 +595,7 @@ def train(
     t_start = time.perf_counter()
     own_service = service is None
     if service is None:
-        service = TrainerService(workers)
+        service = TrainerService(workers, static_prune=static_prune)
     try:
         # 1. parse every sample and concatenate slot-wise
         parsed = [frontend.parse(s) for s in sample_inputs]
@@ -647,6 +676,7 @@ def train(
                 "workers": float(service.workers),
                 "evaluations": float(service.stats["evaluations"]),
                 "invalid_evaluations": float(service.stats["invalid"]),
+                "pruned_static": float(service.stats["pruned_static"]),
                 "eval_wall_seconds": float(service.stats["eval_wall_seconds"]),
                 "session_hits": float(service.stats["session_hits"]),
                 "session_misses": float(service.stats["session_misses"]),

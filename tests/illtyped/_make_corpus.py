@@ -1,0 +1,89 @@
+"""Seeded ill-typed plan corpus: plans the static analyzer must reject.
+
+Each ``.ozp`` here deserializes fine (structurally valid) but carries a
+definite type error — the analyzer catalogue's E_* codes — and must be
+rejected fail-closed at every entry point: ``PlanRegistry.register_*``,
+``repro lint``, and the trainer's static pruning.  Regenerate with:
+
+    PYTHONPATH=src python tests/illtyped/_make_corpus.py
+
+``manifest.json`` maps each file to the diagnostic code it must trigger.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[2] / "src"))
+
+from repro.core.graph import GraphBuilder  # noqa: E402
+from repro.core.serialize import serialize_plan  # noqa: E402
+
+ILLTYPED_DIR = Path(__file__).resolve().parent
+
+
+def bad_type_entropy_delta():
+    """huffman's serial output fed to delta (numeric-only) -> E_TYPE."""
+    g = GraphBuilder(1)
+    lit, lens = g.add("huffman", g.input(0), n_out=2)
+    g.add("delta", lit)
+    g.add("store", lens)
+    return g.build("bad_type_entropy_delta"), "E_TYPE", None
+
+
+def bad_type_string_zlib():
+    """parse_numeric's STRING residue fed to zlib_backend -> E_TYPE."""
+    g = GraphBuilder(1)
+    mask, nums, residue = g.add("parse_numeric", g.input(0), n_out=3)
+    g.add("zlib_backend", residue, level=6)
+    g.add("store", mask)
+    g.add("store", nums)
+    return g.build("bad_type_string_zlib"), "E_TYPE", None
+
+
+def bad_width_huffman():
+    """width-4 numerics into huffman (byte alphabet only) -> E_WIDTH."""
+    g = GraphBuilder(1)
+    n4 = g.add("interpret_numeric", g.input(0), width=4)
+    g.add("huffman", n4, n_out=2)
+    return g.build("bad_width_huffman"), "E_WIDTH", None
+
+
+def bad_params_float_split():
+    """float_split(fmt=float64) on a pinned width-4 stream -> E_PARAMS."""
+    g = GraphBuilder(1)
+    n4 = g.add("interpret_numeric", g.input(0), width=4)
+    g.add("float_split", n4, n_out=3, fmt=3)
+    return g.build("bad_params_float_split"), "E_PARAMS", None
+
+
+def bad_version_fused():
+    """fused_delta_bitpack (min_version 4) in a v2 plan -> E_VERSION."""
+    g = GraphBuilder(1)
+    n4 = g.add("interpret_numeric", g.input(0), width=4)
+    g.add("fused_delta_bitpack", n4)
+    return g.build("bad_version_fused"), "E_VERSION", 2
+
+
+def main() -> None:
+    manifest = {}
+    for fn in (
+        bad_type_entropy_delta,
+        bad_type_string_zlib,
+        bad_width_huffman,
+        bad_params_float_split,
+        bad_version_fused,
+    ):
+        plan, code, fv = fn()
+        blob = serialize_plan(plan, plan.name, format_version=fv)
+        (ILLTYPED_DIR / f"{plan.name}.ozp").write_bytes(blob)
+        manifest[f"{plan.name}.ozp"] = {"expect": code}
+        print(f"{plan.name}.ozp: {len(blob)}B expect {code}")
+    (ILLTYPED_DIR / "manifest.json").write_text(
+        json.dumps(manifest, indent=1, sort_keys=True) + "\n"
+    )
+
+
+if __name__ == "__main__":
+    main()

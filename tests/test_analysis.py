@@ -1,0 +1,424 @@
+"""Static plan analysis: signature coverage, the type-checker's diagnostic
+catalogue, signature/encode conformance, and fail-closed integration at every
+plan entry point (registry, CLI lint, trainer pruning, resolve debug mode).
+
+The analyzer's soundness contract is load-bearing: an *error* diagnostic may
+only fire on plans that definitely fail at encode time.  That is what lets
+the trainer prune ill-typed genomes statically and still emit byte-identical
+Pareto fronts (pruned genomes would have scored INVALID anyway) — asserted
+end-to-end below.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    PlanTypeError,
+    annotate_resolved_nodes,
+    check_plan,
+    fmt_atoms,
+)
+from repro.core import Compressor, compress
+from repro.core.codec import all_codecs
+from repro.core.graph import GraphBuilder, Plan, PlanNode, KIND_CODEC, pipeline
+from repro.core.message import SType, numeric as _numeric, serial, strings, struct
+from repro.core.selector import all_selectors
+from repro.core.serialize import deserialize_plan, serialize_plan
+
+S, T, N, G = (int(SType.SERIAL), int(SType.STRUCT),
+              int(SType.NUMERIC), int(SType.STRING))
+_DT = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+REPO = Path(__file__).resolve().parents[1]
+ILLTYPED = Path(__file__).resolve().parent / "illtyped"
+GOLDEN = Path(__file__).resolve().parent / "golden"
+
+
+def numeric(vals, w):
+    return _numeric(np.asarray(vals, dtype=_DT[w]))
+
+
+# ------------------------------------------------------------- coverage
+def test_every_codec_declares_a_signature():
+    missing = [n for n, s in all_codecs().items() if s.sig is None]
+    assert not missing, (
+        f"codecs without a stream-type signature: {missing} — the ROADMAP"
+        " policy requires every codec to ship one"
+    )
+
+
+def test_every_selector_declares_a_signature():
+    missing = [n for n, s in all_selectors().items() if s.sig is None]
+    assert not missing, f"selectors without a signature: {missing}"
+
+
+def test_signature_ports_cover_declared_arity():
+    for name, spec in all_codecs().items():
+        assert spec.sig.inputs or spec.n_inputs == 0, name
+        if spec.n_inputs > 1:
+            assert len(spec.sig.inputs) in (1, spec.n_inputs), name
+
+
+# ------------------------------------------------- diagnostic catalogue
+def _codes(report):
+    return {d.code for d in report.diagnostics}
+
+
+def test_e_type_fires_on_stype_mismatch():
+    g = GraphBuilder(1)
+    lit, lens = g.add("huffman", g.input(0), n_out=2)
+    g.add("delta", lit)  # delta wants numeric, huffman emits serial
+    report = check_plan(g.build())
+    assert not report.ok
+    assert any(d.code == "E_TYPE" and d.node == 1 for d in report.errors)
+
+
+def test_e_width_fires_on_width_mismatch():
+    g = GraphBuilder(1)
+    n4 = g.add("interpret_numeric", g.input(0), width=4)
+    g.add("huffman", n4, n_out=2)  # huffman: byte alphabet only
+    report = check_plan(g.build())
+    assert any(d.code == "E_WIDTH" for d in report.errors)
+
+
+def test_e_params_fires_on_transfer_conflict():
+    g = GraphBuilder(1)
+    n4 = g.add("interpret_numeric", g.input(0), width=4)
+    g.add("float_split", n4, n_out=3, fmt=3)  # fmt=float64 wants width 8
+    report = check_plan(g.build())
+    assert any(d.code == "E_PARAMS" for d in report.errors)
+
+
+def test_e_version_fires_on_min_version_conflict():
+    report = check_plan(
+        pipeline("delta", "fused_delta_bitpack"), format_version=2,
+        input_atoms=[(N, 4)],
+    )
+    assert any(d.code == "E_VERSION" for d in report.errors)
+    # ... and is absent when the plan format is new enough
+    assert check_plan(
+        pipeline("delta", "fused_delta_bitpack"), format_version=4,
+        input_atoms=[(N, 4)],
+    ).ok
+
+
+def test_e_struct_fires_on_invalid_topology():
+    plan = Plan(1, (PlanNode(KIND_CODEC, "delta", (7,), 1),))  # edge 7 undefined
+    report = check_plan(plan)
+    assert any(d.code == "E_STRUCT" for d in report.errors)
+
+
+def test_e_unknown_fires_on_unknown_codec():
+    plan = Plan(1, (PlanNode(KIND_CODEC, "no_such_codec", (0,), 1),))
+    report = check_plan(plan)
+    assert any(d.code == "E_UNKNOWN" for d in report.errors)
+
+
+def test_w_selector_is_warning_not_error():
+    g = GraphBuilder(1)
+    g.select("numeric_auto", g.input(0))
+    report = check_plan(g.build(), input_atoms=[(G, 1)])  # strings in
+    assert report.ok  # selectors degrade to store: never a hard error
+    assert any(d.code == "W_SELECTOR" for d in report.warnings)
+
+
+def test_w_packed_fires_on_recoding_entropy_output():
+    g = GraphBuilder(1)
+    packed = g.add("bitpack", g.input(0))
+    g.add("huffman", packed, n_out=2)
+    report = check_plan(g.build(), input_atoms=[(N, 4)])
+    assert report.ok
+    assert any(d.code == "W_PACKED" for d in report.warnings)
+
+
+def test_w_dead_fires_on_identity_store():
+    report = check_plan(pipeline("store"))
+    assert report.ok
+    assert any(d.code == "W_DEAD" for d in report.warnings)
+
+
+def test_i_expand_reports_terminal_bound():
+    report = check_plan(pipeline("delta", "range_pack"), input_atoms=[(N, 4)])
+    infos = [d for d in report.infos if d.code == "I_EXPAND"]
+    assert infos, "every terminal edge gets a worst-case expansion bound"
+
+
+def test_input_atoms_narrow_the_walk():
+    # delta on strings is definitely ill-typed once the input is pinned ...
+    assert not check_plan(pipeline("delta"), input_atoms=[(G, 1)]).ok
+    # ... but fine at lattice top (some concrete typing exists)
+    assert check_plan(pipeline("delta")).ok
+
+
+def test_fmt_atoms_renders_stably():
+    assert fmt_atoms([(N, w) for w in (1, 2, 4, 8)]) == "numeric(*)"
+    assert fmt_atoms([(S, 1)]) == "serial"
+    assert fmt_atoms([]) == "none"
+
+
+# ------------------------------------------- signature/encode conformance
+def _sample(atom, codec):
+    """A stream of type `atom` honoring `codec`'s value-level preconditions."""
+    st, w = atom
+    if st == S:
+        if codec == "csv_split":
+            return serial(b"1,2\n3,4\n5,6\n" * 4)
+        if codec == "edge_list":
+            return serial(b"0 1\n0 2\n1 2\n2 3\n")
+        if codec == "edge_list_bin":
+            import struct as _s
+            return serial(
+                b"".join(_s.pack("<II", a, b) for a, b in [(0, 1), (0, 2), (1, 2)])
+            )
+        if codec == "constant":
+            return serial(b"\x07" * 32)
+        return serial(bytes(range(16)) * 4)
+    if st == G:
+        return strings([b"alpha", b"beta", b"gamma", b"alpha"] * 4)
+    if st == T:
+        if codec == "constant":
+            return struct(b"abc" * 16, 3)
+        return struct(bytes(range(48)), 3)
+    if codec == "constant":
+        return numeric([5] * 16, w)
+    return numeric(list(range(16)), w)
+
+
+def _params_for(codec, strm, atom):
+    if codec == "split_n":
+        return {"sizes": [strm.n_elts // 2, strm.n_elts - strm.n_elts // 2]}
+    if codec == "field_split":
+        return {"widths": [1, 2]} if atom[0] == T else {"widths": [1]}
+    if codec == "interpret_numeric":
+        return {"width": 2}
+    if codec == "float_split":
+        return {"fmt": {2: 0, 4: 2, 8: 3}.get(atom[1], 2)}
+    if codec == "edge_list_bin":
+        return {"width": 4}
+    return {}
+
+
+CONCRETE_ATOMS = [(S, 1), (G, 1), (T, 3), (N, 1), (N, 2), (N, 4), (N, 8)]
+
+
+@pytest.mark.parametrize(
+    "name", sorted(n for n, s in all_codecs().items() if s.n_inputs == 1)
+)
+def test_signature_matches_encode_reality(name):
+    """For every single-input codec and every concrete stream shape:
+    signature-accepted => encode succeeds; signature-rejected => encode
+    raises AND the checker statically rejects the wiring."""
+    spec = all_codecs()[name]
+    port = spec.sig.inputs[0]
+    for atom in CONCRETE_ATOMS:
+        strm = _sample(atom, name)
+        params = _params_for(name, strm, atom)
+        raised = None
+        try:
+            spec.run_encode([strm], params)
+        except Exception as err:  # noqa: BLE001 - conformance probe
+            raised = err
+        if port.accepts(atom):
+            assert raised is None, (
+                f"{name} declares it accepts {atom} but encode raised: {raised}"
+            )
+        else:
+            assert raised is not None, (
+                f"{name} declares it rejects {atom} but encode succeeded —"
+                " the signature is too narrow (unsound for trainer pruning)"
+            )
+            # and the checker flags the same wiring statically
+            g = GraphBuilder(1)
+            n_out = spec.n_outputs if spec.n_outputs >= 0 else 2
+            g.add(name, g.input(0), n_out=n_out, **params)
+            report = check_plan(g.build(), input_atoms=[atom])
+            assert not report.ok, f"{name} on {atom}: encode fails but checker passes"
+
+
+# ------------------------------------------------- corpus: well-typed side
+def test_all_golden_plans_typecheck_clean():
+    assert GOLDEN.is_dir()
+    checked = 0
+    for path in sorted(GOLDEN.glob("*.ozp")):
+        plan, meta = deserialize_plan(path.read_bytes())
+        report = check_plan(plan, format_version=meta.get("format_version"))
+        assert report.ok, f"{path.name}: {[str(d) for d in report.errors]}"
+        checked += 1
+    assert checked >= 40
+
+
+def test_all_named_profiles_typecheck_clean():
+    from repro.codecs.profiles import named_profiles, resolve_profile_spec
+
+    specs = sorted(named_profiles()) + ["struct:2,4", "csv:3", "graph:bin:4"]
+    for spec in specs:
+        report = check_plan(resolve_profile_spec(spec))
+        assert report.ok, f"profile {spec}: {[str(d) for d in report.errors]}"
+
+
+# ----------------------------------------------- corpus: ill-typed side
+def _illtyped_cases():
+    manifest = json.loads((ILLTYPED / "manifest.json").read_text())
+    return sorted(manifest.items())
+
+
+@pytest.mark.parametrize("fname,want", _illtyped_cases())
+def test_illtyped_corpus_rejected_by_checker(fname, want):
+    plan, meta = deserialize_plan((ILLTYPED / fname).read_bytes())
+    report = check_plan(plan, format_version=meta.get("format_version"))
+    assert not report.ok
+    assert want["expect"] in _codes(report), (
+        f"{fname}: expected {want['expect']}, got {sorted(_codes(report))}"
+    )
+
+
+@pytest.mark.parametrize("fname,want", _illtyped_cases())
+def test_illtyped_corpus_rejected_at_registry(fname, want):
+    from repro.service.registry import PlanRegistry
+
+    reg = PlanRegistry()
+    with pytest.raises(PlanTypeError) as exc:
+        reg.register_file(ILLTYPED / fname)
+    err = exc.value
+    # structured error surface for the service frame (additive header key)
+    assert err.extra["error_kind"] == "ill_typed_plan"
+    assert any(d["code"] == want["expect"] for d in err.extra["diagnostics"])
+    assert len(reg) == 0, "fail closed: nothing registered"
+
+
+@pytest.mark.parametrize("fname,want", _illtyped_cases())
+def test_illtyped_corpus_rejected_by_cli_lint(fname, want):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.cli", "lint", "--json", str(ILLTYPED / fname)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    out = json.loads(proc.stdout)
+    assert out["errors"] >= 1
+    codes = {d["code"] for t in out["targets"] for d in t["diagnostics"]}
+    assert want["expect"] in codes
+
+
+def test_illtyped_corpus_pruned_by_trainer():
+    from repro.training.trainer import TrainerService
+
+    svc = TrainerService(workers=1)
+    try:
+        for fname, _want in _illtyped_cases():
+            plan, _meta = deserialize_plan((ILLTYPED / fname).read_bytes())
+            # version conflicts are deploy-time, not encode-time: the trainer
+            # gate is the typing itself
+            if check_plan(plan).ok:
+                continue
+            assert svc._statically_rejected(plan, (None, None))
+    finally:
+        svc.close()
+
+
+def test_cli_lint_clean_on_golden_and_profiles():
+    targets = [str(p) for p in sorted(GOLDEN.glob("*.ozp"))] + ["generic", "text"]
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.cli", "lint"] + targets,
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# -------------------------------------------------- registry stays usable
+def test_registry_accepts_well_typed_plans():
+    from repro.service.registry import PlanRegistry
+
+    reg = PlanRegistry()
+    entry = reg.register_profile("numeric")
+    assert entry.plan_id == "numeric"
+    assert len(reg) == 1
+
+
+# -------------------------------------------- wire-frame type annotation
+def test_annotate_resolved_nodes_renders_types():
+    from repro.core import wire
+
+    frame = compress(
+        pipeline("delta", "range_pack"), numeric(list(range(64)), 4)
+    )
+    version, n_inputs, nodes, _stored = wire.read_frame(frame)
+    node_types, report = annotate_resolved_nodes(
+        n_inputs, nodes, format_version=version
+    )
+    assert len(node_types) == len(nodes)
+    assert report.ok
+    ins, outs = node_types[0]  # delta: graph input starts at lattice top
+    assert ins == "any" and "numeric" in outs
+    _, pk_out = node_types[1]  # range_pack emits packed serial
+    assert pk_out == "serial"
+
+
+# ------------------------------------------------ resolve debug assertion
+def test_resolve_check_mode_rejects_ill_typed_plan():
+    from repro.core import resolve_cache_clear, set_resolve_check
+
+    g = GraphBuilder(1)
+    lit, lens = g.add("huffman", g.input(0), n_out=2)
+    g.add("delta", lit)
+    bad = g.build("bad")
+    data = serial(b"abcd" * 64)
+    set_resolve_check(True)
+    try:
+        resolve_cache_clear()
+        with pytest.raises(PlanTypeError):
+            compress(bad, data)
+        # well-typed plans pass untouched under the same mode
+        out = compress(pipeline("delta", "range_pack"), numeric(range(64), 4))
+        assert out
+    finally:
+        set_resolve_check(False)
+        resolve_cache_clear()
+
+
+# --------------------------------- trainer: static pruning is behaviorless
+def test_static_pruning_is_byte_identical_and_counts():
+    from repro.training import CsvFrontend, train
+
+    rows = b"".join(
+        b"%d,%d,%d\n" % (i, i * 7 % 97, 1000 - i) for i in range(200)
+    )
+    samples = [[serial(rows)]]
+
+    kw = dict(pop_size=8, generations=2, n_points=4, seed=3, workers=2)
+    on = train(samples, CsvFrontend(n_cols=3), static_prune=True, **kw)
+    off = train(samples, CsvFrontend(n_cols=3), static_prune=False, **kw)
+
+    # identical search trajectory: pruning replaces trial compressions only
+    assert on.stats["evaluations"] == off.stats["evaluations"]
+    assert on.stats["invalid_evaluations"] == off.stats["invalid_evaluations"]
+    assert on.stats["pruned_static"] > 0
+    assert off.stats["pruned_static"] == 0
+
+    blobs_on = sorted(serialize_plan(p, p.name) for p, _sz, _t in on.pareto_plans())
+    blobs_off = sorted(serialize_plan(p, p.name) for p, _sz, _t in off.pareto_plans())
+    assert blobs_on == blobs_off, (
+        "static pruning changed the Pareto front — the analyzer rejected a"
+        " genome that would have encoded (soundness violation)"
+    )
+
+
+def test_trained_output_registers_cleanly():
+    """The trainer never emits a plan the registry would bounce."""
+    from repro.service.registry import PlanRegistry
+    from repro.training import NumericFrontend, train
+
+    data = np.cumsum(np.random.default_rng(5).integers(0, 9, 400)).astype(np.uint32)
+    comp = train(
+        [[_numeric(data)]], NumericFrontend(),
+        pop_size=6, generations=1, n_points=4, seed=1, workers=1,
+    )
+    reg = PlanRegistry()
+    blob = Compressor(comp.best_ratio_plan()).serialize()
+    entry = reg.register_compressor(Compressor.deserialize(blob), "trained")
+    assert entry.plan_id == "trained"

@@ -1,0 +1,119 @@
+"""Repo policy linter: the rules fire on seeded violations, the sanctioned
+patterns pass, and — the CI gate — the shipped ``src/`` tree is clean."""
+from pathlib import Path
+
+from repro.analysis import lint_source, lint_tree
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _rules(violations):
+    return [v.rule for v in violations]
+
+
+# ------------------------------------------------------------ rule firing
+def test_cpu_count_flagged():
+    src = "import os\nworkers = os.cpu_count()\n"
+    assert _rules(lint_source(src)) == ["cpu-count"]
+
+
+def test_sched_getaffinity_passes():
+    src = "import os\nworkers = len(os.sched_getaffinity(0))\n"
+    assert lint_source(src) == []
+
+
+def test_fault_point_in_loop_flagged():
+    src = (
+        "def f(items):\n"
+        "    for x in items:\n"
+        "        fault_point('encode.step')\n"
+    )
+    assert _rules(lint_source(src)) == ["fault-point-in-loop"]
+
+
+def test_fault_point_on_boundary_passes():
+    src = (
+        "def f(items):\n"
+        "    fault_point('encode.start')\n"
+        "    for x in items:\n"
+        "        work(x)\n"
+    )
+    assert lint_source(src) == []
+
+
+def test_crash_point_in_loop_exempt():
+    # crash_point marks irreversible per-artifact I/O steps; exempt by design
+    src = (
+        "def publish(shards):\n"
+        "    for s in shards:\n"
+        "        crash_point('shard.replace.before')\n"
+    )
+    assert lint_source(src) == []
+
+
+def test_loop_depth_resets_inside_nested_function():
+    src = (
+        "for x in range(3):\n"
+        "    def cb():\n"
+        "        fault_point('cb')\n"
+    )
+    assert lint_source(src) == []
+
+
+def test_bare_open_write_flagged():
+    src = "def save(p, b):\n    with open(p, 'wb') as f:\n        f.write(b)\n"
+    assert _rules(lint_source(src)) == ["atomic-sink"]
+
+
+def test_write_bytes_flagged():
+    src = "def save(p, b):\n    p.write_bytes(b)\n"
+    assert _rules(lint_source(src)) == ["atomic-sink"]
+
+
+def test_open_read_passes():
+    src = "def load(p):\n    return open(p, 'rb').read()\n"
+    assert lint_source(src) == []
+
+
+def test_stage_then_replace_sanctioned():
+    src = (
+        "import os\n"
+        "def save(p, b):\n"
+        "    with open(str(p) + '.tmp', 'wb') as f:\n"
+        "        f.write(b)\n"
+        "    os.replace(str(p) + '.tmp', p)\n"
+    )
+    assert lint_source(src) == []
+
+
+def test_atomic_sink_module_sanctioned():
+    src = (
+        "def _atomic_sink(path):\n"
+        "    f = open(str(path) + '.part', 'wb')\n"
+        "    return f\n"
+    )
+    assert lint_source(src) == []
+
+
+def test_syntax_error_reported_not_raised():
+    vs = lint_source("def broken(:\n")
+    assert _rules(vs) == ["syntax"]
+
+
+# ---------------------------------------------------------------- CI gate
+def test_src_tree_is_policy_clean():
+    violations = lint_tree(REPO / "src")
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_policy_cli_entrypoint():
+    import subprocess
+    import sys
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.policy", str(REPO / "src")],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 violation(s)" in proc.stdout

@@ -83,6 +83,40 @@ def test_unknown_codec_id_rejected():
     frame = wire.write_frame(3, 1, [ResolvedNode(200, (0,), 1, b"")], [])
     with pytest.raises(CONTROLLED):
         decompress(frame)
+    # fail-closed means a *diagnosable* FrameError naming the offending id —
+    # a bare KeyError out of the registry is a decoder bug
+    with pytest.raises(FrameError, match="unknown codec id 200"):
+        decompress(frame)
+
+
+def test_future_codec_in_old_frame_min_version_gated():
+    """A registered codec referenced below its min_version is a FrameError,
+    not a silent decode — same gate as the unknown-id path."""
+    from repro.core.engine import ResolvedNode
+    from repro.core import wire
+
+    # codec id 26 = fused_delta_bitpack, min_version 4, inside a v3 frame
+    frame = wire.write_frame(3, 1, [ResolvedNode(26, (0,), 1, b"")], [])
+    with pytest.raises(FrameError, match="min_version"):
+        decompress(frame)
+
+
+@given(st.integers(0, 1 << 16))
+@settings(max_examples=80, deadline=None)
+def test_arbitrary_codec_ids_fail_closed(codec_id):
+    from repro.core.codec import _BY_ID, _ensure_standard_library
+    from repro.core.engine import ResolvedNode
+    from repro.core import wire
+
+    _ensure_standard_library()
+    frame = wire.write_frame(3, 1, [ResolvedNode(codec_id, (0,), 1, b"")], [])
+    try:
+        decompress(frame)
+    except FrameError as err:
+        if codec_id not in _BY_ID:
+            assert str(codec_id) in str(err)
+    except CONTROLLED:
+        pass
 
 
 def test_absurd_counts_rejected_fast():
